@@ -1,0 +1,143 @@
+"""Shared benchmark harness: a small paper-family model (LLaMa-arch), a
+fixed prompt set, timing helpers, and quality proxies.
+
+Quality proxies (CPU, untrained weights — see EXPERIMENTS.md §Method):
+  * KL(full ‖ compressed) of next-token distributions during decode —
+    measures representational distortion introduced by the cache policy;
+  * greedy-token agreement with the full-cache engine;
+  * analytic compression ratio (exact; the survey's ratio columns).
+Relative step-time between policies on the same hardware reproduces the
+survey's throughput *directions* (decode is cache-bound).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.cache import CacheSpec, cache_logical_bytes_per_layer
+from repro.nn import model as M
+
+BENCH_ARCH = "paper-llama-7b"
+PROMPT_LEN = 256
+N_DECODE = 16
+TRAIN_STEPS = 40           # brief training so attention has structure
+
+_CACHE: dict = {}
+
+
+def bench_model(n_layers: int = 4, d_model: int = 256,
+                train_steps: int = TRAIN_STEPS):
+    """The benchmark model (LLaMa-family, reduced) — briefly trained on the
+    synthetic Markov stream so heavy-hitter structure exists and eviction
+    policies differ measurably (EXPERIMENTS.md §Method)."""
+    key = (n_layers, d_model, train_steps)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = reduced(get_config(BENCH_ARCH), num_layers=n_layers,
+                  d_model=d_model, num_heads=4, num_kv_heads=4,
+                  d_ff=512, vocab_size=1024)
+    params = M.init_params(jax.random.key(0), cfg)
+    if train_steps:
+        from repro.data.synthetic import lm_batches
+        from repro.optim import cosine_schedule
+        from repro.train.loop import make_train_step
+        init_state, step = make_train_step(
+            cfg, cosine_schedule(3e-3, 5, train_steps))
+        state = init_state(params)
+        jstep = jax.jit(step, donate_argnums=0)
+        data = lm_batches(cfg, 8, 128, seed=0)
+        for _ in range(train_steps):
+            state, _ = jstep(state, {k: jnp.asarray(v)
+                                     for k, v in next(data).items()})
+        params = state.params
+    _CACHE[key] = (cfg, params)
+    return cfg, params
+
+
+def prompts(cfg, n: int = 2, L: int = PROMPT_LEN, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, size=(n, L)),
+                       jnp.int32)
+
+
+@dataclass
+class PolicyReport:
+    name: str
+    family: str
+    ratio: float              # full cache bytes / policy logical bytes
+    us_per_decode: float
+    kl_vs_full: float
+    agreement: float
+    throughput_x: float = 0.0  # filled relative to "full"
+
+
+def run_policy(cfg, params, spec: CacheSpec, toks, n_decode: int = N_DECODE,
+               layer_budgets=None, forced_tokens=None):
+    """Prefill + n_decode greedy steps.
+
+    If `forced_tokens` (list of [B] token arrays from the full-cache run)
+    is given, decode is TEACHER-FORCED on them so per-step logits are
+    comparable across policies (free-running trajectories diverge
+    chaotically and make agreement meaningless).
+    Returns (logits list, greedy-choice list, us_per_decode)."""
+    B, L = toks.shape
+    prefill = jax.jit(partial(M.prefill, cfg=cfg, spec=spec,
+                              layer_budgets=layer_budgets))
+    decode = jax.jit(partial(M.decode_step, cfg=cfg, spec=spec))
+    lg, cache = prefill(params, batch={"tokens": toks})
+    logits_seq = [lg]
+    tok_seq = [jnp.argmax(lg, -1)]
+    def next_tok(i, lg):
+        if forced_tokens is not None:
+            return forced_tokens[i][:, None].astype(jnp.int32)
+        return jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    tok = next_tok(0, lg)
+    # warmup-compile one step, then time
+    lg, cache = decode(params, cache=cache, token=tok)
+    logits_seq.append(lg)
+    tok_seq.append(jnp.argmax(lg, -1))
+    tok = next_tok(1, lg)
+    t0 = time.perf_counter()
+    for i in range(n_decode - 1):
+        lg, cache = decode(params, cache=cache, token=tok)
+        logits_seq.append(lg)
+        tok_seq.append(jnp.argmax(lg, -1))
+        tok = next_tok(i + 2, lg)
+    jax.block_until_ready(lg)
+    dt = (time.perf_counter() - t0) / (n_decode - 1)
+    return logits_seq, tok_seq, dt * 1e6
+
+
+def kl_and_agreement(full_logits, full_tokens, logits, tokens):
+    kls, agr = [], []
+    for lf, lc, tf, tc in zip(full_logits, logits, full_tokens, tokens):
+        pf = jax.nn.log_softmax(lf, -1)
+        pc = jax.nn.log_softmax(lc, -1)
+        kls.append(float(jnp.mean(jnp.sum(jnp.exp(pf) * (pf - pc), -1))))
+        agr.append(float(jnp.mean(tf == tc)))
+    return float(np.mean(kls)), float(np.mean(agr))
+
+
+def ratio_for(cfg, spec: CacheSpec, total_len: int) -> float:
+    full = 2 * total_len * cfg.num_kv_heads * cfg.head_dim * 2.0
+    pol = cache_logical_bytes_per_layer(spec, total_len, cfg.num_kv_heads,
+                                        cfg.head_dim)
+    return full / pol
+
+
+def fmt_csv(rows: list[PolicyReport]) -> str:
+    base = next((r for r in rows if r.name == "full"), None)
+    out = ["name,family,ratio,us_per_decode,throughput_x,kl_vs_full,agreement"]
+    for r in rows:
+        if base:
+            r.throughput_x = base.us_per_decode / r.us_per_decode
+        out.append(f"{r.name},{r.family},{r.ratio:.2f},{r.us_per_decode:.0f},"
+                   f"{r.throughput_x:.2f},{r.kl_vs_full:.4f},"
+                   f"{r.agreement:.3f}")
+    return "\n".join(out)

@@ -1,0 +1,29 @@
+"""Survey Fig. 1 — per-method inference-rate improvement on the LLaMa
+family (KVSharer/NACL/RazorAttention/CQ/KVQuant bars). Our analogues:
+streaming / nacl / h2o+compensation-budget / kivi2 / kivi4. Rate
+improvement % = (full_step_time / policy_step_time - 1) * 100 at a long
+prompt (decode is cache-bound, so step time tracks cache bytes read)."""
+from __future__ import annotations
+
+from repro.core.policy import presets
+from benchmarks import common as C
+
+
+def run() -> str:
+    cfg, params = C.bench_model()
+    toks = C.prompts(cfg, L=512)
+    C_PROMPT = 512
+    ps = presets(budget=128, window=16, sinks=4)
+    rows = ["method,analogue_of,rate_improvement_pct"]
+    analogues = {"streaming": "KVSharer[10]-row", "nacl": "NACL[14]",
+                 "h2o": "RazorAttention[13]-row", "kivi2": "CQ[16]-row",
+                 "kivi4": "KVQuant[15]-row"}
+    _, _, us_full = C.run_policy(cfg, params, ps["full"].spec, toks)
+    for name, row in analogues.items():
+        _, _, us = C.run_policy(cfg, params, ps[name].spec, toks)
+        rows.append(f"{name},{row},{(us_full / us - 1) * 100:.0f}")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,37 @@
+"""Survey Fig. 2 — end-to-end engine throughput × (CacheBlend/
+DistAttention/KIVI bars): the full serving engine (wave batching,
+prefill + decode) under composed policies."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policy import presets
+from repro.serving import Engine
+from benchmarks import common as C
+
+
+def run() -> str:
+    cfg, params = C.bench_model()
+    # cache-bound regime: long prompt, tight budget (CPU caveat: the jnp
+    # path dequantizes the whole store per step — the decode_qattn Pallas
+    # kernel fuses this on the TPU target; see EXPERIMENTS.md §Method)
+    L, NEW = 512, 12
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(4, L)).astype(np.int32)
+    ps = presets(budget=64, window=16, sinks=4)
+    rows = ["policy,decode_tok_per_s,throughput_x,compression_ratio"]
+    base = None
+    for name in ("full", "h2o", "kivi2", "h2o+kivi2"):
+        eng = Engine(cfg, params, ps[name], prompt_len=L, max_new=NEW,
+                     slots=2)
+        res = eng.generate(prompts)
+        if base is None:
+            base = res.decode_tokens_per_s
+        rows.append(f"{name},{res.decode_tokens_per_s:.1f},"
+                    f"{res.decode_tokens_per_s / base:.2f},"
+                    f"{res.compression_ratio:.1f}")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale
+timings; the real perf story is the roofline + §Perf HLO analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kvquant import kernel as kq
+from repro.kernels.kvquant import ref as kq_ref
+from repro.kernels.decode_qattn import kernel as dq
+from repro.kernels.flash_prefill import kernel as fp
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)                           # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> str:
+    rows = ["name,us_per_call,derived"]
+    B, S, H, D, G = 1, 512, 4, 64, 64
+    k = jax.random.normal(jax.random.key(0), (B, S, H, D), jnp.float32)
+    us = _time(kq.kquant_pallas, k, bits=4, group=G, interpret=True)
+    gbps = k.size * 4 / us / 1e3
+    rows.append(f"kvquant_k4,{us:.0f},{gbps:.2f}GB/s-interp")
+
+    kq_, ks_, kz_ = kq_ref.kquant_ref(k, 4, G)
+    vq_, vs_, vz_ = kq_ref.vquant_ref(k, 4)
+    q = jax.random.normal(jax.random.key(1), (B, H * 2, D), jnp.float32)
+    bias = jnp.zeros((B, S))
+    us = _time(dq.decode_qattn_pallas, q, kq_, ks_, kz_, vq_, vs_, vz_, bias,
+               bits=4, group=G, block_s=128, interpret=True)
+    rows.append(f"decode_qattn4,{us:.0f},S={S}")
+
+    T = 256
+    qf = jax.random.normal(jax.random.key(2), (B, T, H, D), jnp.float32)
+    kf = jax.random.normal(jax.random.key(3), (B, T, H, D), jnp.float32)
+    us = _time(fp.flash_prefill_pallas, qf, kf, kf, bq=64, bk=64,
+               interpret=True)
+    rows.append(f"flash_prefill,{us:.0f},T={T}")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,163 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run artifacts in experiments/dryrun/.
+
+  compute    = dot_FLOPs_per_device / peak    (197 TF bf16/chip)
+  memory     = analytic HBM traffic / 819 GB/s (see below)
+  collective = Σ_kind factor(kind) · weighted bytes / (2×50 GB/s)
+
+compute: XLA's cost_analysis counts while-loop bodies ONCE (verified), so
+we use our own trip-count-weighted dot counter over the partitioned HLO
+(launch/dryrun.analyze_hlo). Element-wise FLOPs are ignored (dots
+dominate on MXU).
+
+memory: XLA "bytes accessed" counts every HLO op's operands/results —
+a no-fusion upper bound that is meaningless for TPU. We use a
+first-order analytic model instead (documented per workload kind below);
+the XLA number is kept as `bytes_xla` for reference.
+
+  decode : (params_touched + KV cache + SSM state) / n_dev
+           params_touched = min(total, active × batch) for MoE
+  prefill: (params + 2·cache_write + activations·k_rw) / n_dev, k_rw=6
+  train  : (params·(2r+2r) + grads f32 + adam moments r/w (16B/param)
+            + activations·(1+remat)·k_rw) / n_dev
+
+collective: result bytes × loop trips × (n-1)/n, factor 2× for
+all-reduce (RS+AG decomposition), over 2×50 GB/s (bidirectional ring).
+
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (prefill/
+decode); useful_ratio = MODEL_FLOPS / (dot_FLOPs × n_dev).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ICI_EFF = 2 * ICI_BW
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_FACTORS = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-to-all": 1.0,
+            "all-reduce": 2.0, "collective-permute": 1.0}
+
+
+def _tokens(shape: str) -> int:
+    s = INPUT_SHAPES[shape]
+    return (s.global_batch * s.seq_len if s.kind != "decode"
+            else s.global_batch)
+
+
+def model_flops(rec: dict) -> float:
+    mult = 6 if rec["kind"] == "train" else 2
+    return mult * rec["active_param_count"] * _tokens(rec["shape"])
+
+
+def analytic_memory_bytes(rec: dict) -> float:
+    """First-order per-device HBM traffic for one step (see module doc)."""
+    cfg = get_config(rec["arch"])
+    shp = INPUT_SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    N = rec["param_count"]
+    Na = rec["active_param_count"]
+    B, S = shp.global_batch, shp.seq_len
+    L = cfg.num_layers
+
+    # cache bytes for decode shapes (budget-capped for long_500k dense);
+    # quantized perf variants record bits=N in the note
+    from repro.launch.specs import decode_cache_spec
+    if shp.kind == "decode":
+        opts = frozenset()
+        note = rec.get("note", "")
+        if "bits=4" in note:
+            opts = frozenset({"kivi4_cache"})
+        elif "bits=2" in note:
+            opts = frozenset({"kivi2_cache"})
+        spec = decode_cache_spec(cfg, shp, opts)
+        eff_len = min(spec.budget if spec.budget else S, S) + spec.window
+        bytes_per_elt = spec.bits / 8.0 if spec.quantized else 2.0
+        cache = cfg.kv_bytes_per_token(bytes_per_elt) * eff_len * B
+        if spec.quantized:   # scales/zeros metadata
+            cache += cfg.kv_bytes_per_token(4.0) * eff_len * B / spec.group \
+                + cfg.num_layers * B * eff_len * cfg.num_kv_heads * 8.0
+        if cfg.arch_type in ("ssm", "hybrid"):
+            n_ssm = sum(1 for i in range(L) if cfg.layer_kind(i) == "ssm")
+            cache += (B * cfg.ssm_heads * cfg.ssm.head_dim * cfg.ssm.d_state
+                      * 4 * n_ssm)
+        params_touched = min(N, Na * B) * 2.0
+        return (params_touched + cache) / n_dev
+
+    acts = B * S * cfg.d_model * L * 2.0          # bf16 residual stream
+    if shp.kind == "prefill":
+        cache = cfg.kv_bytes_per_token() * S * B
+        return (N * 2.0 + 2 * cache + 6 * acts) / n_dev
+    # train: fwd+bwd param reads (bf16) + grad f32 + adam moments r/w
+    param_traffic = N * (2.0 + 2.0) + N * 4.0 + N * 16.0
+    remat = 2.0 if getattr(cfg, "remat", "block") == "block" else 1.0
+    return (param_traffic + remat * 6 * acts) / n_dev
+
+
+def terms(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    dot_flops = rec.get("dot_flops_per_device", rec["flops_per_device"])
+    compute_s = dot_flops / PEAK_FLOPS_BF16
+    memory_s = analytic_memory_bytes(rec) / HBM_BW
+    coll_bytes = sum(_FACTORS[k] * v["bytes_weighted_n"]
+                     for k, v in rec["collectives"].items())
+    coll_s = coll_bytes / ICI_EFF
+    total_hlo = dot_flops * n_dev
+    mf = model_flops(rec)
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda t: t[1])[0]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dom,
+        "model_flops": mf, "hlo_flops_total": total_hlo,
+        "useful_ratio": mf / total_hlo if total_hlo > 0 else 0.0,
+        "bytes_xla": rec.get("bytes_accessed_per_device", -1),
+        "step_s_lower_bound": max(compute_s, memory_s, coll_s),
+    }
+
+
+def load_all(directory: str = DRYRUN_DIR, mesh: str | None = "16x16"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        out.append(terms(rec))
+    return out
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("arch,shape,mesh,kind,compute_s,memory_s,collective_s,dominant,"
+           "useful_ratio")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['kind']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+            f"{r['collective_s']:.3e},{r['dominant']},"
+            f"{r['useful_ratio']:.3f}")
+    return "\n".join(lines)
+
+
+def run() -> str:
+    rows = load_all()
+    if not rows:
+        return "roofline: no dry-run artifacts found (run launch/dryrun.py)"
+    return table(rows)
+
+
+if __name__ == "__main__":
+    print(run())
+    multi = load_all(mesh="pod2x16x16")
+    if multi:
+        print()
+        print(table(multi))

@@ -1,0 +1,66 @@
+"""Survey Table 1 — selective compression (CacheBlend/RazorAttention/NACL/
+KVShare/EMS rows): compression ratio, relative throughput, quality
+retention for the eviction-policy family."""
+from __future__ import annotations
+
+from repro.core.policy import presets
+from benchmarks import common as C
+
+
+def run(budget_frac: float = 0.25) -> str:
+    cfg, params = C.bench_model()
+    toks = C.prompts(cfg)
+    total = C.PROMPT_LEN + C.N_DECODE
+    budget = max(int(C.PROMPT_LEN * budget_frac) // 16 * 16, 32)
+    ps = presets(budget=budget, window=16, sinks=4)
+
+    rows = []
+    full_logits = full_tokens = None
+    for name in ("full", "streaming", "h2o", "nacl", "keyformer"):
+        p = ps[name]
+        spec = p.spec
+        logits, tokens, us = C.run_policy(cfg, params, spec, toks, forced_tokens=full_tokens)
+        if name == "full":
+            full_logits, full_tokens = logits, tokens
+            kl, agr = 0.0, 1.0
+        else:
+            kl, agr = C.kl_and_agreement(full_logits, full_tokens, logits,
+                                         tokens)
+        rows.append(C.PolicyReport(name, p.family or "baseline",
+                                   C.ratio_for(cfg, spec, total), us, kl,
+                                   agr))
+    out = [C.fmt_csv(rows)]
+    out.append(_cacheblend_rows(cfg, params))
+    return "\n".join(out)
+
+
+def _cacheblend_rows(cfg, params) -> str:
+    """CacheBlend row (survey [12]): multi-chunk KV reuse + selective
+    recompute. TTFT proxy = prefill-FLOP fraction; quality = KL of the
+    first generated token vs full prefill."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.cache import CacheSpec
+    from repro.nn import model as M
+    from repro.serving import cacheblend as CB
+
+    toks = C.prompts(cfg, n=2, L=128)
+    spec = CacheSpec(budget=129)
+    lg_ref, _ = M.prefill(params, cfg, {"tokens": toks}, spec)
+    rows = ["cacheblend_variant,recompute_frac,ttft_flops_frac,kl_first_tok"]
+    for frac in (1.0, 0.3, 0.15, 1.0 / 128):
+        lg, _, _ = CB.blend_prefill(params, cfg, toks,
+                                    bounds=[0, 43, 86], recompute_frac=frac)
+        pf = jax.nn.log_softmax(lg_ref, -1)
+        pc = jax.nn.log_softmax(lg, -1)
+        kl = float(jnp.mean(jnp.sum(jnp.exp(pf) * (pf - pc), -1)))
+        # FLOPs ≈ frac of attention+FFN + 1 layer for selection
+        ttft = frac + 1.0 / cfg.num_layers
+        tag = ("full_recompute" if frac == 1.0 else
+               "pure_reuse" if frac < 0.02 else f"blend_{frac:.2f}")
+        rows.append(f"{tag},{frac:.3f},{min(ttft, 1.0):.2f},{kl:.4f}")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,50 @@
+"""Survey Table 3 — attention compression (H2O/SqueezeAttention/
+PyramidInfer rows): layer-budget allocators at EQUAL global budget —
+quality retention per allocation strategy."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import budgets as B
+from repro.core.policy import presets
+from benchmarks import common as C
+
+
+def run() -> str:
+    cfg, params = C.bench_model()
+    toks = C.prompts(cfg)
+    total = C.PROMPT_LEN + C.N_DECODE
+    budget = 64
+    n_layers = cfg.num_attn_layers()
+    ps = presets(budget=budget, window=16, sinks=4)
+
+    allocs = {
+        "uniform(h2o)": B.uniform(n_layers, budget, multiple=16),
+        "pyramid": B.pyramid(n_layers, budget, multiple=16),
+        "squeeze": B.squeeze(n_layers, budget, multiple=16,
+                             cos_sim=np.linspace(0.6, 0.95, n_layers)),
+        "zigzag": B.zigzag(
+            n_layers, budget, multiple=16,
+            uncertainty=np.linspace(1.0, 0.4, n_layers)),
+    }
+    spec = ps["h2o"].spec
+    full_spec = ps["full"].spec
+    rows = []
+    logits_f, tokens_f, us_f = C.run_policy(cfg, params, full_spec, toks)
+    rows.append(C.PolicyReport("full", "baseline", 1.0, us_f, 0.0, 1.0))
+    for name, lb in allocs.items():
+        lb = np.minimum(lb, spec.budget)
+        logits, tokens, us = C.run_policy(cfg, params, spec, toks,
+                                          layer_budgets=lb,
+                                          forced_tokens=tokens_f)
+        kl, agr = C.kl_and_agreement(logits_f, tokens_f, logits, tokens)
+        eff_ratio = (2 * total * cfg.num_kv_heads * cfg.head_dim * 2.0 *
+                     n_layers) / (
+            sum(2 * (int(b) + spec.window) * cfg.num_kv_heads
+                * cfg.head_dim * 2.0 for b in lb))
+        rows.append(C.PolicyReport(name, "attention", eff_ratio, us, kl, agr))
+    return C.fmt_csv(rows)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,44 @@
+"""Quickstart: the survey's subject in 60 seconds.
+
+Builds a small LLaMa-family model, serves the same prompts under four
+cache policies (full / H2O eviction / KIVI 2-bit / hybrid), and prints
+the survey's comparison axes: compression ratio, decode speed, agreement.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine
+
+import jax
+
+
+def main():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=4)
+    params = M.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(4, 128)).astype(np.int32)
+
+    ps = presets(budget=48, window=16, sinks=4)
+    ref_tokens = None
+    print(f"{'policy':<12} {'ratio':>6} {'tok/s':>8} {'free-run agree':>14}")
+    for name in ("full", "h2o", "kivi2", "h2o+kivi2"):
+        eng = Engine(cfg, params, ps[name], prompt_len=128, max_new=16,
+                     slots=4)
+        res = eng.generate(prompts)
+        if ref_tokens is None:
+            ref_tokens = res.tokens
+        agree = float((res.tokens == ref_tokens).mean())
+        print(f"{name:<12} {res.compression_ratio:>5.1f}x "
+              f"{res.decode_tokens_per_s:>8.1f} {agree:>14.2f}")
+    print("\nnotes: free-running trajectories diverge chaotically on an "
+          "untrained model — see benchmarks/ for teacher-forced quality; "
+          "quantized tok/s is jnp-dequant-bound on CPU (the fused Pallas "
+          "kernel covers the TPU target).")
+
+
+if __name__ == "__main__":
+    main()

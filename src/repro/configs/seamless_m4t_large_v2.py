@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2 — encoder-decoder, multimodal [arXiv:2308.11596].
+
+The speech frontend (mel-spectrogram + conv feature extractor) is the
+stubbed modality frontend (spec carve-out): ``input_specs`` provides
+precomputed frame embeddings [B, T_src, d_model]; we implement the
+transformer encoder + text decoder that consume them.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type="audio",
+    source="arXiv:2308.11596 (SeamlessM4T v2)",
+    num_layers=24,            # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256_206,
+    head_dim=64,
+    is_encoder_decoder=True,
+    num_encoder_layers=24,
+    input_kind="embeds",
+)

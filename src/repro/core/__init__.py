@@ -1,0 +1,6 @@
+"""The paper's primary contribution: composable KV-cache compression."""
+from repro.core.cache import (  # noqa: F401
+    CacheSpec, FULL, LayerKV, SSMState, append_token, compress_prompt,
+    materialize, stacked_kv,
+)
+from repro.core.policy import CompressionPolicy, presets  # noqa: F401

@@ -1,0 +1,78 @@
+"""Selective-compression extras beyond the in-cache policies
+(`repro.core.cache` implements streaming/H2O/NACL/Keyformer victim
+selection natively; this module adds the merge-based variants).
+
+* EMS [11] / CacheBlend-style **evict-then-merge**: evicted tokens are not
+  discarded but merged into compensation slots (attention-mass weighted).
+* RazorAttention [13]: retrieval heads keep the full cache; non-retrieval
+  heads keep sinks+window plus one **compensation token** absorbing what
+  was dropped.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def merge_evicted(
+    k: Array, v: Array, keep_mask: Array, weights: Array,
+) -> tuple[Array, Array]:
+    """Compute one compensation token per head from the evicted set.
+
+    k, v: [B, S, H, D]; keep_mask: [B, S] bool; weights: [B, S]
+    (attention mass). Returns (k_comp, v_comp): [B, H, D] — the
+    weight-averaged evicted KV (RazorAttention's compensation token /
+    EMS merge step)."""
+    w = jnp.where(keep_mask, 0.0, weights.astype(jnp.float32))      # evicted only
+    denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)         # [B, 1]
+    wn = (w / denom)[..., None, None]                               # [B, S, 1, 1]
+    k_comp = (k.astype(jnp.float32) * wn).sum(axis=1)
+    v_comp = (v.astype(jnp.float32) * wn).sum(axis=1)
+    return k_comp.astype(k.dtype), v_comp.astype(v.dtype)
+
+
+def retrieval_head_scores(attn_mass_per_head: Array, positions: Array,
+                          window: int) -> Array:
+    """RazorAttention's retrieval-head detector (proxy): heads that put
+    significant attention mass *outside* the local window are retrieval
+    heads. attn_mass_per_head: [B, H, S]; positions: [B, S] absolute;
+    returns [H] long-range mass fraction."""
+    cur = positions.max(axis=1, keepdims=True)                       # [B, 1]
+    far = (positions < cur - window)[:, None, :]                     # [B,1,S]
+    m = attn_mass_per_head.astype(jnp.float32)
+    frac = (m * far).sum(-1) / jnp.maximum(m.sum(-1), 1e-9)          # [B, H]
+    return frac.mean(0)
+
+
+def razor_head_budgets(retrieval_frac: Array, full_budget: int,
+                       small_budget: int, thresh: float = 0.1) -> Array:
+    """[H] per-head budgets: retrieval heads keep `full_budget`, echo
+    heads keep `small_budget` (+ compensation token handled by caller)."""
+    return jnp.where(retrieval_frac > thresh, full_budget, small_budget)
+
+
+# ---------------------------------------------------------------------------
+# LOOK-M (survey [30]): modality-aware eviction for early-fusion VLMs
+# (chameleon): text tokens are prioritized ("text-first"), image tokens
+# evicted first — implemented as a score transform fed to
+# `cache.compress_prompt` / `accumulate_scores`.
+# ---------------------------------------------------------------------------
+
+
+def lookm_scores(attn_mass: Array, is_image: Array,
+                 text_boost: float = 4.0) -> Array:
+    """attn_mass: [B, S]; is_image: [B, S] bool (VQ-token positions).
+    Returns modality-weighted eviction scores: text tokens' attention
+    mass is boosted so image tokens fall below them at equal mass
+    (LOOK-M's text-prior merge order)."""
+    m = attn_mass.astype(jnp.float32)
+    return jnp.where(is_image, m, m * text_boost)
+
+
+def vq_token_mask(tokens: Array, vq_lo: int, vq_hi: int) -> Array:
+    """Early-fusion VLMs put image VQ codes in a reserved id range."""
+    return (tokens >= vq_lo) & (tokens < vq_hi)

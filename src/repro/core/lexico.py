@@ -1,0 +1,116 @@
+"""Lexico [5] and PQCache [31] — reference implementations (math only).
+
+DESIGN.md §2: both are lookup-structure designs (sparse coding over a
+universal dictionary; product-quantization + MIPS retrieval) whose
+latency-bound gather patterns do not map onto the MXU; we implement the
+*compression math* so their rate/distortion points appear in the
+benchmark tables, and document the non-transfer.
+
+Lexico: each KV vector ≈ sparse combination of a universal dictionary
+(matching pursuit, s atoms per vector).  Storage per vector: s × (idx +
+coeff) vs D floats.
+
+PQCache: split D into m sub-spaces, k-means codebook per sub-space;
+storage per vector: m bytes (+ codebooks, amortized).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Lexico: matching pursuit over a fixed dictionary
+# ---------------------------------------------------------------------------
+
+
+class LexicoCode(NamedTuple):
+    idx: Array      # [..., s] int32 atom indices
+    coef: Array     # [..., s] f32 coefficients
+
+
+def make_dictionary(key: Array, n_atoms: int, d: int) -> Array:
+    """Universal dictionary: unit-norm random atoms [n_atoms, d]."""
+    D = jax.random.normal(key, (n_atoms, d), jnp.float32)
+    return D / jnp.linalg.norm(D, axis=-1, keepdims=True)
+
+
+def lexico_encode(x: Array, dictionary: Array, sparsity: int) -> LexicoCode:
+    """Matching pursuit: greedily pick `sparsity` atoms. x: [..., d]."""
+    resid = x.astype(jnp.float32)
+    idxs, coefs = [], []
+    for _ in range(sparsity):
+        scores = resid @ dictionary.T                    # [..., n_atoms]
+        best = jnp.argmax(jnp.abs(scores), axis=-1)      # [...]
+        coef = jnp.take_along_axis(scores, best[..., None], axis=-1)[..., 0]
+        atom = dictionary[best]                          # [..., d]
+        resid = resid - coef[..., None] * atom
+        idxs.append(best)
+        coefs.append(coef)
+    return LexicoCode(jnp.stack(idxs, -1).astype(jnp.int32),
+                      jnp.stack(coefs, -1))
+
+
+def lexico_decode(code: LexicoCode, dictionary: Array) -> Array:
+    atoms = dictionary[code.idx]                         # [..., s, d]
+    return jnp.sum(atoms * code.coef[..., None], axis=-2)
+
+
+def lexico_bytes_per_vector(sparsity: int, coef_bits: int = 16,
+                            idx_bits: int = 16) -> float:
+    return sparsity * (coef_bits + idx_bits) / 8.0
+
+
+# ---------------------------------------------------------------------------
+# PQCache: product quantization (+ exact MIPS against centroids)
+# ---------------------------------------------------------------------------
+
+
+class PQCodebook(NamedTuple):
+    centroids: Array    # [m, k, d/m]
+
+
+def pq_train(key: Array, x: Array, m: int, k: int, iters: int = 8) -> PQCodebook:
+    """k-means per sub-space. x: [n, d]."""
+    n, d = x.shape
+    sub = x.reshape(n, m, d // m).transpose(1, 0, 2)     # [m, n, d/m]
+    init = jax.random.choice(key, n, (k,), replace=False)
+    cent = sub[:, init]                                  # [m, k, d/m]
+    for _ in range(iters):
+        d2 = jnp.sum((sub[:, :, None] - cent[:, None]) ** 2, -1)  # [m,n,k]
+        assign = jnp.argmin(d2, -1)                      # [m, n]
+        one = jax.nn.one_hot(assign, k, dtype=jnp.float32)        # [m,n,k]
+        counts = one.sum(1)[..., None]                   # [m, k, 1]
+        sums = jnp.einsum("mnk,mnd->mkd", one, sub)
+        cent = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), cent)
+    return PQCodebook(cent)
+
+
+def pq_encode(cb: PQCodebook, x: Array) -> Array:
+    """x: [n, d] -> codes [n, m] uint8."""
+    n, d = x.shape
+    m = cb.centroids.shape[0]
+    sub = x.reshape(n, m, d // m).transpose(1, 0, 2)
+    d2 = jnp.sum((sub[:, :, None] - cb.centroids[:, None]) ** 2, -1)
+    return jnp.argmin(d2, -1).T.astype(jnp.uint8)        # [n, m]
+
+
+def pq_decode(cb: PQCodebook, codes: Array) -> Array:
+    m, k, dsub = cb.centroids.shape
+    parts = cb.centroids[jnp.arange(m)[None, :], codes.astype(jnp.int32)]
+    return parts.reshape(codes.shape[0], m * dsub)
+
+
+def pq_mips_scores(cb: PQCodebook, codes: Array, q: Array) -> Array:
+    """Asymmetric distance computation: q: [d]; inner-product scores vs
+    all encoded vectors via per-subspace lookup tables (PQCache's MIPS
+    primitive). codes: [n, m] -> [n]."""
+    m, k, dsub = cb.centroids.shape
+    qs = q.reshape(m, dsub)
+    lut = jnp.einsum("md,mkd->mk", qs.astype(jnp.float32), cb.centroids)
+    return jnp.sum(lut[jnp.arange(m)[None, :], codes.astype(jnp.int32)],
+                   axis=-1)

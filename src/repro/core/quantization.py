@@ -1,0 +1,214 @@
+"""Quantization-family compression (survey §3).
+
+Asymmetric uniform quantization with the KIVI layout (arXiv:2402.02750 as
+cited by the survey [17]): **keys per-channel** (channel-outlier
+distributions, grouped along the sequence axis) and **values per-token**.
+Values are stored in uint8 containers regardless of logical bit width;
+``logical_bits`` drives the bytes accounting, and the Pallas kernel path
+(`repro.kernels.kvquant`) does real sub-byte packing.
+
+Also here: QAQ-style sensitivity-mixed precision helpers and the GEAR
+low-rank + sparse-outlier residual (survey §5 hybrid family).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Quantized(NamedTuple):
+    q: Array       # uint8 codes in [0, 2^bits - 1]
+    scale: Array   # f32, broadcastable against q
+    zero: Array    # f32 (the minimum), broadcastable against q
+
+    def dequantize(self, dtype=jnp.bfloat16) -> Array:
+        return (self.q.astype(jnp.float32) * self.scale + self.zero).astype(dtype)
+
+
+def pack_codes(q: Array, bits: int) -> Array:
+    """Pack codes in [0, 2^bits) along the last axis into int8 lanes
+    (little-endian in bit order; biased by -128). [..., D] -> [..., D*bits/8]."""
+    f = 8 // bits
+    *lead, D = q.shape
+    qf = q.astype(jnp.int32).reshape(*lead, D // f, f)
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    packed = jnp.sum(qf << shifts, axis=-1)
+    return (packed - 128).astype(jnp.int8)
+
+
+def unpack_codes(p: Array, bits: int, D: int) -> Array:
+    """Inverse of `pack_codes`. [..., D*bits/8] int8 -> [..., D] int32."""
+    f = 8 // bits
+    x = p.astype(jnp.int32) + 128
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    mask = (1 << bits) - 1
+    codes = (x[..., None] >> shifts) & mask
+    return codes.reshape(*p.shape[:-1], D)
+
+
+def _minmax_quant(x: Array, bits: int, axes: tuple[int, ...]) -> Quantized:
+    """Asymmetric min/max quantization reducing over `axes`."""
+    assert 1 <= bits <= 8
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=axes, keepdims=True)
+    hi = jnp.max(xf, axis=axes, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    q = jnp.clip(jnp.round((xf - lo) / scale), 0, levels).astype(jnp.uint8)
+    return Quantized(q, scale, lo)
+
+
+def quantize_k_per_channel(k: Array, bits: int, group: int) -> Quantized:
+    """KIVI key layout. k: [..., S, H, D]; scales per (group, H, D).
+
+    S must be a multiple of `group`; groups tile the sequence axis.
+    Returns q with k's shape; scale/zero with shape [..., S/g, 1, H, D]
+    broadcast over the in-group axis.
+    """
+    *lead, S, H, D = k.shape
+    assert S % group == 0, (S, group)
+    kg = k.reshape(*lead, S // group, group, H, D)
+    qz = _minmax_quant(kg, bits, axes=(-3,))
+    return Quantized(qz.q.reshape(*lead, S, H, D), qz.scale, qz.zero)
+
+
+def dequantize_k_per_channel(qz: Quantized, group: int, dtype=jnp.bfloat16) -> Array:
+    *lead, S, H, D = qz.q.shape
+    qg = qz.q.reshape(*lead, S // group, group, H, D)
+    return Quantized(qg, qz.scale, qz.zero).dequantize(dtype).reshape(*lead, S, H, D)
+
+
+def quantize_v_per_token(v: Array, bits: int) -> Quantized:
+    """KIVI value layout. v: [..., S, H, D]; scales per (S, H)."""
+    return _minmax_quant(v, bits, axes=(-1,))
+
+
+def dequantize_v_per_token(qz: Quantized, dtype=jnp.bfloat16) -> Array:
+    return qz.dequantize(dtype)
+
+
+def quant_error_bound(x: Array, bits: int, axes: tuple[int, ...]) -> Array:
+    """Tight per-group error bound: |x - deq(q(x))| <= scale/2 elementwise."""
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=axes, keepdims=True)
+    hi = jnp.max(xf, axis=axes, keepdims=True)
+    return jnp.maximum(hi - lo, 1e-8) / ((1 << bits) - 1) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# QAQ-style mixed precision (survey [19]): per-(layer, head) bit widths from
+# a sensitivity signal (attention mass), mapped onto {8, 4, 2} bits.
+# ---------------------------------------------------------------------------
+
+def qaq_bit_allocation(
+    sensitivity: Array, budget_bits: float, choices=(2, 4, 8)
+) -> Array:
+    """sensitivity: [...]; returns same-shape int bit widths whose mean is
+    <= budget_bits, giving more bits to more sensitive groups."""
+    order = jnp.argsort(jnp.argsort(sensitivity.ravel()))  # ranks 0..n-1
+    n = sensitivity.size
+    frac = (order + 0.5) / n
+    # thresholds chosen so mean(bits) == budget_bits for uniform ranks
+    lo_b, mid_b, hi_b = choices
+    # fraction assigned hi so that lo*a + mid*b + hi*c = budget, a=c symmetric
+    c = jnp.clip((budget_bits - mid_b) / (hi_b - mid_b), 0.0, 1.0)
+    a = jnp.clip((mid_b - budget_bits) / (mid_b - lo_b), 0.0, 1.0)
+    bits = jnp.where(
+        frac >= 1.0 - c, hi_b, jnp.where(frac < a, lo_b, mid_b)
+    )
+    return bits.reshape(sensitivity.shape).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# GEAR (survey [29]): quantize, then approximate the residual with a low-rank
+# term (subspace/power iteration — no SVD on device) + a sparse outlier term.
+# ---------------------------------------------------------------------------
+
+class GearCompressed(NamedTuple):
+    base: Quantized       # quantized main term
+    u: Array              # [..., M, r]
+    vt: Array             # [..., r, N]
+    outlier_vals: Array   # [..., k] top-|residual| entries
+    outlier_idx: Array    # [..., k] flat indices into (M*N)
+
+
+def gear_compress(
+    x: Array, bits: int, rank: int, n_outliers: int, n_iter: int = 2,
+    key: Optional[Array] = None,
+) -> GearCompressed:
+    """x: [..., M, N]. base-quant (per-token over last axis) + rank-r power
+    iteration on the residual + top-k sparse outliers of what remains."""
+    base = _minmax_quant(x, bits, axes=(-1,))
+    resid = x.astype(jnp.float32) - base.dequantize(jnp.float32)
+    *lead, M, N = resid.shape
+    if key is None:
+        key = jax.random.key(0)
+    v = jax.random.normal(key, (*lead, N, rank), dtype=jnp.float32)
+    for _ in range(n_iter):
+        u = resid @ v                                        # [..., M, r]
+        u, _ = jnp.linalg.qr(u)
+        v = jnp.swapaxes(resid, -1, -2) @ u                  # [..., N, r]
+        v, _ = jnp.linalg.qr(v)
+    u = resid @ v                                            # [..., M, r]
+    vt = jnp.swapaxes(v, -1, -2)                             # [..., r, N]
+    resid2 = resid - u @ vt
+    flat = resid2.reshape(*lead, M * N)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), n_outliers)
+    signs = jnp.take_along_axis(flat, idx, axis=-1)
+    return GearCompressed(base, u, vt, signs, idx)
+
+
+def gear_decompress(c: GearCompressed, shape, dtype=jnp.bfloat16) -> Array:
+    *lead, M, N = shape
+    x = c.base.dequantize(jnp.float32) + c.u @ c.vt
+    flat = x.reshape(*lead, M * N)
+    flat = _scatter_last(flat, c.outlier_idx, c.outlier_vals)
+    return flat.reshape(*shape).astype(dtype)
+
+
+def _scatter_last(x: Array, idx: Array, vals: Array) -> Array:
+    """Add vals at idx along the last axis (residual correction)."""
+    *lead, N = x.shape
+    k = idx.shape[-1]
+    xf = x.reshape(-1, N)
+    add = jax.vmap(lambda row, i, v: row.at[i].add(v))(
+        xf, idx.reshape(-1, k), vals.reshape(-1, k))
+    return add.reshape(*lead, N)
+
+
+# ---------------------------------------------------------------------------
+# SSM-state quantization — the closest analogue of the paper's technique
+# for attention-free archs (mamba2; DESIGN.md §4): the recurrent state
+# [B, H, P, N] is the "cache"; we quantize per (H, P) channel over N.
+# ---------------------------------------------------------------------------
+
+
+def quantize_ssm_state(state: Array, bits: int = 8) -> Quantized:
+    """state: [B, H, P, N] f32 -> codes + per-(B,H,P) scale/zero."""
+    return _minmax_quant(state, bits, axes=(-1,))
+
+
+def dequantize_ssm_state(qz: Quantized, dtype=jnp.float32) -> Array:
+    return qz.dequantize(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bytes accounting (compression-ratio ground truth for the benchmark tables)
+# ---------------------------------------------------------------------------
+
+def kv_logical_bytes(
+    seq: int, heads: int, head_dim: int, *, bits: int, group: int,
+    residual_window: int, base_bytes: float = 2.0,
+) -> float:
+    """Logical bytes per layer per sequence of a quantized KV cache
+    (codes + scales/zeros + full-precision residual window)."""
+    quant_tokens = max(seq - residual_window, 0)
+    code = 2 * quant_tokens * heads * head_dim * bits / 8.0
+    k_meta = (quant_tokens / max(group, 1)) * heads * head_dim * 2 * 4.0
+    v_meta = quant_tokens * heads * 2 * 4.0
+    resid = 2 * min(residual_window, seq) * heads * head_dim * base_bytes
+    return code + k_meta + v_meta + resid

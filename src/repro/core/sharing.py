@@ -1,0 +1,69 @@
+"""KVSharer (survey [10]): layer-wise *dissimilar* KV cache sharing.
+
+KVSharer's counter-intuitive observation: sharing the KV cache between
+layers whose KV states are most **dissimilar** degrades quality least.
+A calibration pass collects per-layer K/V summaries; we build a sharing
+map (layer -> source layer) for the `n_share` layers most amenable to
+sharing, and the serving path simply reuses the source layer's LayerKV
+(memory drops by n_share/L).
+
+Sharing crosses layer boundaries, so it runs on the *unrolled* decode
+path (`repro.serving.shared_runner`), not the scanned one — scan bodies
+cannot index sibling layers' states. This mirrors the original: KVSharer
+patches per-layer modules at load time.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def layer_kv_similarity(kv_summaries: Array) -> np.ndarray:
+    """kv_summaries: [L, F] per-layer flattened KV statistics (e.g. mean K
+    over a calibration batch). Returns [L, L] cosine similarity."""
+    x = np.asarray(kv_summaries, dtype=np.float64)
+    n = x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+    return n @ n.T
+
+
+def build_sharing_map(kv_summaries: Array, n_share: int) -> dict[int, int]:
+    """Greedy KVSharer strategy: pick the `n_share` (target, source) pairs
+    with the *lowest* KV similarity; each shared layer reuses its source's
+    cache. Sources are never themselves shared, targets are re-used once.
+    Returns {target_layer: source_layer}."""
+    sim = layer_kv_similarity(kv_summaries)
+    L = sim.shape[0]
+    pairs = sorted(
+        ((sim[i, j], i, j) for i in range(L) for j in range(L) if i > j),
+        key=lambda t: t[0],
+    )
+    mapping: dict[int, int] = {}
+    used_target, used_source = set(), set()
+    for s, i, j in pairs:
+        if len(mapping) >= n_share:
+            break
+        # deeper layer i reuses shallower j's cache
+        if i in used_target or i in used_source or j in used_target:
+            continue
+        mapping[i] = j
+        used_target.add(i)
+        used_source.add(j)
+    return mapping
+
+
+def calibration_summaries(ks: Array, vs: Array) -> Array:
+    """ks/vs: [L, B, S, H, D] calibration K/V -> [L, F] summaries."""
+    L = ks.shape[0]
+    mk = ks.astype(jnp.float32).mean(axis=(1, 2)).reshape(L, -1)
+    mv = vs.astype(jnp.float32).mean(axis=(1, 2)).reshape(L, -1)
+    return jnp.concatenate([mk, mv], axis=-1)
+
+
+def shared_bytes_fraction(mapping: dict[int, int], n_layers: int) -> float:
+    """Memory kept after sharing (the KVSharer compression claim)."""
+    return 1.0 - len(mapping) / n_layers

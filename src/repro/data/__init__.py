@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    lm_batches, needle_prompt, synthetic_tokens,
+)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compression hot-spots the survey's systems
+optimize with custom CUDA (KVQuant/KIVI fused dequant, flash decode).
+
+TPU adaptation (DESIGN.md #2): kernels are written against VMEM/MXU
+(pl.pallas_call + BlockSpec) and validated on CPU with interpret=True
+against pure-jnp oracles (ref.py in each subpackage).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.decode_qattn.ops import decode_attention_quantized  # noqa: F401

@@ -1,0 +1,138 @@
+"""Flash-decode attention over a *quantized* KV cache.
+
+The survey's quantization systems (KVQuant [15], KIVI [17]) win because
+the decode step is HBM-bandwidth-bound: attention reads the whole cache
+per token. Their CUDA kernels fuse dequantization into the attention
+load. TPU adaptation (DESIGN.md §2): the packed int codes are what moves
+HBM->VMEM (bits/16 of the bf16 traffic); unpack+dequant happens in
+VREGs right after the copy; QK^T and PV run on the MXU per 128-aligned
+cache block; online softmax accumulators live in VMEM scratch across the
+sequential cache-block grid axis.
+
+Grid: (B, Hkv, S // block_s) — the cache-length axis is innermost and
+sequential, so scratch accumulators carry across it.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _unpack(p: Array, bits: int, D: int) -> Array:
+    """int8 [..., D*bits//8] -> int32 codes [..., D]."""
+    f = 8 // bits
+    x = p.astype(jnp.int32) + 128
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    mask = (1 << bits) - 1
+    codes = (x[..., None] >> shifts) & mask
+    return codes.reshape(*p.shape[:-1], D)
+
+
+def _kernel(q_ref, kq_ref, ks_ref, kz_ref, vq_ref, vs_ref, vz_ref, bias_ref,
+            out_ref, m_scr, l_scr, acc_scr, *, bits: int, D: int, group: int,
+            block_s: int):
+    """One (batch, kv-head, cache-block) cell.
+
+    q_ref:   [1, Gq, D]          queries of this kv head's group
+    kq_ref:  [1, BS, Dp]         packed K codes
+    ks_ref/kz_ref: [1, BS//G, D] per-channel scales/zeros for this block
+    vq_ref:  [1, BS, Dp]; vs_ref/vz_ref: [1, BS]
+    bias_ref: [1, BS]            additive validity/window bias
+    out_ref: [1, Gq, D]
+    scratch: m [Gq, 1], l [Gq, 1], acc [Gq, D] — persist across blocks.
+    """
+    s_idx = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [Gq, D]
+    # dequantize K block: per-channel scales repeat over the group axis
+    kc = _unpack(kq_ref[0, 0], bits, D).astype(jnp.float32)  # [BS, D]
+    ks = ks_ref[0, 0]                                        # [BS//G, D]
+    kz = kz_ref[0, 0]
+    ksr = jnp.repeat(ks, group, axis=0)                      # [BS, D]
+    kzr = jnp.repeat(kz, group, axis=0)
+    k = kc * ksr + kzr                                       # [BS, D]
+
+    s = (q @ k.T) / math.sqrt(D) + bias_ref[0][None, :]      # [Gq, BS]
+
+    m_prev = m_scr[...]                                      # [Gq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                   # [Gq, BS]
+
+    vc = _unpack(vq_ref[0, 0], bits, D).astype(jnp.float32)  # [BS, D]
+    v = vc * vs_ref[0, 0][:, None] + vz_ref[0, 0][:, None]
+
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == n_blocks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_s",
+                                             "interpret"))
+def decode_qattn_pallas(q, kq, ks, kz, vq, vs, vz, bias, *, bits: int,
+                        group: int, block_s: int = 512,
+                        interpret: bool = False):
+    """q: [B, Hq, D]; kq/vq: [B, S, Hkv, Dp] int8;
+    ks/kz: [B, S//G, Hkv, D]; vs/vz: [B, S, Hkv]; bias: [B, S].
+    Returns out [B, Hq, D] (q.dtype)."""
+    B, Hq, D = q.shape
+    S, Hkv = kq.shape[1], kq.shape[2]
+    Gq = Hq // Hkv
+    Dp = kq.shape[3]
+    assert S % block_s == 0 and block_s % group == 0, (S, block_s, group)
+    nS = S // block_s
+
+    # head-major layouts so the (b, h) grid axes map to leading dims
+    qh = q.reshape(B, Hkv, Gq, D)
+    kqh = kq.transpose(0, 2, 1, 3)        # [B, Hkv, S, Dp]
+    ksh = ks.transpose(0, 2, 1, 3)        # [B, Hkv, S//G, D]
+    kzh = kz.transpose(0, 2, 1, 3)
+    vqh = vq.transpose(0, 2, 1, 3)
+    vsh = vs.transpose(0, 2, 1)           # [B, Hkv, S]
+    vzh = vz.transpose(0, 2, 1)
+    gpb = block_s // group
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, D=D, group=group,
+                          block_s=block_s),
+        grid=(B, Hkv, nS),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gq, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, Dp), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, gpb, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, gpb, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, Dp), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, block_s), lambda b, h, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gq, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gq, 1), jnp.float32),
+            pltpu.VMEM((Gq, 1), jnp.float32),
+            pltpu.VMEM((Gq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kqh, ksh, kzh, vqh, vsh, vzh, bias)
+    return out.reshape(B, Hq, D)

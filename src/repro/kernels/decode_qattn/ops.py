@@ -1,0 +1,17 @@
+"""Jit'd wrapper: Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_qattn import kernel, ref
+
+
+def decode_attention_quantized(q, kq, ks, kz, vq, vs, vz, bias, *,
+                               bits: int, group: int, block_s: int = 512):
+    interpret = jax.default_backend() != "tpu"
+    return kernel.decode_qattn_pallas(
+        q, kq, ks, kz, vq, vs, vz, bias, bits=bits, group=group,
+        block_s=block_s, interpret=interpret)
+
+
+decode_attention_quantized_ref = ref.decode_qattn_ref

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: dequantize-then-attend (what the kernel fuses)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kvquant import ref as qref
+
+Array = jax.Array
+
+
+def decode_qattn_ref(q, kq, ks, kz, vq, vs, vz, bias, *, bits: int,
+                     group: int) -> Array:
+    """Same signature as the kernel wrapper. q: [B, Hq, D];
+    kq/vq: [B, S, Hkv, Dp] packed; returns [B, Hq, D]."""
+    B, Hq, D = q.shape
+    S, Hkv = kq.shape[1], kq.shape[2]
+    Gq = Hq // Hkv
+    k = qref.dequant_k_ref(kq, ks, kz, bits, group, jnp.float32)
+    v = qref.dequant_v_ref(vq, vs, vz, bits, jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, Gq, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k) / math.sqrt(D)
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,101 @@
+"""Blocked causal (optionally sliding-window) flash attention for
+train/prefill — the O(T²) memory problem that makes 32k-prefill feasible.
+
+Grid: (B, Hq, n_q, n_k); the kv-block axis is innermost/sequential so the
+online-softmax accumulators persist in VMEM scratch. GQA maps the q-head
+grid axis onto kv heads inside the BlockSpec index maps (h // group).
+Fully-masked kv blocks (beyond causal diagonal / behind the window) are
+skipped with pl.when — on TPU their loads are still prefetched by the
+pipeline but no FLOPs are burned; the §Perf pass measures whether a
+tighter index-map (diagonal-banded grid) is worth it.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, window: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    needed = k_start <= q_start + bq - 1          # causal reachability
+    if window > 0:
+        needed = jnp.logical_and(needed, k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)        # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)        # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = (q @ k.T) * scale                      # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos <= qpos
+        if window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        out_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def flash_prefill_pallas(q, k, v, *, window: int = 0, bq: int = 512,
+                         bk: int = 512, interpret: bool = False):
+    """q: [B, Tq, Hq, D]; k, v: [B, Tk, Hkv, D] (Tq == Tk, causal).
+    Returns out [B, Tq, Hq, D]."""
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    Gq = Hq // Hkv
+    bq, bk = min(bq, T), min(bk, T)
+    assert T % bq == 0 and T % bk == 0
+    qh = q.transpose(0, 2, 1, 3)                   # [B, Hq, T, D]
+    kh = k.transpose(0, 2, 1, 3)                   # [B, Hkv, T, D]
+    vh = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, window=window,
+                          scale=1.0 / math.sqrt(D)),
+        grid=(B, Hq, T // bq, T // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // Gq, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // Gq, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper: Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_prefill import kernel, ref
+
+
+def flash_attention(q, k, v, *, window: int = 0, bq: int = 512,
+                    bk: int = 512):
+    interpret = jax.default_backend() != "tpu"
+    return kernel.flash_prefill_pallas(q, k, v, window=window, bq=bq, bk=bk,
+                                       interpret=interpret)
+
+
+flash_attention_ref = ref.flash_prefill_ref

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash_prefill (materialized causal attention)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, *, window: int = 0):
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    Gq = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, T, Hkv, Gq, D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok = ok & (kpos > qpos - window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, D).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.kvquant.ops import (  # noqa: F401
+    quantize_k, quantize_v, unpack_dequant_k, unpack_dequant_v,
+)

@@ -1,0 +1,120 @@
+"""Fused KIVI quantize+pack kernel.
+
+One grid cell = one (batch row, sequence group): the [G, H, D] tile is
+copied HBM->VMEM once, reduced (per-channel min/max for K; per-token for
+V), quantized, and **bit-packed** (2/4/8 bits -> int8 lanes) before the
+single write back — the write traffic is the compressed size, which is
+the point of the kernel (KVQuant's fused CUDA path re-derived for TPU,
+DESIGN.md §2).
+
+Packing layout: `f = 8 // bits` codes per int8 byte, packed along the
+trailing (head_dim for K, head_dim for V) axis: byte j holds codes
+[j*f, (j+1)*f) little-endian in bit order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _pack_along_last(q: Array, bits: int) -> Array:
+    """q: int32 codes [..., D] in [0, 2^bits) -> int8 [..., D*bits//8]."""
+    f = 8 // bits
+    *lead, D = q.shape
+    qf = q.reshape(*lead, D // f, f)
+    shifts = (jnp.arange(f, dtype=jnp.int32) * bits).reshape(
+        (1,) * (qf.ndim - 1) + (f,))
+    packed = jnp.sum(qf << shifts, axis=-1)
+    # value range [0, 255]: bias to int8
+    return (packed - 128).astype(jnp.int8)
+
+
+def _kquant_kernel(k_ref, q_ref, scale_ref, zero_ref, *, bits: int):
+    """Per-channel (over the group axis) asymmetric quantization.
+    k_ref: [1, G, H, D] f32/bf16; q_ref: [1, G, H, D*bits//8] int8;
+    scale/zero: [1, 1, H, D] f32."""
+    x = k_ref[0].astype(jnp.float32)                    # [G, H, D]
+    lo = jnp.min(x, axis=0, keepdims=True)              # [1, H, D]
+    hi = jnp.max(x, axis=0, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, levels).astype(jnp.int32)
+    q_ref[0] = _pack_along_last(q, bits)
+    scale_ref[0] = scale
+    zero_ref[0] = lo
+
+
+def _vquant_kernel(v_ref, q_ref, scale_ref, zero_ref, *, bits: int):
+    """Per-token (over head_dim) quantization.
+    v_ref: [1, G, H, D]; scale/zero: [1, G, H, 1]."""
+    x = v_ref[0].astype(jnp.float32)                    # [G, H, D]
+    lo = jnp.min(x, axis=-1, keepdims=True)             # [G, H, 1]
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, levels).astype(jnp.int32)
+    q_ref[0] = _pack_along_last(q, bits)
+    scale_ref[0] = scale[:, :, 0]
+    zero_ref[0] = lo[:, :, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "interpret"))
+def kquant_pallas(k: Array, *, bits: int, group: int,
+                  interpret: bool = False):
+    """k: [B, S, H, D] -> (packed [B, S, H, D*bits//8] int8,
+    scale [B, S//G, H, D] f32, zero [B, S//G, H, D] f32)."""
+    B, S, H, D = k.shape
+    assert S % group == 0 and (D * bits) % 8 == 0
+    G = group
+    nG = S // G
+    Dp = D * bits // 8
+    grid = (B, nG)
+    return pl.pallas_call(
+        functools.partial(_kquant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, G, H, D), lambda b, g: (b, g, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, G, H, Dp), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, H, D), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, H, D), lambda b, g: (b, g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, Dp), jnp.int8),
+            jax.ShapeDtypeStruct((B, nG, H, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, nG, H, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "interpret"))
+def vquant_pallas(v: Array, *, bits: int, group: int,
+                  interpret: bool = False):
+    """v: [B, S, H, D] -> (packed int8 [B, S, H, D*bits//8],
+    scale [B, S, H], zero [B, S, H])."""
+    B, S, H, D = v.shape
+    assert S % group == 0 and (D * bits) % 8 == 0
+    G = group
+    nG = S // G
+    Dp = D * bits // 8
+    return pl.pallas_call(
+        functools.partial(_vquant_kernel, bits=bits),
+        grid=(B, nG),
+        in_specs=[pl.BlockSpec((1, G, H, D), lambda b, g: (b, g, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, G, H, Dp), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, G, H), lambda b, g: (b, g, 0)),
+            pl.BlockSpec((1, G, H), lambda b, g: (b, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, Dp), jnp.int8),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(v)

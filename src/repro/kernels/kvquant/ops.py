@@ -1,0 +1,25 @@
+"""Public jit'd wrappers: Pallas on TPU, interpret-mode on CPU, with the
+ref implementation importable for oracles."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kvquant import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_k(k, *, bits: int, group: int):
+    return kernel.kquant_pallas(k, bits=bits, group=group,
+                                interpret=_interpret())
+
+
+def quantize_v(v, *, bits: int, group: int):
+    return kernel.vquant_pallas(v, bits=bits, group=group,
+                                interpret=_interpret())
+
+
+unpack_dequant_k = ref.dequant_k_ref
+unpack_dequant_v = ref.dequant_v_ref

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the kvquant kernel (KIVI layout + bit packing)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pack_ref(q: Array, bits: int) -> Array:
+    f = 8 // bits
+    *lead, D = q.shape
+    qf = q.astype(jnp.int32).reshape(*lead, D // f, f)
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    packed = jnp.sum(qf << shifts, axis=-1)
+    return (packed - 128).astype(jnp.int8)
+
+
+def unpack_ref(p: Array, bits: int, D: int) -> Array:
+    f = 8 // bits
+    x = p.astype(jnp.int32) + 128
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    mask = (1 << bits) - 1
+    codes = (x[..., None] >> shifts) & mask              # [..., D//f, f]
+    return codes.reshape(*p.shape[:-1], D)
+
+
+def kquant_ref(k: Array, bits: int, group: int):
+    """K per-channel over seq groups. Returns (packed, scale, zero)."""
+    B, S, H, D = k.shape
+    G = group
+    x = k.astype(jnp.float32).reshape(B, S // G, G, H, D)
+    lo = x.min(axis=2, keepdims=True)
+    hi = x.max(axis=2, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, levels)
+    packed = pack_ref(q.reshape(B, S, H, D), bits)
+    return packed, scale[:, :, 0], lo[:, :, 0]
+
+
+def vquant_ref(v: Array, bits: int):
+    """V per-token over head_dim. Returns (packed, scale, zero)."""
+    x = v.astype(jnp.float32)
+    lo = x.min(axis=-1, keepdims=True)
+    hi = x.max(axis=-1, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, levels)
+    return pack_ref(q, bits), scale[..., 0], lo[..., 0]
+
+
+def dequant_k_ref(packed, scale, zero, bits: int, group: int, dtype=jnp.bfloat16):
+    B, S, H, D = *packed.shape[:3], packed.shape[3] * 8 // bits
+    codes = unpack_ref(packed, bits, D).reshape(B, S // group, group, H, D)
+    x = codes.astype(jnp.float32) * scale[:, :, None] + zero[:, :, None]
+    return x.reshape(B, S, H, D).astype(dtype)
+
+
+def dequant_v_ref(packed, scale, zero, bits: int, dtype=jnp.bfloat16):
+    D = packed.shape[-1] * 8 // bits
+    codes = unpack_ref(packed, bits, D)
+    return (codes.astype(jnp.float32) * scale[..., None]
+            + zero[..., None]).astype(dtype)

@@ -1,0 +1,376 @@
+"""Multi-pod dry-run: prove every (arch × input-shape × mesh) lowers and
+compiles on the production meshes, and extract roofline inputs.
+
+MUST be run as a module entry (`python -m repro.launch.dryrun`): the first
+two lines below pin 512 placeholder host devices BEFORE jax initializes.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_cache_spec, src_len_for
+from repro.nn import model as M
+from repro.nn import sharding as shd
+from repro.train.loop import make_train_step
+from repro.optim import cosine_schedule
+from repro.utils import tree_bytes
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Collective accounting from partitioned HLO
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_bytes(segment: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        body = m.group(1).strip()
+        return len(body.split(",")) if body else n_devices
+    return n_devices
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its body lines. Handles multi-line headers
+    (parameter lists wrap across lines in XLA dumps)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    pending: list[str] = []
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if not line.strip():
+                pending = []
+                continue
+            pending.append(line)
+            if line.endswith("{"):
+                header = " ".join(pending)
+                m = re.match(r"\s*(?:HloModule\b)", header)
+                if m:
+                    pending = []
+                    continue
+                m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)", header)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                pending = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            pending = []
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic: a counted while's condition compares the induction var
+    with a constant — take the largest s32/u32 constant found."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"[su]32\[\]\s+constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Execution multiplier per computation: while bodies run trip-count
+    times per parent execution; fusions/calls once."""
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            if re.search(r"=\s*.{0,4000}?\bwhile\(", line):
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                trips = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                if mc and mc.group(1) in comps:
+                    edges[name].append((mc.group(1), float(max(trips, 1))))
+                if mb and mb.group(1) in comps:
+                    edges[name].append((mb.group(1), float(max(trips, 1))))
+            else:
+                for m in re.finditer(r"(?:calls=|to_apply=)%?([\w.\-]+)",
+                                     line):
+                    if m.group(1) in comps:
+                        edges[name].append((m.group(1), 1.0))
+
+    called = {c for outs in edges.values() for c, _ in outs}
+    roots = [c for c in comps if c not in called]
+    mult = {c: 0.0 for c in comps}
+
+    def visit(c, m, depth=0):
+        if depth > 60:
+            return
+        mult[c] += m
+        for child, w in edges[c]:
+            visit(child, m * w, depth + 1)
+
+    for r in roots:
+        visit(r, 1.0)
+    return mult
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\S+\[[0-9,]*\])")
+
+
+def _shape_table(comps: dict[str, list[str]]) -> dict[str, str]:
+    table: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                table[m.group(1)] = m.group(2)
+    return table
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def analyze_hlo(hlo_text: str, n_devices: int) -> dict:
+    """Trip-count-weighted accounting over the partitioned module:
+      * dot FLOPs (XLA's cost_analysis counts while bodies ONCE — wrong
+        for scan-over-layers models, so we count dots ourselves:
+        2 · prod(result dims) · prod(lhs contracting dims));
+      * collective result bytes per kind, scaled by (n-1)/n group factor.
+    """
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+    shapes = _shape_table(comps)
+
+    dot_flops = 0.0
+    colls = {k: {"count": 0, "bytes": 0.0, "bytes_weighted_n": 0.0}
+             for k in _COLL_KINDS}
+    for name, lines in comps.items():
+        w = max(mult.get(name, 0.0), 0.0)
+        if w == 0.0:
+            w = 1.0      # unreached comps (shouldn't happen): count once
+        for line in lines:
+            s = line.strip()
+            md = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\S+\[[0-9,]*\])"
+                          r"[^=]*?\bdot\(%?([\w.\-]+),", s)
+            if md and " dot(" in s:
+                res_dims = _dims(md.group(1))
+                lhs = shapes.get(md.group(2), "")
+                lhs_dims = _dims(lhs)
+                mk = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", s)
+                contract = 1
+                if mk and lhs_dims:
+                    for ci in mk.group(1).split(","):
+                        if ci:
+                            contract *= lhs_dims[int(ci)]
+                n = 1
+                for d in res_dims:
+                    n *= d
+                dot_flops += w * 2.0 * n * contract
+                continue
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s*"
+                         r"((?:all-gather|all-reduce|reduce-scatter|"
+                         r"all-to-all|collective-permute)(?:-start)?)\(", s)
+            if m:
+                kind = m.group(2).replace("-start", "")
+                nbytes = _shapes_bytes(m.group(1))
+                n = _group_size(s, n_devices)
+                colls[kind]["count"] += 1
+                colls[kind]["bytes"] += w * nbytes
+                colls[kind]["bytes_weighted_n"] += (
+                    w * nbytes * (n - 1) / max(n, 1))
+    return {"collectives": colls, "dot_flops_per_device": dot_flops}
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict:
+    return analyze_hlo(hlo_text, n_devices)["collectives"]
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one workload
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            extra_note: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    wl = batch_specs(cfg, shape, mesh)
+
+    params_shape = jax.eval_shape(partial(M.init_params, cfg=cfg),
+                                  jax.random.key(0))
+    pspecs = shd.param_pspecs(params_shape, cfg, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    def shardings_of(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.perf_counter()
+    if wl.kind == "train":
+        init_state, train_step = make_train_step(
+            cfg, cosine_schedule(3e-4, 100, 10_000))
+        state_shape = jax.eval_shape(init_state, params_shape)
+        from repro.train.loop import TrainState
+        from repro.optim.optimizers import AdamState
+        state_sh = TrainState(
+            psh, AdamState(NamedSharding(mesh, P()), psh, psh),
+            NamedSharding(mesh, P()))
+        fn = jax.jit(train_step, in_shardings=(state_sh, shardings_of(wl.in_specs[0])),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state_shape, wl.args[0])
+    elif wl.kind == "prefill":
+        from repro.core.cache import CacheSpec
+        spec = CacheSpec(budget=shape.seq_len, policy="none")
+
+        def prefill_fn(params, batch):
+            return M.prefill(params, cfg, batch, spec)
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(psh, shardings_of(wl.in_specs[0])))
+        lowered = fn.lower(params_shape, wl.args[0])
+    else:  # decode
+        spec = wl.cache_spec
+
+        def decode_fn(params, cache, tok):
+            return M.decode_step(params, cfg, cache, tok, spec)
+        fn = jax.jit(decode_fn,
+                     in_shardings=(psh, shardings_of(wl.in_specs[0]),
+                                   shardings_of(wl.in_specs[1])),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_shape, *wl.args)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_d[attr] = int(v)
+    hlo = compiled.as_text()
+    n_dev_mesh = mesh.devices.size
+    hlo_stats = analyze_hlo(hlo, int(n_dev_mesh))
+    colls = hlo_stats["collectives"]
+
+    n_dev = mesh.devices.size
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "kind": wl.kind,
+        "note": (wl.note + " " + extra_note).strip(),
+        "flops_per_device": float(cost.get("flops", -1)),
+        "dot_flops_per_device": float(hlo_stats["dot_flops_per_device"]),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "collectives": colls,
+        "memory_analysis": mem_d,
+        "arg_bytes_total": int(tree_bytes(wl.args)) + int(tree_bytes(params_shape)),
+        "param_count": int(cfg.param_count()),
+        "active_param_count": int(cfg.active_param_count()),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "status": "ok",
+    }
+    return res, hlo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default=os.path.abspath(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    archs = ([a for a in ARCH_IDS if a != "paper-llama-7b"]
+             if args.arch == "all" else args.arch.split(","))
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    res, hlo = run_one(arch, shape, multi_pod=mp)
+                    hlo_dir = os.path.join(args.out, "hlo")
+                    os.makedirs(hlo_dir, exist_ok=True)
+                    with gzip.open(os.path.join(hlo_dir, tag + ".txt.gz"),
+                                   "wt") as hf:
+                        hf.write(hlo)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "FAIL", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                st = res["status"]
+                extra = ("" if st != "ok" else
+                         f" flops/dev={res['flops_per_device']:.3g}"
+                         f" compile={res['compile_s']}s")
+                print(f"[{st}] {tag}{extra}", flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

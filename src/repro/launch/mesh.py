@@ -1,0 +1,32 @@
+"""Production meshes (TPU v5e target).
+
+single-pod: 256 chips as (data=16, model=16)
+multi-pod:  512 chips as (pod=2, data=16, model=16)
+
+A FUNCTION, not a module constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n: int = 8) -> jax.sharding.Mesh:
+    """Small host-device mesh for CI tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=n in the test env)."""
+    return jax.make_mesh((n // 4, 4), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+ICI_LINKS = 4                     # per chip (2D torus on v5e)
+VMEM_BYTES = 128 * 2 ** 20        # ~128 MiB vector memory
+HBM_BYTES = 16 * 2 ** 30          # 16 GiB per chip

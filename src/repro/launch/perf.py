@@ -1,0 +1,74 @@
+"""§Perf iteration driver: lower ONE (arch × shape × mesh) with a set of
+sharding options, print the roofline terms, and save the artifact to
+experiments/perf/<tag>__<opts>.json (+ gzipped HLO).
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen2.5-32b \
+        --shape train_4k --opts kv_replicated,weight_gather
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import gzip
+import json
+
+from repro.launch import dryrun as DR
+from repro.nn import sharding as shd
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "perf")
+
+
+def run(arch: str, shape: str, opts: frozenset, multi_pod: bool = False):
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with shd.activation_sharding(mesh, opts):
+        # batch_specs consumes opts for the cache layout (patch the name
+        # dryrun actually calls — it binds the function at import)
+        orig = DR.batch_specs
+        DR.batch_specs = (
+            lambda cfg, s, m, o=frozenset(): orig(cfg, s, m, opts))
+        try:
+            res, hlo = DR.run_one(arch, shape, multi_pod=multi_pod,
+                                  extra_note=f"opts={sorted(opts)}")
+        finally:
+            DR.batch_specs = orig
+    return res, hlo
+
+
+def summarize(res: dict) -> str:
+    from benchmarks.roofline import terms
+    t = terms(res)
+    return (f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+            f"collective={t['collective_s']:.3e}s dominant={t['dominant']} "
+            f"useful={t['useful_ratio']:.3f} "
+            f"compile={res['compile_s']}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opts", default="",
+                    help="comma list: kv_replicated,weight_gather,"
+                         "seq_tp_cache")
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opts.split(",") if o)
+    res, hlo = run(args.arch, args.shape, opts, args.multi)
+    os.makedirs(PERF_DIR, exist_ok=True)
+    tag = (f"{args.arch}__{args.shape}__"
+           f"{'multi' if args.multi else 'single'}__"
+           f"{'+'.join(sorted(opts)) or 'baseline'}")
+    with open(os.path.join(PERF_DIR, tag + ".json"), "w") as f:
+        json.dump(res, f, indent=1)
+    with gzip.open(os.path.join(PERF_DIR, tag + ".txt.gz"), "wt") as f:
+        f.write(hlo)
+    print(tag)
+    print(summarize(res))
+
+
+if __name__ == "__main__":
+    main()

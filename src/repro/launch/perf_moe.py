@@ -1,0 +1,60 @@
+"""§Perf pair-4 closure: one kimi-scale MoE block at decode shape, lowered
+two ways on the production mesh — GSPMD sort-dispatch (the model default)
+vs explicit shard_map expert parallelism — and the collective bytes
+compared.
+
+    PYTHONPATH=src:. python -m repro.launch.perf_moe
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.dryrun import analyze_hlo
+from repro.launch.mesh import ICI_BW, make_production_mesh
+from repro.nn import moe as MoE
+from repro.nn.moe_ep import moe_apply_expert_parallel
+
+
+def main() -> None:
+    mesh = make_production_mesh()
+    Dm, F, E, topk = 7168, 2048, 384, 8       # kimi-k2 expert block
+    B = 128                                    # decode_32k batch
+    p_shape = jax.eval_shape(
+        lambda k: MoE.moe_init(k, Dm, F, E, jnp.bfloat16), jax.random.key(0))
+    x_shape = jax.ShapeDtypeStruct((B, 1, Dm), jnp.bfloat16)
+
+    ep_spec = {"router": P(None, None), "gate": P("model", None, None),
+               "up": P("model", None, None), "down": P("model", None, None)}
+    psh = {k: NamedSharding(mesh, s) for k, s in ep_spec.items()}
+    xsh = NamedSharding(mesh, P("data", None, None))
+
+    results = {}
+    for name, fn in (
+        ("gspmd_dispatch",
+         lambda p, x: MoE.moe_apply(p, x, top_k=topk)[0]),
+        ("shard_map_ep",
+         lambda p, x: moe_apply_expert_parallel(
+             p, x, top_k=topk, mesh=mesh, capacity_factor=1.25,
+             dp_spec=P("data"))),
+    ):
+        compiled = jax.jit(fn, in_shardings=(psh, xsh)).lower(
+            p_shape, x_shape).compile()
+        stats = analyze_hlo(compiled.as_text(), mesh.devices.size)
+        coll = {k: v["bytes_weighted_n"]
+                for k, v in stats["collectives"].items()
+                if v["bytes_weighted_n"] > 0}
+        total = sum(2 * v if k == "all-reduce" else v
+                    for k, v in coll.items())
+        results[name] = total
+        print(f"{name}: collective_bytes={total:.4g} "
+              f"({coll}) -> {total / (2 * ICI_BW) * 1e6:.1f} us/layer")
+    if results["shard_map_ep"] > 0:
+        print(f"ratio: {results['gspmd_dispatch'] / results['shard_map_ep']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Re-derive HLO-based stats (trip-count-weighted dot FLOPs, collective
+bytes) from the gzipped HLO artifacts WITHOUT recompiling — updates the
+dry-run JSONs in place. Pure text processing: safe to run in the normal
+1-device environment.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch.dryrun import analyze_hlo
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def main() -> None:
+    d = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_DIR)
+    n_done = 0
+    for jf in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        tag = os.path.basename(jf)[:-5]
+        hf = os.path.join(d, "hlo", tag + ".txt.gz")
+        if not os.path.exists(hf):
+            print("no HLO for", tag)
+            continue
+        hlo = gzip.open(hf, "rt").read()
+        stats = analyze_hlo(hlo, rec["n_devices"])
+        rec["collectives"] = stats["collectives"]
+        rec["dot_flops_per_device"] = stats["dot_flops_per_device"]
+        json.dump(rec, open(jf, "w"), indent=1)
+        n_done += 1
+        coll = sum(v["bytes_weighted_n"]
+                   for v in stats["collectives"].values())
+        print(f"{tag}: dot_flops/dev={stats['dot_flops_per_device']:.3g} "
+              f"coll_bytes={coll:.3g}")
+    print(f"reanalyzed {n_done}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Workload specs for the dry-run: which step function each (arch × input
+shape) lowers, its ShapeDtypeStruct inputs, and their shardings.
+
+Decode shapes lower `serve_step` (one token against a seq_len cache);
+long_500k uses the survey's bounded-budget compressed cache for dense
+archs (sub-quadratic requirement — DESIGN.md §4) and shards the cache
+*length* over the "data" axis (DistAttention-style) because batch=1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.core.cache import CacheSpec
+from repro.nn import model as M
+from repro.nn import sharding as shd
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# long-context serving policy for archs without native sub-quadratic
+# attention: StreamingLLM-style bounded budget (the paper's technique).
+LONG_CONTEXT_BUDGET = 8192
+LONG_CONTEXT_WINDOW = 128
+
+
+@dataclass
+class Workload:
+    kind: str                  # train | prefill | decode
+    args: tuple                # ShapeDtypeStructs, in step-fn order
+    in_specs: tuple            # matching PartitionSpec pytrees
+    cache_spec: Optional[CacheSpec] = None   # decode only
+    note: str = ""
+
+
+def src_len_for(cfg: ModelConfig, seq: int) -> int:
+    return max(seq // 4, 16) if cfg.is_encoder_decoder else 0
+
+
+def decode_cache_spec(cfg: ModelConfig, shape: InputShape,
+                      opts: frozenset = frozenset()) -> CacheSpec:
+    """The cache policy each (arch, shape) uses at decode."""
+    bits = 4 if "kivi4_cache" in opts else 2 if "kivi2_cache" in opts else 16
+    if bits < 16:
+        # the survey's quantization family on top of the serving layout:
+        # whole-context cache at 2/4 bits (KIVI layout), fp window 128
+        budget = (shape.seq_len // 128) * 128
+        return CacheSpec(budget=budget, window=128, group=128, bits=bits,
+                         policy="streaming", sinks=4)
+    if shape.name == "long_500k" and cfg.num_attn_layers() > 0:
+        if cfg.sliding_window:        # mixtral: native SWA bounds the cache
+            return CacheSpec(budget=cfg.sliding_window, policy="streaming",
+                             window=0, sinks=4)
+        if cfg.arch_type == "hybrid":  # jamba: 4 attn layers keep full 500k
+            return CacheSpec(budget=shape.seq_len, policy="none")
+        # dense/vlm/audio: bounded budget = the survey's selective
+        # compression makes 500k-decode feasible (DESIGN.md §4)
+        return CacheSpec(budget=LONG_CONTEXT_BUDGET,
+                         window=LONG_CONTEXT_WINDOW, sinks=4,
+                         policy="streaming", group=LONG_CONTEXT_WINDOW,
+                         recent_protect=LONG_CONTEXT_WINDOW)
+    return CacheSpec(budget=shape.seq_len, policy="none")  # full baseline
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                opts: frozenset = frozenset()) -> Workload:
+    """Build the Workload for one (arch × input shape). `opts` are the
+    §Perf sharding options (see nn.sharding.activation_sharding)."""
+    B, S = shape.global_batch, shape.seq_len
+    fsdp, tp = shd.mesh_axes(mesh)
+    dp = fsdp
+    if "pure_fsdp" in opts:   # §Perf ZeRO-3: batch over every mesh axis
+        dp = tuple(fsdp) + ((tp,) if isinstance(tp, str) else tuple(tp))
+    f32, i32 = jnp.float32, jnp.int32
+
+    if shape.kind == "train":
+        args: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        specs: dict[str, Any] = {"tokens": P(dp, None)}
+        if cfg.is_encoder_decoder:
+            sl = src_len_for(cfg, S)
+            args["src_embeds"] = jax.ShapeDtypeStruct((B, sl, cfg.d_model), f32)
+            specs["src_embeds"] = P(dp, None, None)
+        return Workload("train", (args,), (specs,))
+
+    if shape.kind == "prefill":
+        args = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        specs = {"tokens": P(dp, None)}
+        if cfg.is_encoder_decoder:
+            sl = src_len_for(cfg, S)
+            args["src_embeds"] = jax.ShapeDtypeStruct((B, sl, cfg.d_model), f32)
+            specs["src_embeds"] = P(dp, None, None)
+        return Workload("prefill", (args,), (specs,))
+
+    # ---- decode ----------------------------------------------------------
+    spec = decode_cache_spec(cfg, shape, opts)
+    shard_seq = shape.name == "long_500k"   # batch=1: shard cache length
+    cache = M.init_cache(cfg, spec, B, S, src_len=src_len_for(cfg, S),
+                         as_spec=True)
+    cache_specs = shd.cache_pspecs(cache, mesh, shard_seq=shard_seq,
+                                   seq_tp="seq_tp_cache" in opts,
+                                   dp_only="cache_dp_only" in opts)
+    tok = jax.ShapeDtypeStruct((B, 1), i32)
+    tok_spec = P(None if shard_seq else dp, None)
+    return Workload("decode", (cache, tok), (cache_specs, tok_spec),
+                    cache_spec=spec,
+                    note=f"budget={spec.budget} policy={spec.policy} "
+                         f"bits={spec.bits} shard_seq={shard_seq}")

@@ -1,0 +1,191 @@
+"""GQA attention: chunked (flash-style, online over query blocks) for
+train/prefill, and cache-aware single-token decode.
+
+The prefill path additionally returns the per-key attention mass — the
+heavy-hitter statistic the selective-compression policies consume
+(H2O/NACL/Keyformer, survey §2/§4).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as kvcache
+from repro.core.cache import CacheSpec, LayerKV
+from repro.nn import layers as L
+from repro.nn.rope import apply_rope
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, *, cross: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hq = cfg.num_heads * cfg.head_dim
+    hkv = cfg.num_kv_heads * cfg.head_dim
+    return {
+        "wq": L.linear_init(kq, cfg.d_model, hq, bias=cfg.qkv_bias, dtype=cfg.dtype),
+        "wk": L.linear_init(kk, cfg.d_model, hkv, bias=cfg.qkv_bias, dtype=cfg.dtype),
+        "wv": L.linear_init(kv, cfg.d_model, hkv, bias=cfg.qkv_bias, dtype=cfg.dtype),
+        "wo": L.linear_init(ko, hq, cfg.d_model, bias=cfg.attn_out_bias,
+                            dtype=cfg.dtype),
+    }
+
+
+def qkv(p: dict, x: Array, cfg, positions: Optional[Array], *, rope: bool = True):
+    """x: [B, T, d_model] -> q [B,T,Hq,D], k,v [B,T,Hkv,D] (rotated)."""
+    from repro.nn import sharding as shd
+    B, T, _ = x.shape
+    pq, pk, pv = p["wq"], p["wk"], p["wv"]
+    if shd.opt_enabled("weight_gather"):
+        pq = {**pq, "w": shd.constrain(pq["w"], None, "tp")}
+        pk = {**pk, "w": shd.constrain(pk["w"], None, "tp")}
+        pv = {**pv, "w": shd.constrain(pv["w"], None, "tp")}
+    q = L.linear(pq, x).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    k = L.linear(pk, x).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = L.linear(pv, x).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    if rope:
+        if positions is None:
+            positions = jnp.arange(T)[None]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if shd.opt_enabled("kv_replicated"):
+        # GQA under tp > kv_heads: keep K/V whole per shard (cheap
+        # all-gather) instead of head_dim-sharded (score-sized partial-sum
+        # all-reduce in QK^T) — EXPERIMENTS.md §Perf iteration 1.
+        q = shd.constrain(q, "fsdp", None, "tp", None)
+        k = shd.constrain(k, "fsdp", None, None, None)
+        v = shd.constrain(v, "fsdp", None, None, None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense attention (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+
+def _attend_block(q, k, v, mask_bias, scale):
+    """q: [B,Tq,Hkv,G,D]; k/v: [B,Tk,Hkv,D]; mask_bias: [B,1,1,Tq,Tk]."""
+    s = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32) * scale
+    s = s + mask_bias.transpose(0, 1, 2, 3, 4)  # [B,Hkv|1,G|1,Tq,Tk]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    mass = p.sum(axis=(1, 2, 3))                # [B, Tk]
+    return o, mass
+
+
+def gqa_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool, window: int = 0,
+    q_positions: Optional[Array] = None, kv_positions: Optional[Array] = None,
+    kv_bias: Optional[Array] = None, q_chunk: int = 512,
+    return_mass: bool = False,
+):
+    """General GQA attention.
+
+    q: [B, Tq, Hq, D]; k, v: [B, Tk, Hkv, D].
+    kv_bias: [B, Tk] additive validity bias.
+    Chunked over Tq (flash-style memory profile in pure XLA: scores are
+    never materialized beyond [.., q_chunk, Tk]).
+    Returns out [B, Tq, Hq, D] (+ attention mass [B, Tk] if requested).
+    """
+    B, Tq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Tq)[None], (B, Tq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(k.shape[1])[None],
+                                        (B, k.shape[1]))
+
+    def bias_for(qpos_chunk):
+        # [B, 1, 1, tq, Tk]
+        b = jnp.zeros((B, 1, 1, qpos_chunk.shape[1], kv_positions.shape[1]),
+                      jnp.float32)
+        rel_ok = jnp.ones_like(b, bool)
+        if causal:
+            rel_ok &= (kv_positions[:, None, None, None, :]
+                       <= qpos_chunk[:, None, None, :, None])
+        if window > 0:
+            rel_ok &= (kv_positions[:, None, None, None, :]
+                       > qpos_chunk[:, None, None, :, None] - window)
+        b = jnp.where(rel_ok, 0.0, NEG_INF)
+        if kv_bias is not None:
+            b = b + kv_bias[:, None, None, None, :]
+        return b
+
+    if Tq <= q_chunk:
+        o, mass = _attend_block(qg, k, v, bias_for(q_positions), scale)
+        out = o.reshape(B, Tq, Hq, D)
+        return (out, mass) if return_mass else out
+
+    if Tq % q_chunk:
+        # pad queries to a chunk multiple; padded rows are sliced off.
+        # (mass accounting assumes divisible Tq — true for all prefill
+        # shapes; train masses are unused.)
+        assert not return_mass, "return_mass requires Tq % q_chunk == 0"
+        pad = q_chunk - Tq % q_chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pp = jnp.pad(q_positions, ((0, 0), (0, pad)), mode="edge")
+        out = gqa_attention(qp, k, v, causal=causal, window=window,
+                            q_positions=pp, kv_positions=kv_positions,
+                            kv_bias=kv_bias, q_chunk=q_chunk)
+        return out[:, :Tq]
+    n = Tq // q_chunk
+    qg_c = qg.reshape(B, n, q_chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qpos_c = q_positions.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+    def body(carry_mass, xs):
+        qc, qp = xs
+        o, m = _attend_block(qc, k, v, bias_for(qp), scale)
+        return carry_mass + m, o
+
+    mass0 = jnp.zeros((B, k.shape[1]), jnp.float32)
+    mass, outs = jax.lax.scan(body, mass0, (qg_c, qpos_c))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, Hq, D)
+    return (out, mass) if return_mass else out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a compressed cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: Array, lc: LayerKV, spec: CacheSpec, *, window: int = 0,
+    dtype=jnp.bfloat16, q_pos: Optional[Array] = None,
+):
+    """q: [B, 1, Hq, D] rotated at absolute position `q_pos` [B]
+    (defaults to lc.pos - 1: the append-first decode convention, so the
+    token attends to itself through the cache).
+
+    Returns (out [B, 1, Hq, D], attn_mass [B, S+W]) — mass aligned with
+    `cache.materialize` ordering for `cache.accumulate_scores`.
+    """
+    if q_pos is None:
+        q_pos = lc.pos - 1
+    k, v, bias = kvcache.materialize(lc, spec, dtype)
+    S = lc.k.shape[1]
+    W = lc.rk.shape[1]
+    ring_pos = (lc.pos[:, None] - lc.rlen[:, None] + jnp.arange(W)[None])
+    kv_positions = jnp.concatenate([lc.slot_pos, ring_pos.astype(jnp.int32)],
+                                   axis=1) if W else lc.slot_pos
+    if window > 0:  # sliding-window models (mixtral): mask stale slots
+        in_win = kv_positions > (q_pos[:, None] - window)
+        bias = bias + jnp.where(in_win, 0.0, NEG_INF)
+    out, mass = gqa_attention(
+        q, k, v, causal=False, kv_positions=kv_positions, kv_bias=bias,
+        q_positions=q_pos[:, None], return_mass=True,
+    )
+    return out, mass

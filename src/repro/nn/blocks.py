@@ -1,0 +1,171 @@
+"""Decoder/encoder blocks: (attention | Mamba2) mixer + (dense | MoE) FFN,
+pre-norm residual. Blocks are pure functions over param dicts; the model
+stacks them into superblocks and scans (see `repro.nn.model`)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as kvcache
+from repro.core.cache import CacheSpec, LayerKV, SSMState
+from repro.nn import attention as attn
+from repro.nn import layers as L
+from repro.nn import moe as moe_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.rope import apply_rope
+
+Array = jax.Array
+
+
+class BlockAux(NamedTuple):
+    lb_loss: Array
+    z_loss: Array
+
+
+ZERO_AUX = BlockAux(jnp.zeros(()), jnp.zeros(()))
+
+
+def block_init(key, cfg, kind: str, ffn_kind: str, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict = {"norm1": L.rmsnorm_init(cfg.d_model, cfg.dtype)}
+    if kind == "attn":
+        p["attn"] = attn.attn_init(ks[0], cfg)
+    else:
+        p["ssm"] = ssm_lib.ssm_init(ks[1], cfg)
+    if cfg.d_ff > 0 or (ffn_kind == "moe"):
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+        if ffn_kind == "moe":
+            p["moe"] = moe_lib.moe_init(ks[2], cfg.d_model, cfg.moe.d_expert,
+                                        cfg.moe.num_experts, cfg.dtype)
+        else:
+            p["mlp"] = L.mlp_init(ks[3], cfg.d_model, cfg.d_ff,
+                                  bias=cfg.mlp_bias, dtype=cfg.dtype)
+    if cross:
+        p["norm_x"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+        p["xattn"] = attn.attn_init(ks[4], cfg)
+    return p
+
+
+def _ffn(p: dict, x: Array, cfg) -> tuple[Array, BlockAux]:
+    if "moe" in p:
+        y, aux = moe_lib.moe_apply(p["moe"], L.rmsnorm(p["norm2"], x, cfg.norm_eps),
+                                   top_k=cfg.moe.num_experts_per_tok,
+                                   capacity_factor=cfg.moe.capacity_factor)
+        return x + y, BlockAux(aux.load_balance_loss, aux.router_z_loss)
+    if "mlp" in p:
+        return x + L.mlp(p["mlp"], L.rmsnorm(p["norm2"], x, cfg.norm_eps)), ZERO_AUX
+    return x, ZERO_AUX
+
+
+def _cross_attend(p: dict, x: Array, memory_kv, cfg) -> Array:
+    """memory_kv: (k, v, bias) precomputed from encoder output."""
+    if "xattn" not in p or memory_kv is None:
+        return x
+    mk, mv, mbias = memory_kv
+    h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+    B, T, _ = h.shape
+    q = L.linear(p["xattn"]["wq"], h).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    o = attn.gqa_attention(q, mk, mv, causal=False, kv_bias=mbias)
+    return x + L.linear(p["xattn"]["wo"], o.reshape(B, T, -1))
+
+
+def cross_kv(p: dict, memory: Array, cfg):
+    """Precompute cross-attention K/V from encoder output [B, Ts, d]."""
+    B, Ts, _ = memory.shape
+    k = L.linear(p["xattn"]["wk"], memory).reshape(B, Ts, cfg.num_kv_heads,
+                                                   cfg.head_dim)
+    v = L.linear(p["xattn"]["wv"], memory).reshape(B, Ts, cfg.num_kv_heads,
+                                                   cfg.head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / encoder)
+# ---------------------------------------------------------------------------
+
+
+def block_train(p: dict, x: Array, cfg, kind: str, *,
+                positions: Optional[Array] = None, causal: bool = True,
+                memory_kv=None) -> tuple[Array, BlockAux]:
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        from repro.nn import sharding as shd
+        q, k, v = attn.qkv(p["attn"], h, cfg, positions)
+        o = attn.gqa_attention(q, k, v, causal=causal,
+                               window=cfg.sliding_window,
+                               q_positions=positions, kv_positions=positions)
+        # (§Perf iteration 3, REFUTED: constraining o to 16-way head
+        # sharding doubled compute via 40->48 head padding; GSPMD's own
+        # 8-way choice is better. Hook removed — see EXPERIMENTS.md §Perf.)
+        B, T, _ = x.shape
+        x = x + L.linear(p["attn"]["wo"], o.reshape(B, T, -1))
+    else:
+        o, _ = ssm_lib.mamba2_forward(p["ssm"], h, cfg)
+        x = x + o
+    x = _cross_attend(p, x, memory_kv, cfg)
+    return _ffn(p, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + build the compressed cache for this layer
+# ---------------------------------------------------------------------------
+
+
+def block_prefill(p: dict, x: Array, cfg, kind: str, spec: CacheSpec, *,
+                  positions: Optional[Array] = None,
+                  logical_budget: Optional[Array] = None,
+                  key: Optional[Array] = None, memory_kv=None):
+    """Returns (x, aux, LayerKV | SSMState)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        q, k, v = attn.qkv(p["attn"], h, cfg, positions)
+        o, mass = attn.gqa_attention(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            q_positions=positions, kv_positions=positions, return_mass=True)
+        B, T, _ = x.shape
+        x = x + L.linear(p["attn"]["wo"], o.reshape(B, T, -1))
+        lc = kvcache.compress_prompt(spec, k, v, mass, key=key, dtype=cfg.dtype,
+                                     logical_budget=logical_budget)
+        x = _cross_attend(p, x, memory_kv, cfg)
+        x, aux = _ffn(p, x, cfg)
+        return x, aux, lc
+    else:
+        o, st = ssm_lib.mamba2_forward(p["ssm"], h, cfg)
+        x = x + o
+        x = _cross_attend(p, x, memory_kv, cfg)
+        x, aux = _ffn(p, x, cfg)
+        return x, aux, st
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against the cache
+# ---------------------------------------------------------------------------
+
+
+def block_decode(p: dict, x: Array, cfg, kind: str, spec: CacheSpec,
+                 cache_piece, *, key: Optional[Array] = None, memory_kv=None):
+    """x: [B, 1, d_model]. Returns (x, new cache piece)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        lc: LayerKV = cache_piece
+        pos = lc.pos[:, None]                                  # [B, 1]
+        q, k_new, v_new = attn.qkv(p["attn"], h, cfg, pos)
+        # append-first: the new token attends to itself through the cache
+        lc = kvcache.append_token(lc, spec, k_new[:, 0], v_new[:, 0], key=key)
+        o, mass = attn.decode_attention(q, lc, spec,
+                                        window=cfg.sliding_window,
+                                        dtype=cfg.dtype, q_pos=pos[:, 0])
+        lc = kvcache.accumulate_scores(lc, spec, mass, key=key)
+        B = x.shape[0]
+        x = x + L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+        new_piece = lc
+    else:
+        st: SSMState = cache_piece
+        o, st = ssm_lib.mamba2_decode_step(p["ssm"], h, st, cfg)
+        x = x + o
+        new_piece = st
+    x = _cross_attend(p, x, memory_kv, cfg)
+    x, _ = _ffn(p, x, cfg)
+    return x, new_piece

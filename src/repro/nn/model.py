@@ -1,0 +1,348 @@
+"""The LM: init / train_forward / prefill / decode_step over any assigned
+architecture.
+
+Layers are organized into **superblocks** of size
+``lcm(attn_layer_period, moe.layer_period)`` (1 for uniform models, 8 for
+Jamba) and the model scans over superblocks with stacked params — one HLO
+body regardless of depth, which keeps 512-device dry-run compiles fast.
+Within a superblock, sublayer kinds (attn|ssm × dense|moe) are unrolled
+statically.
+
+The decode cache is a `ModelCache`: compressed `LayerKV` stacks for
+attention layers (the survey's subject), `SSMState` stacks for Mamba
+layers, and static cross-attention memory for enc-dec.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as kvcache
+from repro.core.cache import CacheSpec, LayerKV, SSMState
+from repro.nn import blocks as B
+from repro.nn import layers as L
+from repro.nn import ssm as ssm_lib
+
+Array = jax.Array
+
+
+class ModelCache(NamedTuple):
+    attn: Any        # LayerKV, leaves [n_sb, nA, ...] (None if no attn layers)
+    ssm: Any         # SSMState, leaves [n_sb, nS, ...] (None if none)
+    cross_k: Any     # [L, B, Ts, Hkv, D] enc-dec only, else None
+    cross_v: Any
+    cross_bias: Any  # [B, Ts]
+
+
+class TrainAux(NamedTuple):
+    lb_loss: Array
+    z_loss: Array
+
+
+# ---------------------------------------------------------------------------
+# Superblock layout
+# ---------------------------------------------------------------------------
+
+
+def sb_layout(cfg):
+    """Returns (sb, n_sb, kinds) where kinds[i] = (mixer_kind, ffn_kind)."""
+    p1 = cfg.attn_layer_period if cfg.attn_layer_period > 0 else 1
+    p2 = cfg.moe.layer_period if cfg.is_moe else 1
+    sb = math.lcm(p1, p2)
+    assert cfg.num_layers % sb == 0, (cfg.num_layers, sb)
+    kinds = [(cfg.layer_kind(i), cfg.ffn_kind(i)) for i in range(sb)]
+    return sb, cfg.num_layers // sb, kinds
+
+
+def attn_positions(cfg):
+    sb, n_sb, kinds = sb_layout(cfg)
+    return [i for i, (k, _) in enumerate(kinds) if k == "attn"]
+
+
+def ssm_positions(cfg):
+    sb, n_sb, kinds = sb_layout(cfg)
+    return [i for i, (k, _) in enumerate(kinds) if k == "ssm"]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: Array, cfg) -> dict:
+    sb, n_sb, kinds = sb_layout(cfg)
+    keys = jax.random.split(key, 6)
+    params: dict = {
+        "embed": L.embedding_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                  cfg.dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    cross = cfg.is_encoder_decoder
+
+    def init_sb(k):
+        ks = jax.random.split(k, sb)
+        return {
+            f"sub{i}": B.block_init(ks[i], cfg, kinds[i][0], kinds[i][1],
+                                    cross=cross)
+            for i in range(sb)
+        }
+
+    params["blocks"] = jax.vmap(init_sb)(jax.random.split(keys[1], n_sb))
+    if not cfg.tie_embeddings:
+        params["head"] = L.linear_init(keys[2], cfg.d_model, cfg.vocab_size,
+                                       bias=False, dtype=cfg.dtype)
+    if cfg.is_encoder_decoder:
+        def init_enc(k):
+            return B.block_init(k, cfg, "attn", "dense")
+        params["enc_blocks"] = jax.vmap(init_enc)(
+            jax.random.split(keys[3], cfg.num_encoder_layers))
+        params["enc_norm"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+    return params
+
+
+def _logits(params, cfg, x: Array) -> Array:
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return L.linear(params["head"], x).astype(jnp.float32)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs; bidirectional over stubbed frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg, src_embeds: Array) -> Array:
+    """src_embeds: [B, Ts, d_model] from the stubbed modality frontend."""
+    def body(x, p):
+        x, _ = B.block_train(p, x, cfg, "attn", causal=False)
+        return x, None
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), src_embeds,
+                        params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_memory(params, cfg, memory: Array):
+    """Precompute per-decoder-layer cross K/V: [L, B, Ts, Hkv, D]."""
+    def per_layer(p):
+        return B.cross_kv(p, memory, cfg)
+    sb, n_sb, kinds = sb_layout(cfg)
+    assert sb == 1, "enc-dec assumes uniform decoder layers"
+    ks, vs = jax.vmap(per_layer)(
+        jax.tree.map(lambda a: a, params["blocks"]["sub0"]))
+    bias = jnp.zeros((memory.shape[0], memory.shape[1]), jnp.float32)
+    return ks, vs, bias
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+
+
+def train_forward(params, cfg, batch: dict):
+    """batch: {"tokens": [B, S]} (+ "src_embeds" [B, Ts, d] for enc-dec).
+    Returns (logits [B, S, V] f32, TrainAux)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    Bsz, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (Bsz, T))
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, batch["src_embeds"].astype(cfg.dtype))
+    sb, n_sb, kinds = sb_layout(cfg)
+
+    def body(carry, p_sb):
+        x, lb, zl = carry
+        for i in range(sb):
+            mk = None
+            if cfg.is_encoder_decoder:
+                k_, v_ = B.cross_kv(p_sb[f"sub{i}"], memory, cfg)
+                mk = (k_, v_, None)
+            x, aux = B.block_train(p_sb[f"sub{i}"], x, cfg, kinds[i][0],
+                                   positions=positions, memory_kv=mk)
+            lb, zl = lb + aux.lb_loss, zl + aux.z_loss
+        return (x, lb, zl), None
+
+    (x, lb, zl), _ = jax.lax.scan(_maybe_remat(cfg, body),
+                                  (x, jnp.zeros(()), jnp.zeros(())),
+                                  params["blocks"])
+    return _logits(params, cfg, x), TrainAux(lb, zl)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run the prompt, build the compressed cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, batch: dict, spec: CacheSpec, *,
+            layer_budgets: Optional[Array] = None,
+            key: Optional[Array] = None):
+    """Returns (last-token logits [B, V], ModelCache)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    Bsz, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (Bsz, T))
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps, sps = attn_positions(cfg), ssm_positions(cfg)
+
+    memory = None
+    cross = (None, None, None)
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, batch["src_embeds"].astype(cfg.dtype))
+        cross = _cross_memory(params, cfg, memory)
+
+    if key is None:
+        key = jax.random.key(0)
+    keys = jax.random.split(key, n_sb * max(len(aps), 1)).reshape(
+        n_sb, max(len(aps), 1))
+    if layer_budgets is None:
+        S_phys = spec.main_store_len(T)
+        layer_budgets = jnp.full((n_sb, max(len(aps), 1)), S_phys, jnp.int32)
+    else:
+        layer_budgets = jnp.asarray(layer_budgets, jnp.int32).reshape(
+            n_sb, max(len(aps), 1))
+
+    def body(x, xs):
+        p_sb, ks, buds = xs
+        attn_pieces, ssm_pieces = [], []
+        for i in range(sb):
+            mkv = None
+            if cfg.is_encoder_decoder:
+                k_, v_ = B.cross_kv(p_sb[f"sub{i}"], memory, cfg)
+                mkv = (k_, v_, None)
+            if kinds[i][0] == "attn":
+                j = aps.index(i)
+                x, _, piece = B.block_prefill(
+                    p_sb[f"sub{i}"], x, cfg, "attn", spec,
+                    positions=positions, logical_budget=buds[j],
+                    key=ks[j], memory_kv=mkv)
+                attn_pieces.append(piece)
+            else:
+                x, _, piece = B.block_prefill(
+                    p_sb[f"sub{i}"], x, cfg, "ssm", spec,
+                    positions=positions, memory_kv=mkv)
+                ssm_pieces.append(piece)
+        a = (jax.tree.map(lambda *xs: jnp.stack(xs), *attn_pieces)
+             if attn_pieces else None)
+        s = (jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_pieces)
+             if ssm_pieces else None)
+        return x, (a, s)
+
+    x, (attn_c, ssm_c) = jax.lax.scan(body, x,
+                                      (params["blocks"], keys, layer_budgets))
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, ModelCache(attn_c, ssm_c, *cross)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg, cache: ModelCache, token: Array,
+                spec: CacheSpec, *, key: Optional[Array] = None):
+    """token: [B, 1] int32. Returns (logits [B, V] f32, new ModelCache)."""
+    x = L.embed(params["embed"], token)
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps, sps = attn_positions(cfg), ssm_positions(cfg)
+    if key is None:
+        key = jax.random.key(0)
+    keys = jax.random.split(key, n_sb * max(len(aps), 1)).reshape(
+        n_sb, max(len(aps), 1))
+
+    has_cross = cache.cross_k is not None
+
+    def body(x, xs):
+        p_sb, a_sl, s_sl, ks, ck, cv = xs
+        attn_pieces, ssm_pieces = [], []
+        for i in range(sb):
+            mkv = None
+            if has_cross:
+                mkv = (ck, cv, cache.cross_bias)
+            if kinds[i][0] == "attn":
+                j = aps.index(i)
+                piece = jax.tree.map(lambda t: t[j], a_sl)
+                x, piece = B.block_decode(p_sb[f"sub{i}"], x, cfg, "attn",
+                                          spec, piece, key=ks[j],
+                                          memory_kv=mkv)
+                attn_pieces.append(piece)
+            else:
+                j = sps.index(i)
+                piece = jax.tree.map(lambda t: t[j], s_sl)
+                x, piece = B.block_decode(p_sb[f"sub{i}"], x, cfg, "ssm",
+                                          spec, piece, memory_kv=mkv)
+                ssm_pieces.append(piece)
+        a = (jax.tree.map(lambda *xs: jnp.stack(xs), *attn_pieces)
+             if attn_pieces else None)
+        s = (jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_pieces)
+             if ssm_pieces else None)
+        return x, (a, s)
+
+    cross_k = cache.cross_k if has_cross else jnp.zeros((n_sb, 0))
+    cross_v = cache.cross_v if has_cross else jnp.zeros((n_sb, 0))
+    x, (attn_c, ssm_c) = jax.lax.scan(
+        body, x, (params["blocks"], cache.attn, cache.ssm, keys,
+                  cross_k, cross_v))
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, ModelCache(attn_c, ssm_c, cache.cross_k, cache.cross_v,
+                              cache.cross_bias)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (serving init & dry-run specs)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, spec: CacheSpec, batch: int, max_len: int, *,
+               src_len: int = 0, as_spec: bool = False,
+               layer_budgets: Optional[Array] = None) -> ModelCache:
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps, sps = attn_positions(cfg), ssm_positions(cfg)
+    attn_c = ssm_c = None
+    if aps:
+        one = kvcache.stacked_kv(
+            spec, len(aps), batch, max_len, cfg.num_kv_heads, cfg.head_dim,
+            cfg.dtype, as_spec=as_spec)
+        if as_spec:
+            attn_c = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_sb, *s.shape), s.dtype), one)
+        else:
+            attn_c = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_sb, *x.shape)).copy(),
+                one)
+        if layer_budgets is not None:
+            lb = jnp.asarray(layer_budgets, jnp.int32).reshape(n_sb, len(aps))
+            if not as_spec:
+                attn_c = attn_c._replace(budget=lb)
+    if sps:
+        one = kvcache.init_ssm_state(
+            batch, ssm_lib.conv_dim(cfg), cfg.ssm.d_conv, cfg.ssm_heads,
+            cfg.ssm.head_dim, cfg.ssm.d_state, as_spec=as_spec,
+            dtype=cfg.dtype)
+        def stack2(s):
+            if as_spec:
+                return jax.ShapeDtypeStruct((n_sb, len(sps), *s.shape), s.dtype)
+            return jnp.broadcast_to(s[None, None],
+                                    (n_sb, len(sps), *s.shape)).copy()
+        ssm_c = jax.tree.map(stack2, one)
+    ck = cv = cb = None
+    if cfg.is_encoder_decoder and src_len > 0:
+        shape_k = (cfg.num_layers, batch, src_len, cfg.num_kv_heads,
+                   cfg.head_dim)
+        if as_spec:
+            ck = jax.ShapeDtypeStruct(shape_k, cfg.dtype)
+            cv = jax.ShapeDtypeStruct(shape_k, cfg.dtype)
+            cb = jax.ShapeDtypeStruct((batch, src_len), jnp.float32)
+        else:
+            ck = jnp.zeros(shape_k, cfg.dtype)
+            cv = jnp.zeros(shape_k, cfg.dtype)
+            cb = jnp.zeros((batch, src_len), jnp.float32)
+    return ModelCache(attn_c, ssm_c, ck, cv, cb)

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN with a top-k router.
+
+Primary path: **capacity-based sort dispatch** (GShard/Switch style, the
+production TPU formulation): tokens are sorted by expert id into an
+[E, capacity, d_model] buffer, each expert runs one dense matmul, results
+scatter back weighted by router probabilities. FLOPs are proportional to
+*active* params (top_k), and under GSPMD the gather/scatter over the
+token-sharded axis lowers to the MoE all-to-all.
+
+`moe_apply_dense` is the soft-dispatch reference (exact, no token
+dropping) used by small-E tests and as the oracle for the dispatch path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+Array = jax.Array
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: Array   # scalar
+    router_z_loss: Array       # scalar
+    expert_load: Array         # [E] fraction of routed mass per expert
+    drop_fraction: Array       # scalar — tokens dropped at capacity
+
+
+def moe_init(key, d_model: int, d_expert: int, num_experts: int, dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e = num_experts
+    init = L._init_dense
+    return {
+        "router": init(kr, (d_model, e), d_model, jnp.float32),
+        "gate": init(kg, (e, d_model, d_expert), d_model, dtype),
+        "up": init(ku, (e, d_model, d_expert), d_model, dtype),
+        "down": init(kd, (e, d_expert, d_model), d_expert, dtype),
+    }
+
+
+def _route(p, x, top_k):
+    logits = x.astype(jnp.float32) @ p["router"]             # [B, T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, top_vals, top_idx
+
+
+def _aux(logits, probs, top_idx, top_vals, E, drop_frac):
+    N = probs.shape[0] * probs.shape[1]
+    load = jnp.zeros((E,), jnp.float32).at[top_idx.reshape(-1)].add(
+        top_vals.reshape(-1)) / N
+    importance = probs.mean(axis=(0, 1))
+    lb = E * jnp.sum(load * importance)
+    zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return MoEAux(lb, zl, load, drop_frac)
+
+
+def moe_apply(
+    p: dict, x: Array, *, top_k: int, capacity_factor: float = 1.25,
+) -> tuple[Array, MoEAux]:
+    """Capacity-based sort dispatch. x: [B, T, d_model]."""
+    from repro.nn import sharding as shd
+    if shd.opt_enabled("weight_gather"):
+        # keep experts sharded over tp when divisible (kimi 384e), else
+        # tp stays on d_expert (mixtral 8e); either way the fsdp'd
+        # d_model dim is gathered at use.
+        E_ = p["gate"].shape[0]
+        if shd.tp_divides(E_):
+            spec_gu, spec_d = ("tp", None, None), ("tp", None, None)
+        else:
+            spec_gu, spec_d = (None, None, "tp"), (None, "tp", None)
+        p = {**p,
+             "gate": shd.constrain(p["gate"], *spec_gu),
+             "up": shd.constrain(p["up"], *spec_gu),
+             "down": shd.constrain(p["down"], *spec_d)}
+    B, T, Dm = x.shape
+    E = p["router"].shape[1]
+    logits, probs, top_vals, top_idx = _route(p, x, top_k)
+
+    N = B * T
+    A = N * top_k                                   # assignments
+    cap = max(-(-A * capacity_factor // E), 1)
+    cap = int(min(cap, A))                          # never beyond drop-free
+    x_flat = x.reshape(N, Dm)
+    flat_e = top_idx.reshape(A)                     # token-major assignments
+    flat_w = top_vals.reshape(A)
+
+    order = jnp.argsort(flat_e, stable=True)        # [A]
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank = jnp.arange(A) - starts[sorted_e]
+    keep = rank < cap
+    rank_c = jnp.minimum(rank, cap - 1)
+    tok = order // top_k
+
+    xs = jnp.where(keep[:, None], x_flat[tok], 0).astype(x.dtype)
+    buf = jnp.zeros((E, cap, Dm), x.dtype).at[sorted_e, rank_c].add(xs)
+    if shd.opt_enabled("moe_ep_dispatch") and shd.tp_divides(E):
+        # expert-parallel dispatch (§Perf): pin the expert buffer to the
+        # tp axis so the scatter lowers to a token all-to-all instead of
+        # gathering expert weights per token
+        buf = shd.constrain(buf, "tp", None, None)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])  # [E, cap, Dm]
+
+    y_sorted = y_buf[sorted_e, rank_c]              # [A, Dm]
+    w_sorted = jnp.where(keep, flat_w[order], 0.0)
+    out = jnp.zeros((N, Dm), jnp.float32).at[tok].add(
+        y_sorted.astype(jnp.float32) * w_sorted[:, None])
+
+    drop_frac = 1.0 - keep.mean()
+    aux = _aux(logits, probs, top_idx, top_vals, E, drop_frac)
+    return out.reshape(B, T, Dm).astype(x.dtype), aux
+
+
+def moe_apply_dense(p: dict, x: Array, *, top_k: int) -> tuple[Array, MoEAux]:
+    """Soft-dispatch reference: every expert sees every token, masked by the
+    combine weights. Exact (no drops); FLOPs ∝ E — tests/oracle only."""
+    B, T, Dm = x.shape
+    E = p["router"].shape[1]
+    logits, probs, top_vals, top_idx = _route(p, x, top_k)
+    combine = jnp.sum(
+        jax.nn.one_hot(top_idx, E, dtype=jnp.float32) * top_vals[..., None],
+        axis=2)                                      # [B, T, E]
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("btd,edf->btef", xf, p["gate"].astype(jnp.float32))
+    u = jnp.einsum("btd,edf->btef", xf, p["up"].astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    h = h * combine[..., None]
+    y = jnp.einsum("btef,efd->btd", h, p["down"].astype(jnp.float32))
+    aux = _aux(logits, probs, top_idx, top_vals, E, jnp.asarray(0.0))
+    return y.astype(x.dtype), aux

@@ -1,0 +1,267 @@
+"""Parameter/activation partition rules (GSPMD logical-axis style).
+
+Two logical axes:
+  * ``fsdp`` — parameter shards over the data(-and-pod) mesh axes
+    (MaxText-style fully-sharded data parallel);
+  * ``tp``   — tensor parallel over the "model" mesh axis (attention heads
+    via the fused head*dim projection dim, FFN hidden, experts, vocab).
+
+Rules are matched on parameter *path names*, then left-padded with None
+for stacked leading dims (superblock / encoder-layer stacks). Non-divisible
+cases (qwen's 40 heads on 16-way tp) are legal: GSPMD pads (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (the §Perf lever): when active, the model
+# inserts with_sharding_constraint hints at known-hot points. Inactive
+# (the default, e.g. CPU tests) every hook is a no-op.
+#
+# Options:
+#   kv_replicated  — replicate K/V over the tp axis after projection
+#                    (GQA kv_heads < tp otherwise forces GSPMD to shard
+#                    head_dim, making QK^T a partial-sum with a
+#                    score-sized all-reduce: TB-scale in train_4k).
+#   weight_gather  — ZeRO-3 style: constrain weights at use to be
+#                    unsharded on the fsdp axis, so XLA all-gathers the
+#                    (small) weight shards instead of all-reducing
+#                    (huge) activation partial-sums over the fsdp axis.
+#   seq_tp_cache   — decode: shard the cache *length* over the tp axis
+#                    (flash-decode / DistAttention style); softmax
+#                    reductions become tiny accumulator all-reduces.
+# ---------------------------------------------------------------------------
+
+_ACTIVE: dict | None = None
+
+
+class activation_sharding:
+    def __init__(self, mesh: Mesh, opts: set[str] | frozenset[str] = frozenset()):
+        self.ctx = {"mesh": mesh, "opts": frozenset(opts)}
+
+    def __enter__(self):
+        global _ACTIVE
+        self._prev = _ACTIVE
+        _ACTIVE = self.ctx
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE
+        _ACTIVE = self._prev
+
+
+def opt_enabled(name: str) -> bool:
+    return _ACTIVE is not None and name in _ACTIVE["opts"]
+
+
+def tp_divides(n: int) -> bool:
+    if _ACTIVE is None:
+        return False
+    _, tp = mesh_axes(_ACTIVE["mesh"])
+    return n % axis_size(_ACTIVE["mesh"], tp) == 0
+
+
+def constrain(x, *entries):
+    """with_sharding_constraint against the active mesh; logical entries:
+    "fsdp" | "tp" | None (axes that do not divide are dropped)."""
+    if _ACTIVE is None:
+        return x
+    mesh = _ACTIVE["mesh"]
+    fsdp, tp = mesh_axes(mesh)
+    resolved = tuple(fsdp if e == "fsdp" else tp if e == "tp" else e
+                     for e in entries)
+    spec = fit_spec(P(*resolved), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def mesh_axes(mesh: Mesh):
+    """Returns (fsdp_axes, tp_axis) given a production mesh."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return (("pod", "data"), "model")
+    return (("data",), "model")
+
+
+# rule: (path regex, spec for the *trailing* dims of the leaf)
+def _rules(fsdp, tp, expert_axis_tp: bool):
+    F, T = fsdp, tp
+    return [
+        (r"embed/table$", (T, F)),
+        (r"head/w$", (F, T)),
+        (r"moe/router$", (F, None)),
+        (r"moe/(gate|up)$", (T, F, None) if expert_axis_tp else (None, F, T)),
+        (r"moe/down$", (T, None, F) if expert_axis_tp else (None, T, F)),
+        (r"(wq|wk|wv)/w$", (F, T)),
+        (r"(wq|wk|wv)/b$", (T,)),
+        (r"wo/w$", (T, F)),
+        (r"wo/b$", (F,)),
+        (r"mlp/(gate|up)/w$", (F, T)),
+        (r"mlp/(gate|up)/b$", (T,)),
+        (r"mlp/down/w$", (T, F)),
+        (r"mlp/down/b$", (F,)),
+        (r"ssm/in_proj/w$", (F, T)),
+        (r"ssm/out_proj/w$", (T, F)),
+        (r"ssm/conv_w$", (None, T)),
+        (r"ssm/conv_b$", (T,)),
+        (r"ssm/norm/scale$", (T,)),
+        (r"ssm/(A_log|D|dt_bias)$", (None,)),
+        (r"norm\w*/(scale|bias)$", (None,)),
+    ]
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that do not divide the corresponding dim evenly
+    (explicit jit input shardings require exact divisibility; the dropped
+    dims are replicated instead — DESIGN.md §3)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params: Any, cfg, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching `params`."""
+    fsdp, tp = mesh_axes(mesh)
+    if opt_enabled("pure_fsdp"):
+        # ZeRO-3 layout (§Perf): every mesh axis is data-parallel; params
+        # shard over all of them on their fsdp dim, no tensor parallelism.
+        # Megatron activation all-reduces disappear; the cost moves to
+        # per-layer weight all-gathers (params bytes, not activation
+        # bytes) + gradient reduce-scatter.
+        fsdp = tuple(fsdp) + ((tp,) if isinstance(tp, str) else tuple(tp))
+        tp = None
+    tp_size = axis_size(mesh, tp)
+    expert_axis_tp = cfg.is_moe and cfg.moe.num_experts % tp_size == 0
+    rules = _rules(fsdp, tp, expert_axis_tp)
+
+    # serving layout (§Perf "params_tp_only"): replicate over the fsdp
+    # axes — decode must not all-gather FSDP'd params every step
+    tp_only = opt_enabled("params_tp_only")
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        for pat, trailing in rules:
+            if re.search(pat, ps):
+                pad = leaf.ndim - len(trailing)
+                assert pad >= 0, (ps, leaf.shape, trailing)
+                t = tuple(None if (tp_only and e == fsdp) else e
+                          for e in trailing)
+                return fit_spec(P(*((None,) * pad + t)), leaf.shape, mesh)
+        # default: replicate (small tensors)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(params: Any, cfg, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh) -> P:
+    fsdp, _ = mesh_axes(mesh)
+    return P(fsdp)  # batch over ("pod","data") / ("data",)
+
+
+def cache_pspecs(cache: Any, mesh: Mesh, *, shard_seq: bool = False,
+                 seq_tp: bool = False, dp_only: bool = False) -> Any:
+    """PartitionSpec pytree for a `ModelCache`.
+
+    Default: batch over the fsdp axes, kv-heads over tp.
+    ``shard_seq=True`` (long-context decode, batch=1): the *cache length*
+    axis shards over "data" instead — the DistAttention-style distributed
+    KV cache (survey §5) — and batch is replicated.
+    ``seq_tp=True`` (§Perf flash-decode sharding): cache length shards
+    over the tp axis (batch stays on fsdp); softmax reductions become
+    accumulator-sized all-reduces instead of head_dim partial-sums.
+    """
+    from repro.core.cache import LayerKV, SSMState
+
+    fsdp, tp = mesh_axes(mesh)
+    dp = fsdp
+    b = None if shard_seq else dp       # batch axis sharding
+    s = tp if seq_tp else ("data" if shard_seq else None)
+    if dp_only:                          # §Perf: replicate small budgeted
+        s = None                         # caches over tp (no resharding
+    tp_size = axis_size(mesh, tp)        # around the update scatters)
+
+    def kv_hd(n_heads: int):
+        """Shard kv-heads over tp when divisible, else head_dim (GQA kv=8
+        on 16-way tp: the fused dim is what real TP shards anyway)."""
+        if seq_tp or dp_only:
+            return (None, None)          # tp elsewhere (seq) or nowhere
+        return (tp, None) if n_heads % tp_size == 0 else (None, tp)
+
+    def layerkv_specs(lk: "LayerKV", nlead: int) -> "LayerKV":
+        pre = (None,) * nlead
+        h, d = kv_hd(lk.k.shape[nlead + 2])
+
+        def mk(leaf, *rest):
+            return fit_spec(P(*pre, *rest), leaf.shape, mesh)
+
+        return LayerKV(
+            k=mk(lk.k, b, s, h, d), v=mk(lk.v, b, s, h, d),
+            k_scale=mk(lk.k_scale, b, s, h, d),
+            k_zero=mk(lk.k_zero, b, s, h, d),
+            v_scale=mk(lk.v_scale, b, s, h), v_zero=mk(lk.v_zero, b, s, h),
+            rk=mk(lk.rk, b, None, h, d), rv=mk(lk.rv, b, None, h, d),
+            r_scores=mk(lk.r_scores, b, None), scores=mk(lk.scores, b, s),
+            slot_pos=mk(lk.slot_pos, b, s),
+            length=mk(lk.length, b), rlen=mk(lk.rlen, b), pos=mk(lk.pos, b),
+            budget=P(),
+        )
+
+    def ssm_specs(st: "SSMState", nlead: int) -> "SSMState":
+        pre = (None,) * nlead
+        return SSMState(
+            conv=fit_spec(P(*pre, b, None, tp), st.conv.shape, mesh),
+            state=fit_spec(P(*pre, b, tp, None, None), st.state.shape, mesh),
+        )
+
+    attn = (layerkv_specs(cache.attn, 2) if cache.attn is not None else None)
+    ssm = ssm_specs(cache.ssm, 2) if cache.ssm is not None else None
+    ck = cv = cb = None
+    if cache.cross_k is not None:
+        h, d = kv_hd(cache.cross_k.shape[3])
+        ck = fit_spec(P(None, b, s, h, d), cache.cross_k.shape, mesh)
+        cv = fit_spec(P(None, b, s, h, d), cache.cross_v.shape, mesh)
+        cb = fit_spec(P(b, s), cache.cross_bias.shape, mesh)
+    from repro.nn.model import ModelCache
+    return ModelCache(attn, ssm, ck, cv, cb)

@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) mixer.
+
+Chunked dual form for train/prefill (quadratic within chunks, linear
+recurrence across chunks) and the O(1)-state recurrent step for decode.
+The decode state (`repro.core.cache.SSMState`) is the attention-free
+analogue of the KV cache — constant in sequence length, which is the
+survey's structural endpoint for cache compression (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import SSMState
+from repro.nn import layers as L
+
+Array = jax.Array
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+
+
+def ssm_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    d_in = cfg.d_inner
+    G, N, H = cfg.ssm.n_groups, cfg.ssm.d_state, cfg.ssm_heads
+    cdim = conv_dim(cfg)
+    d_proj = 2 * d_in + 2 * G * N + H   # z, x, B, C, dt
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (H,), jnp.float32)
+        * (math.log(cfg.ssm.dt_max) - math.log(cfg.ssm.dt_min))
+        + math.log(cfg.ssm.dt_min)
+    )
+    return {
+        "in_proj": L.linear_init(ks[0], cfg.d_model, d_proj, bias=False,
+                                 dtype=cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.d_conv, cdim), jnp.float32)
+                   / math.sqrt(cfg.ssm.d_conv)).astype(cfg.dtype),
+        "conv_b": jnp.zeros((cdim,), cfg.dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), cfg.dtype)},
+        "out_proj": L.linear_init(ks[5], d_in, cfg.d_model, bias=False,
+                                  dtype=cfg.dtype),
+    }
+
+
+def _split_proj(cfg, proj: Array):
+    d_in = cfg.d_inner
+    G, N, H = cfg.ssm.n_groups, cfg.ssm.d_state, cfg.ssm_heads
+    z, xBC, dt = jnp.split(proj, [d_in, d_in + d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array,
+                 init_state: Optional[Array] = None):
+    """xBC: [B, T, C]; depthwise causal conv of width K = w.shape[0].
+    Returns (activated output [B,T,C], final conv state [B, K-1, C])."""
+    Bsz, T, C = xBC.shape
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, K - 1, C), xBC.dtype)
+    xp = jnp.concatenate([init_state, xBC], axis=1)          # [B, T+K-1, C]
+    out = jnp.zeros((Bsz, T, C), jnp.float32)
+    for i in range(K):  # K is tiny (4): unrolled taps
+        out = out + xp[:, i:i + T].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = xp[:, T:]                                    # last K-1 inputs
+    return jax.nn.silu(out).astype(xBC.dtype), new_state
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B_: Array, C_: Array,
+                chunk: int, init_state: Optional[Array] = None):
+    """SSD dual form.
+
+    x: [B, T, H, P]; dt: [B, T, H] (post-softplus); A: [H] (negative);
+    B_, C_: [B, T, G, N] (groups broadcast over heads).
+    Returns (y [B, T, H, P], final_state [B, H, P, N]).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    T_orig = T
+    if T % chunk:  # zero-pad: dt=0 at padded steps is a no-op in the SSD
+        pad = chunk - T % chunk
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, B_, C_ = padt(x), padt(dt), padt(B_), padt(C_)
+        T = T + pad
+    n = T // chunk
+
+    Bh = jnp.repeat(B_, rep, axis=2)                         # [B, T, H, N]
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    def r(t):  # chunkify: [B, T, ...] -> [B, n, L, ...]
+        return t.reshape(Bsz, n, chunk, *t.shape[2:])
+
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bh), r(Ch)
+    a = dtc * A[None, None, None, :]                         # [B, n, L, H]
+    cum = jnp.cumsum(a, axis=2)                              # within chunk
+
+    # intra-chunk (dual/attention-like form)
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]                      # [L, L]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,c,L,S,H]
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bclhn,bcshn->bclsh", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                  # [B,c,L,S,H]
+    att = cb * decay * dtc[:, :, None, :, :]                 # weight dt[s]
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", att, xc.astype(jnp.float32))
+
+    # per-chunk state contribution: sum_s exp(cum_L - cum_s) dt_s B_s x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                  # [B, c, L, H]
+    sc = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                    (tail * dtc).astype(jnp.float32),
+                    Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # [B, n, H]
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(s, inp):
+        dec, contrib = inp                                   # [B,H], [B,H,P,N]
+        s_out = s                                            # state *before*
+        s = s * dec[:, :, None, None] + contrib
+        return s, s_out
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)                  # [n, B, H]
+    sc_t = jnp.moveaxis(sc, 1, 0)                            # [n, B, H, P, N]
+    final_state, prev_states = jax.lax.scan(step, init_state, (dec_t, sc_t))
+    prev = jnp.moveaxis(prev_states, 0, 1)                   # [B, n, H, P, N]
+
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                         Cc.astype(jnp.float32), prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)[:, :T_orig]
+    return y, final_state
+
+
+def mamba2_forward(p: dict, x: Array, cfg,
+                   state: Optional[SSMState] = None):
+    """Full-sequence mixer (train/prefill). x: [B, T, d_model].
+    Returns (out [B, T, d_model], final SSMState)."""
+    Bsz, T, _ = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm.head_dim
+    G, N = cfg.ssm.n_groups, cfg.ssm.d_state
+    z, xBC, dt = _split_proj(cfg, L.linear(p["in_proj"], x))
+    conv_init = state.conv if state is not None else None
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_init)
+    xs, B_, C_ = jnp.split(xBC, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    xs = xs.reshape(Bsz, T, H, P)
+    B_ = B_.reshape(Bsz, T, G, N)
+    C_ = C_.reshape(Bsz, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_init_state = state.state if state is not None else None
+    y, fin = ssd_chunked(xs, dt, A, B_, C_, min(cfg.ssm.chunk_size, T),
+                         init_state=ssm_init_state)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, T, cfg.d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                  cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    return out, SSMState(conv=conv_state, state=fin)
+
+
+def mamba2_decode_step(p: dict, x: Array, state: SSMState, cfg):
+    """One-token recurrent step. x: [B, 1, d_model] -> (y, new state)."""
+    Bsz = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm.head_dim
+    G, N = cfg.ssm.n_groups, cfg.ssm.d_state
+    z, xBC, dt = _split_proj(cfg, L.linear(p["in_proj"], x[:, 0]))
+
+    # conv ring: state.conv holds last K-1 inputs
+    K = p["conv_w"].shape[0]
+    win = jnp.concatenate([state.conv, xBC[:, None]], axis=1)   # [B, K, C]
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC_t = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xs, B_, C_ = jnp.split(xBC_t, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    xs = xs.reshape(Bsz, H, P)
+    B_ = jnp.repeat(B_.reshape(Bsz, G, N), H // G, axis=1)      # [B, H, N]
+    C_ = jnp.repeat(C_.reshape(Bsz, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                # [B, H]
+    s = state.state * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, B_.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", C_.astype(jnp.float32), s)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, cfg.d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"],
+                  y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                  cfg.norm_eps)
+    return L.linear(p["out_proj"], y)[:, None], SSMState(new_conv, s)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import cosine_schedule, wsd_schedule  # noqa: F401

@@ -1,0 +1,76 @@
+"""Optimizers as pure functions over pytrees (no optax dependency).
+
+AdamW with decoupled weight decay; moments stored in f32 regardless of
+param dtype (mixed-precision training convention). Optimizer state
+shards exactly like the params (same tree structure -> same
+PartitionSpecs), so FSDP covers the Adam moments too.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamState(NamedTuple):
+    step: Array
+    mu: Any       # first moment, f32
+    nu: Any       # second moment, f32
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    """Returns (init_fn, update_fn). update_fn(grads, state, params, lr)."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(f32, params),
+                         jax.tree.map(f32, params))
+
+    def update(grads, state: AdamState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, n, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            n = b2 * n + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            nhat = n / c2
+            u = mhat / (jnp.sqrt(nhat) + eps)
+            if weight_decay and p.ndim >= 2:   # no decay on norms/biases
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr * u, m, n
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_n = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p in
+               zip(flat_g, flat_m, flat_n, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, AdamState(step, mu, nu)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn

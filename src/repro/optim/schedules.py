@@ -1,0 +1,30 @@
+"""LR schedules: cosine (default) and WSD (Warmup-Stable-Decay) — the
+MiniCPM schedule [arXiv:2404.06395] required by the minicpm-2b config."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01):
+    """MiniCPM WSD: linear warmup -> flat stable phase -> exponential-ish
+    decay over the last `decay` steps."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (final_frac ** t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak_lr, dec))
+    return lr

@@ -1,0 +1,72 @@
+"""Adaptive dynamic cache budgets — the survey's §7.2 future direction,
+implemented at the scheduler level (static shapes per bucket; the
+"dynamism" is bucket choice, DESIGN.md §7.1).
+
+Signal: prompts whose token distribution is low-entropy (repetitive,
+template-heavy) compress harder — heavy hitters dominate and a small
+budget retains quality; high-entropy prompts spread attention and need
+larger budgets. `choose_budget` maps normalized unigram entropy onto the
+configured bucket ladder; `AdaptiveEngine` keeps one compiled engine per
+bucket and routes request waves by signal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.policy import CompressionPolicy, presets
+from repro.serving.engine import Engine, GenerationResult
+
+
+def prompt_entropy(tokens: np.ndarray, vocab: int) -> float:
+    """Normalized unigram entropy in [0, 1]. tokens: [S]."""
+    _, counts = np.unique(tokens, return_counts=True)
+    p = counts / counts.sum()
+    h = -(p * np.log(p)).sum()
+    hmax = np.log(min(len(tokens), vocab))
+    return float(h / max(hmax, 1e-9))
+
+
+def choose_budget(tokens: np.ndarray, vocab: int,
+                  buckets: Sequence[int], lo: float = 0.55,
+                  hi: float = 0.85) -> int:
+    """Map entropy onto the bucket ladder: <=lo -> smallest,
+    >=hi -> largest, linear in between."""
+    e = prompt_entropy(tokens, vocab)
+    t = min(max((e - lo) / max(hi - lo, 1e-9), 0.0), 1.0)
+    idx = min(int(t * len(buckets)), len(buckets) - 1)
+    return int(buckets[idx])
+
+
+@dataclass
+class AdaptiveResult:
+    per_bucket: dict
+    budgets_chosen: list
+
+
+class AdaptiveEngine:
+    """Routes each request wave to a per-bucket compiled Engine."""
+
+    def __init__(self, cfg, params, *, buckets: Sequence[int],
+                 policy_name: str = "h2o", window: int = 16,
+                 prompt_len: int = 256, max_new: int = 16, slots: int = 4):
+        self.cfg = cfg
+        self.buckets = sorted(buckets)
+        self.engines = {
+            b: Engine(cfg, params,
+                      presets(budget=b, window=window)[policy_name],
+                      prompt_len=prompt_len, max_new=max_new, slots=slots)
+            for b in self.buckets
+        }
+
+    def generate(self, prompts: np.ndarray) -> AdaptiveResult:
+        chosen = [choose_budget(p, self.cfg.vocab_size, self.buckets)
+                  for p in prompts]
+        out: dict[int, GenerationResult] = {}
+        for b in self.buckets:
+            idx = [i for i, c in enumerate(chosen) if c == b]
+            if idx:
+                out[b] = self.engines[b].generate(prompts[idx])
+        return AdaptiveResult(per_bucket=out, budgets_chosen=chosen)

@@ -1,0 +1,21 @@
+"""Token samplers for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def greedy(logits: Array, key=None) -> Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(temp: float, top_k: int = 0):
+    def sample(logits: Array, key: Array) -> Array:
+        lg = logits / max(temp, 1e-4)
+        if top_k:
+            vals, _ = jax.lax.top_k(lg, top_k)
+            lg = jnp.where(lg < vals[..., -1:], -jnp.inf, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    return sample

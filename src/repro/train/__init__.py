@@ -1,0 +1,1 @@
+from repro.train.loop import make_train_step, loss_fn  # noqa: F401

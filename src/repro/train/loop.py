@@ -1,0 +1,71 @@
+"""Training loop: next-token CE + MoE aux losses, grad clip, AdamW.
+
+`make_train_step` builds the pure step function; `launch/train.py` wraps
+it in jit with FSDP×TP shardings for the production mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import model as M
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: Array
+
+
+class StepMetrics(NamedTuple):
+    loss: Array
+    ce_loss: Array
+    lb_loss: Array
+    z_loss: Array
+    grad_norm: Array
+    lr: Array
+
+
+def loss_fn(params, cfg, batch: dict):
+    """Next-token CE over batch["tokens"] (last-dim shift); returns
+    (loss, (ce, aux))."""
+    tokens = batch["tokens"]
+    inputs = {**batch, "tokens": tokens[:, :-1]}
+    logits, aux = M.train_forward(params, cfg, inputs)       # [B, S-1, V]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    ce = ce.mean()
+    total = ce
+    if cfg.is_moe:
+        total = (total + cfg.moe.router_aux_coef * aux.lb_loss
+                 + cfg.moe.router_z_coef * aux.z_loss)
+    return total, (ce, aux)
+
+
+def make_train_step(cfg, lr_schedule: Callable, *, max_grad_norm: float = 1.0,
+                    b1: float = 0.9, b2: float = 0.95,
+                    weight_decay: float = 0.1):
+    opt_init, opt_update = adamw(b1, b2, weight_decay=weight_decay)
+
+    def init_state(params) -> TrainState:
+        return TrainState(params, opt_init(params), jnp.zeros((), jnp.int32))
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch)
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(state.step)
+        updates, opt = opt_update(grads, state.opt, state.params, lr)
+        params = apply_updates(state.params, updates)
+        metrics = StepMetrics(loss, ce, aux.lb_loss, aux.z_loss, gn, lr)
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return init_state, train_step

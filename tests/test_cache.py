@@ -1,0 +1,182 @@
+"""Cache invariants: budgets hold, sinks survive, recency is protected,
+quantized ring flushes keep positions consistent. Includes hypothesis
+property tests over the eviction state machine."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core.cache import CacheSpec
+
+
+def _mk_layer(spec, B=2, S_p=64, H=2, D=16, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    k = jax.random.normal(ks[0], (B, S_p, H, D), jnp.float32)
+    v = jax.random.normal(ks[1], (B, S_p, H, D), jnp.float32)
+    mass = jax.random.uniform(ks[2], (B, S_p))
+    return C.compress_prompt(spec, k, v, mass, key=jax.random.key(9),
+                             dtype=jnp.float32), (k, v, mass)
+
+
+def test_prompt_compression_budget_and_sinks():
+    spec = CacheSpec(budget=16, sinks=4, policy="h2o", window=0, group=1,
+                     recent_protect=4)
+    lc, (k, v, mass) = _mk_layer(spec)
+    assert lc.k.shape[1] == 16
+    assert int(lc.length[0]) == 16
+    # sinks (positions 0..3) always selected
+    pos = np.asarray(lc.slot_pos)
+    for b in range(pos.shape[0]):
+        assert set(range(4)) <= set(pos[b].tolist())
+
+
+def test_prompt_compression_keeps_heavy_hitters():
+    spec = CacheSpec(budget=16, sinks=2, policy="h2o", window=0, group=1)
+    B, S_p = 1, 64
+    k = jnp.zeros((B, S_p, 2, 8))
+    v = jnp.zeros_like(k)
+    mass = jnp.zeros((B, S_p)).at[0, 30].set(10.0).at[0, 41].set(9.0)
+    lc = C.compress_prompt(spec, k, v, mass, dtype=jnp.float32)
+    pos = set(np.asarray(lc.slot_pos)[0].tolist())
+    assert {30, 41} <= pos
+
+
+def test_streaming_prompt_keeps_recent():
+    spec = CacheSpec(budget=16, sinks=2, policy="streaming", window=0, group=1)
+    lc, _ = _mk_layer(spec, S_p=64)
+    pos = np.asarray(lc.slot_pos)[0]
+    # most recent non-residual tokens kept
+    assert pos.max() == 63
+    assert (pos >= 48).sum() + 2 >= 16 - 2
+
+
+def test_decode_append_eviction_dense():
+    spec = CacheSpec(budget=8, sinks=2, policy="streaming", window=0, group=1,
+                     recent_protect=2)
+    B, H, D = 1, 2, 4
+    lc = C.init_layer_kv(spec, B, 8, H, D, jnp.float32)
+    lc = lc._replace(budget=jnp.asarray(8, jnp.int32))
+    for t in range(20):
+        kv = jnp.full((B, H, D), float(t))
+        lc = C.append_token(lc, spec, kv, kv)
+        assert int(lc.length[0]) <= 8
+        assert int(lc.pos[0]) == t + 1
+    pos = np.asarray(lc.slot_pos)[0]
+    assert 0 in pos and 1 in pos            # sinks survive 20 evictions
+    assert 19 in pos                        # newest present
+    assert (pos >= 0).all()
+
+
+def test_h2o_eviction_prefers_low_scores():
+    spec = CacheSpec(budget=8, sinks=0, policy="h2o", window=0, group=1,
+                     recent_protect=1)
+    B, H, D = 1, 1, 4
+    lc = C.init_layer_kv(spec, B, 8, H, D, jnp.float32)
+    lc = lc._replace(budget=jnp.asarray(8, jnp.int32))
+    for t in range(8):
+        kv = jnp.full((B, H, D), float(t))
+        lc = C.append_token(lc, spec, kv, kv)
+    # give slot 3 huge score, slot 5 tiny
+    scores = jnp.zeros((1, 8)).at[0, :].set(1.0).at[0, 3].set(50.0).at[0, 5].set(0.01)
+    lc = lc._replace(scores=scores)
+    lc = C.append_token(lc, spec, jnp.full((B, H, D), 99.0),
+                        jnp.full((B, H, D), 99.0))
+    pos = np.asarray(lc.slot_pos)[0]
+    assert 5 not in pos                     # lowest-score slot evicted
+    assert 3 in pos
+
+
+def test_quantized_ring_flush():
+    spec = CacheSpec(budget=16, window=4, sinks=0, bits=4, group=4,
+                     policy="streaming", recent_protect=2)
+    B, H, D = 1, 2, 8
+    lc = C.init_layer_kv(spec, B, 16, H, D, jnp.float32)
+    lc = lc._replace(budget=jnp.asarray(16, jnp.int32))
+    for t in range(12):
+        kv = jnp.full((B, H, D), float(t) / 10)
+        lc = C.append_token(lc, spec, kv, kv)
+    # 12 appends with W=4: flushes at t=4 and t=8 -> 8 in main, 4 in ring
+    assert int(lc.length[0]) == 8
+    assert int(lc.rlen[0]) == 4
+    assert int(lc.pos[0]) == 12
+    k, v, bias = C.materialize(lc, spec, jnp.float32)
+    valid = np.asarray(bias)[0] > -1.0
+    assert valid.sum() == 12
+    # dequantized values close to originals
+    kv_all = np.asarray(k)[0][valid]
+    expect = np.array(sorted([t / 10 for t in range(12)] * H * D))
+    np.testing.assert_allclose(np.sort(kv_all.ravel()), expect, atol=0.05)
+
+
+def test_packed_physical_bytes():
+    """Quantized cache stores include bit-packed codes: physical k/v bytes
+    = logical compressed bytes (bits/8 per element)."""
+    from repro.utils import tree_bytes
+    B, S, H, D = 1, 64, 2, 32
+    for bits, frac in ((8, 1.0), (4, 0.5), (2, 0.25)):
+        spec = CacheSpec(budget=S, window=8, sinks=0, bits=bits, group=8,
+                         policy="streaming")
+        lc = C.init_layer_kv(spec, B, S, H, D, jnp.float32)
+        assert lc.k.shape[-1] == int(D * bits / 8)
+        assert lc.k.nbytes == B * S * H * D * frac
+    full = C.init_layer_kv(CacheSpec(budget=S), B, S, H, D, jnp.bfloat16)
+    lc2 = C.init_layer_kv(CacheSpec(budget=S, window=8, sinks=0, bits=2,
+                                    group=8, policy="streaming"),
+                          B, S, H, D, jnp.bfloat16)
+    assert lc2.k.nbytes * 8 == full.k.nbytes  # 2-bit vs bf16 codes
+
+
+def test_packed_quantized_roundtrip_via_materialize():
+    """compress_prompt (packed) -> materialize recovers K within the
+    quantization bound."""
+    spec = CacheSpec(budget=32, window=8, sinks=0, bits=8, group=8,
+                     policy="streaming")
+    B, S_p, H, D = 1, 40, 2, 16
+    k = jax.random.normal(jax.random.key(0), (B, S_p, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(1), (B, S_p, H, D), jnp.float32)
+    mass = jnp.ones((B, S_p))
+    lc = C.compress_prompt(spec, k, v, mass, dtype=jnp.float32)
+    km, vm, bias = C.materialize(lc, spec, jnp.float32)
+    # residual ring holds the last 8 tokens exactly
+    np.testing.assert_allclose(np.asarray(km[:, 32:]),
+                               np.asarray(k[:, -8:]), atol=1e-6)
+    # main store: last kept token dequantizes within the 8-bit bound
+    valid = np.asarray(bias[0, :32]) > -1
+    sel = np.asarray(lc.slot_pos[0])[valid]
+    err = np.abs(np.asarray(km[0, :32][valid]) - np.asarray(k[0, sel]))
+    assert err.max() < float(lc.k_scale.max()) * 0.6 + 1e-4
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    budget=st.sampled_from([8, 16]),
+    sinks=st.integers(0, 3),
+    policy=st.sampled_from(["streaming", "h2o", "nacl"]),
+    n_appends=st.integers(1, 40),
+)
+def test_eviction_state_machine_properties(budget, sinks, policy, n_appends):
+    """Physical occupancy never exceeds budget; positions are unique and
+    within range; pos counts all appends."""
+    spec = CacheSpec(budget=budget, sinks=sinks, policy=policy, window=0,
+                     group=1, recent_protect=2, nacl_temperature=0.1)
+    B, H, D = 1, 1, 4
+    lc = C.init_layer_kv(spec, B, budget, H, D, jnp.float32)
+    lc = lc._replace(budget=jnp.asarray(budget, jnp.int32))
+    key = jax.random.key(0)
+    for t in range(n_appends):
+        key, k1 = jax.random.split(key)
+        kv = jnp.full((B, H, D), float(t))
+        lc = C.append_token(lc, spec, kv, kv, key=k1)
+        lc = C.accumulate_scores(
+            lc, spec, jax.random.uniform(k1, (B, budget)), key=k1)
+    assert int(lc.length[0]) == min(n_appends, budget)
+    assert int(lc.pos[0]) == n_appends
+    pos = np.asarray(lc.slot_pos)[0]
+    occ = pos[pos >= 0]
+    assert len(set(occ.tolist())) == len(occ)          # unique
+    assert occ.max(initial=-1) < n_appends
+    if n_appends > budget and sinks > 0:
+        assert set(range(min(sinks, budget))) <= set(occ.tolist())

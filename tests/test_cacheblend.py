@@ -1,0 +1,60 @@
+"""CacheBlend: recompute_frac=1 equals full prefill exactly; partial
+recompute beats pure chunk-reuse; selection always includes the query."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.cache import CacheSpec
+from repro.nn import model as M
+from repro.serving import cacheblend as CB
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=3)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _tokens(cfg, B=2, S=48, seed=1):
+    return jax.random.randint(jax.random.key(seed), (B, S), 0,
+                              cfg.vocab_size)
+
+
+def test_full_recompute_equals_prefill(model):
+    cfg, params = model
+    toks = _tokens(cfg)
+    spec = CacheSpec(budget=toks.shape[1] + 1)
+    lg_ref, _ = M.prefill(params, cfg, {"tokens": toks}, spec)
+    lg_cb, _, sel = CB.blend_prefill(params, cfg, toks, bounds=[0, 16, 32],
+                                     recompute_frac=1.0)
+    np.testing.assert_allclose(np.asarray(lg_cb), np.asarray(lg_ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_partial_beats_pure_reuse(model):
+    cfg, params = model
+    toks = _tokens(cfg, seed=2)
+    spec = CacheSpec(budget=toks.shape[1] + 1)
+    lg_ref, _ = M.prefill(params, cfg, {"tokens": toks}, spec)
+
+    def kl(lg):
+        pf = jax.nn.log_softmax(lg_ref, -1)
+        pc = jax.nn.log_softmax(lg, -1)
+        return float(jnp.mean(jnp.sum(jnp.exp(pf) * (pf - pc), -1)))
+
+    lg_reuse, _, _ = CB.blend_prefill(params, cfg, toks, bounds=[0, 16, 32],
+                                      recompute_frac=1.0 / 48)  # last tok only
+    lg_blend, _, _ = CB.blend_prefill(params, cfg, toks, bounds=[0, 16, 32],
+                                      recompute_frac=0.35)
+    assert kl(lg_blend) < kl(lg_reuse)
+
+
+def test_selection_includes_query(model):
+    cfg, params = model
+    toks = _tokens(cfg, seed=3)
+    _, _, sel = CB.blend_prefill(params, cfg, toks, bounds=[0, 24],
+                                 recompute_frac=0.2)
+    assert (np.asarray(sel)[:, -1] == toks.shape[1] - 1).all()

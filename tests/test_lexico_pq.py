@@ -1,0 +1,68 @@
+"""Lexico / PQCache reference math (survey [5], [31]): rate/distortion
+sanity + MIPS lookup correctness + LOOK-M modality ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lexico as LX
+from repro.core.eviction import lookm_scores, vq_token_mask
+
+
+def test_lexico_sparsity_monotone():
+    key = jax.random.key(0)
+    D = LX.make_dictionary(key, 256, 32)
+    x = jax.random.normal(jax.random.key(1), (64, 32))
+    errs = []
+    for s in (2, 4, 8):
+        code = LX.lexico_encode(x, D, s)
+        xh = LX.lexico_decode(code, D)
+        errs.append(float(jnp.mean(jnp.sum((x - xh) ** 2, -1))))
+    assert errs[0] > errs[1] > errs[2]
+    # compression: s=4 atoms of 32-dim vectors -> 16B vs 64B f32
+    assert LX.lexico_bytes_per_vector(4) == 16.0
+
+
+def test_pq_roundtrip_beats_random():
+    key = jax.random.key(2)
+    # clustered data so k-means has something to find
+    centers = jax.random.normal(key, (8, 32)) * 3
+    assign = jax.random.randint(jax.random.key(3), (256,), 0, 8)
+    x = centers[assign] + 0.1 * jax.random.normal(jax.random.key(4),
+                                                  (256, 32))
+    cb = LX.pq_train(jax.random.key(5), x, m=4, k=16)
+    codes = LX.pq_encode(cb, x)
+    assert codes.shape == (256, 4) and codes.dtype == jnp.uint8
+    xh = LX.pq_decode(cb, codes)
+    err = float(jnp.mean(jnp.sum((x - xh) ** 2, -1)))
+    base = float(jnp.mean(jnp.sum((x - x.mean(0)) ** 2, -1)))
+    assert err < base / 4
+
+
+def test_pq_mips_matches_exact():
+    key = jax.random.key(6)
+    x = jax.random.normal(key, (128, 32))
+    cb = LX.pq_train(jax.random.key(7), x, m=4, k=32, iters=12)
+    codes = LX.pq_encode(cb, x)
+    q = jax.random.normal(jax.random.key(8), (32,))
+    approx = LX.pq_mips_scores(cb, codes, q)
+    exact_on_decoded = LX.pq_decode(cb, codes) @ q
+    np.testing.assert_allclose(np.asarray(approx),
+                               np.asarray(exact_on_decoded), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_lookm_text_first():
+    mass = jnp.ones((1, 8))
+    is_img = jnp.array([[True, True, False, False, True, False, True,
+                         False]])
+    s = lookm_scores(mass, is_img)
+    # every text token outranks every image token at equal mass
+    assert float(s[0][~is_img[0]].min()) > float(s[0][is_img[0]].max())
+
+
+def test_vq_token_mask():
+    toks = jnp.array([[5, 100, 200, 300]])
+    m = vq_token_mask(toks, 100, 300)
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [[False, True, True, False]])

@@ -1,0 +1,92 @@
+"""Policy layer: presets well-formed, budget allocators conserve the
+global budget, KVSharer map properties, eviction merge helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import budgets as B
+from repro.core import eviction as EV
+from repro.core import sharing as SH
+from repro.core.policy import presets
+
+
+def test_presets_wellformed():
+    ps = presets(budget=512, window=128)
+    assert {"full", "streaming", "h2o", "nacl", "kivi2", "pyramid",
+            "h2o+kivi2"} <= set(ps)
+    for name, p in ps.items():
+        assert p.family
+        if p.spec.quantized:
+            assert p.spec.group == p.spec.window
+
+
+@pytest.mark.parametrize("alloc,kw", [
+    ("uniform", {}),
+    ("pyramid", {}),
+    ("squeeze", {"cos_sim": np.linspace(0.5, 0.99, 24)}),
+    ("zigzag", {"uncertainty": np.random.default_rng(0).uniform(size=24)}),
+])
+def test_allocators_conserve_budget(alloc, kw):
+    n, budget = 24, 512
+    out = B.ALLOCATORS[alloc](n, budget, multiple=64, **kw)
+    assert out.shape == (n,)
+    assert (out >= 64).all()
+    assert abs(out.sum() - n * budget) <= n * 64     # rounding slack
+    assert (out % 64 == 0).all()
+
+
+def test_pyramid_decays():
+    out = B.pyramid(16, 256, multiple=1)
+    assert out[0] > out[-1]
+
+
+def test_zigzag_tracks_uncertainty():
+    u = np.zeros(8); u[3] = 1.0
+    out = B.zigzag(8, 128, uncertainty=u, multiple=1)
+    assert out[3] == out.max()
+
+
+def test_kvsharer_map_properties():
+    rng = np.random.default_rng(0)
+    summaries = rng.standard_normal((12, 32))
+    m = SH.build_sharing_map(summaries, n_share=4)
+    assert len(m) == 4
+    for tgt, src in m.items():
+        assert tgt > src                     # deeper reuses shallower
+        assert src not in m                  # sources aren't shared
+    assert SH.shared_bytes_fraction(m, 12) == pytest.approx(8 / 12)
+
+
+def test_kvsharer_picks_dissimilar():
+    # two identical layers + two orthogonal ones: the orthogonal pair wins
+    a = np.ones((1, 8)); b = np.ones((1, 8))
+    c = np.zeros((1, 8)); c[0, 0] = 1
+    d = np.zeros((1, 8)); d[0, 1] = 1
+    summaries = np.concatenate([a, b, c, d])  # sim(0,1)=1, sim(2,3)=0
+    m = SH.build_sharing_map(summaries, n_share=1)
+    (tgt, src), = m.items()
+    assert {tgt, src} == {2, 3} or (tgt in (2, 3) and src < tgt)
+
+
+def test_merge_evicted_weighted_mean():
+    B_, S, H, D = 1, 4, 1, 2
+    k = jnp.arange(B_ * S * H * D, dtype=jnp.float32).reshape(B_, S, H, D)
+    keep = jnp.array([[True, False, False, True]])
+    w = jnp.array([[1.0, 3.0, 1.0, 1.0]])
+    kc, vc = EV.merge_evicted(k, k, keep, w)
+    expect = (3.0 * k[0, 1, 0] + 1.0 * k[0, 2, 0]) / 4.0
+    np.testing.assert_allclose(np.asarray(kc[0, 0]), np.asarray(expect),
+                               rtol=1e-6)
+
+
+def test_retrieval_head_scores():
+    B_, H, S = 1, 2, 16
+    pos = jnp.arange(S)[None]
+    mass = jnp.zeros((B_, H, S))
+    mass = mass.at[0, 0, :4].set(1.0)     # head 0: long-range
+    mass = mass.at[0, 1, -4:].set(1.0)    # head 1: local
+    frac = EV.retrieval_head_scores(mass, pos, window=8)
+    assert float(frac[0]) > 0.9 and float(frac[1]) < 0.1
+    buds = EV.razor_head_budgets(frac, 1024, 64)
+    assert int(buds[0]) == 1024 and int(buds[1]) == 64

@@ -1,0 +1,107 @@
+"""Quantization properties: error bounds, monotonicity in bits, KIVI
+layouts, GEAR strictly better than its base quant, QAQ bit budgets."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as Q
+
+
+def _x(shape, key=0, scale=3.0):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32) * scale
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_k_roundtrip_bound(bits):
+    k = _x((2, 64, 4, 16))
+    qz = Q.quantize_k_per_channel(k, bits, group=16)
+    deq = Q.dequantize_k_per_channel(qz, group=16, dtype=jnp.float32)
+    err = jnp.abs(deq - k)
+    bound = Q.quant_error_bound(
+        k.reshape(2, 4, 16, 4, 16), bits, axes=(-3,))
+    assert float(err.max()) <= float(bound.max()) + 1e-5
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_v_roundtrip_bound(bits):
+    v = _x((2, 64, 4, 16), key=1)
+    qz = Q.quantize_v_per_token(v, bits)
+    deq = Q.dequantize_v_per_token(qz, dtype=jnp.float32)
+    err = float(jnp.abs(deq - v).max())
+    bound = float(Q.quant_error_bound(v, bits, axes=(-1,)).max())
+    assert err <= bound + 1e-5
+
+
+def test_error_monotone_in_bits():
+    k = _x((1, 64, 2, 32), key=2)
+    errs = []
+    for bits in (2, 4, 8):
+        qz = Q.quantize_k_per_channel(k, bits, group=32)
+        deq = Q.dequantize_k_per_channel(qz, group=32, dtype=jnp.float32)
+        errs.append(float(jnp.mean(jnp.abs(deq - k))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_kivi_per_channel_beats_per_token_on_channel_outliers():
+    """KIVI's claim: K has channel outliers -> per-channel quantization
+    wins. Construct K with one huge channel."""
+    k = _x((1, 128, 2, 16), key=3, scale=1.0)
+    k = k.at[..., 0].mul(50.0)                       # channel outlier
+    per_chan = Q.quantize_k_per_channel(k, 4, group=128)
+    deq_c = Q.dequantize_k_per_channel(per_chan, group=128, dtype=jnp.float32)
+    per_tok = Q.quantize_v_per_token(k, 4)
+    deq_t = Q.dequantize_v_per_token(per_tok, dtype=jnp.float32)
+    # compare error on the NON-outlier channels (what per-token destroys)
+    err_c = float(jnp.mean(jnp.abs((deq_c - k)[..., 1:])))
+    err_t = float(jnp.mean(jnp.abs((deq_t - k)[..., 1:])))
+    assert err_c < err_t / 5
+
+
+def test_gear_lowrank_improves_on_base():
+    x = _x((2, 32, 64), key=4)
+    base = Q._minmax_quant(x, 2, axes=(-1,))
+    base_err = float(jnp.mean(jnp.abs(base.dequantize(jnp.float32) - x)))
+    g = Q.gear_compress(x, bits=2, rank=4, n_outliers=16,
+                        key=jax.random.key(5))
+    deq = Q.gear_decompress(g, x.shape, jnp.float32)
+    gear_err = float(jnp.mean(jnp.abs(deq - x)))
+    assert gear_err < base_err
+
+
+def test_qaq_bit_budget():
+    sens = jax.random.uniform(jax.random.key(6), (64,))
+    for budget in (3.0, 4.0, 6.0):
+        bits = Q.qaq_bit_allocation(sens, budget)
+        assert float(bits.mean()) <= budget + 0.6
+        # more sensitive -> never fewer bits
+        order = jnp.argsort(sens)
+        b_sorted = bits[order]
+        assert bool(jnp.all(jnp.diff(b_sorted) >= 0))
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    bits=st.sampled_from([2, 4, 8]),
+    group=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2 ** 16),
+    scale=st.floats(0.1, 100.0),
+)
+def test_quant_roundtrip_property(bits, group, seed, scale):
+    k = _x((1, 32, 2, 8), key=seed, scale=scale)
+    qz = Q.quantize_k_per_channel(k, bits, group=group)
+    deq = Q.dequantize_k_per_channel(qz, group=group, dtype=jnp.float32)
+    # per-group bound: scale/2 per element
+    assert float(jnp.max(jnp.abs(deq - k))) <= float(qz.scale.max()) / 2 + 1e-4
+
+
+def test_logical_bytes_accounting():
+    # 16-bit full vs 2-bit quantized ratio approaches 8x minus metadata
+    full = Q.kv_logical_bytes(4096, 8, 128, bits=16, group=64,
+                              residual_window=0)
+    b2 = Q.kv_logical_bytes(4096, 8, 128, bits=2, group=64,
+                            residual_window=128)
+    # full path with bits=16 counts codes at 16 bits
+    assert full / b2 > 4.0

@@ -1,0 +1,89 @@
+"""Serving engine integration + compression-quality invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.cache import CacheSpec
+from repro.core.policy import CompressionPolicy, presets
+from repro.nn import model as M
+from repro.serving import Engine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, L, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, L)).astype(np.int32)
+
+
+def test_engine_generates(small_model):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["streaming"]
+    eng = Engine(cfg, params, pol, prompt_len=64, max_new=8, slots=2)
+    res = eng.generate(_prompts(cfg, 2, 64))
+    assert res.tokens.shape == (2, 8)
+    assert res.decode_tokens_per_s > 0
+    assert res.compression_ratio > 1.0
+
+
+def test_full_budget_policy_equals_full_cache(small_model):
+    """Invariant: any eviction policy at budget >= seq_len reduces to exact
+    full attention."""
+    cfg, params = small_model
+    L, NEW = 48, 4
+    prompts = _prompts(cfg, 2, L, seed=1)
+
+    full = CompressionPolicy("full", CacheSpec())
+    big_h2o = CompressionPolicy(
+        "h2o_big", CacheSpec(budget=L + NEW, policy="h2o", window=0, group=1,
+                             recent_protect=4))
+    outs = []
+    for pol in (full, big_h2o):
+        eng = Engine(cfg, params, pol, prompt_len=L, max_new=NEW, slots=2)
+        outs.append(eng.generate(prompts).tokens)
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_quantized_engine_tracks_full(small_model):
+    """8-bit cache: greedy outputs mostly match full-precision cache."""
+    cfg, params = small_model
+    L, NEW = 64, 6
+    prompts = _prompts(cfg, 2, L, seed=2)
+    full = CompressionPolicy("full", CacheSpec())
+    int8 = presets(budget=L + NEW + 8 - (L + NEW + 8) % 8, window=8)["int8"]
+    eng_f = Engine(cfg, params, full, prompt_len=L, max_new=NEW, slots=2)
+    eng_q = Engine(cfg, params, int8, prompt_len=L, max_new=NEW, slots=2)
+    t_f = eng_f.generate(prompts).tokens
+    t_q = eng_q.generate(prompts).tokens
+    agree = (t_f == t_q).mean()
+    assert agree >= 0.5, f"int8 agreement too low: {agree}"
+
+
+def test_layer_budget_allocators_run(small_model):
+    cfg, params = small_model
+    for name in ("pyramid", "squeeze", "zigzag"):
+        pol = presets(budget=32, window=8)[name]
+        eng = Engine(cfg, params, pol, prompt_len=64, max_new=4, slots=2)
+        res = eng.generate(_prompts(cfg, 2, 64, seed=3))
+        assert np.isfinite(res.decode_tokens_per_s)
+        assert len(set(eng.layer_budgets.tolist())) >= 1
+
+
+def test_compression_ratio_reporting(small_model):
+    cfg, params = small_model
+    kivi2 = presets(budget=256, window=16)["kivi2"]
+    eng = Engine(cfg, params, kivi2, prompt_len=256, max_new=4, slots=2)
+    res = eng.generate(_prompts(cfg, 2, 256, seed=4))
+    # 2-bit whole-context cache: at group 16 the f32 per-channel scales
+    # cost as much as the 2-bit codes (8B/16tok/chan == 2b/tok/chan), so
+    # the honest ceiling here is ~3x — matching KIVI's own 2.6x
+    # "end-to-end" vs QAQ's 10x "codes-only" spread (EXPERIMENTS.md).
+    # Production group=128 reaches ~14x (see table2 analytic rows).
+    assert res.compression_ratio > 2.5

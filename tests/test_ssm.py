@@ -1,0 +1,80 @@
+"""Mamba2 SSD: chunked dual form == naive sequential recurrence, and the
+decode step continues the prefill state exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import ssm as S
+
+
+def naive_ssd(x, dt, A, B_, C_):
+    """Sequential oracle. x: [B,T,H,P], dt: [B,T,H], A: [H],
+    B_/C_: [B,T,G,N] -> y [B,T,H,P], final state [B,H,P,N]."""
+    Bsz, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bh = np.repeat(np.asarray(B_), rep, axis=2)
+    Ch = np.repeat(np.asarray(C_), rep, axis=2)
+    x, dt, A = np.asarray(x), np.asarray(dt), np.asarray(A)
+    h = np.zeros((Bsz, H, P, N))
+    ys = np.zeros((Bsz, T, H, P))
+    for t in range(T):
+        da = np.exp(dt[:, t] * A[None])                     # [B, H]
+        h = h * da[:, :, None, None] + np.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], Bh[:, t], x[:, t])
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Ch[:, t], h)
+    return ys, h
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (40, 16)])
+def test_ssd_chunked_matches_naive(T, chunk):
+    Bsz, H, P, G, N = 2, 4, 8, 2, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (Bsz, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, T, H)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (Bsz, T, G, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (Bsz, T, G, N)) * 0.3
+    y, fin = S.ssd_chunked(x, dt, A, B_, C_, chunk)
+    y2, fin2 = naive_ssd(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y), y2, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), fin2, atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_init_state_continuation():
+    """Splitting a sequence in two with state carry == one pass."""
+    Bsz, T, H, P, G, N, chunk = 1, 64, 2, 4, 1, 8, 16
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (Bsz, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, T, H)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (Bsz, T, G, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (Bsz, T, G, N)) * 0.3
+    y_full, fin_full = S.ssd_chunked(x, dt, A, B_, C_, chunk)
+    half = T // 2
+    y1, s1 = S.ssd_chunked(x[:, :half], dt[:, :half], A, B_[:, :half],
+                           C_[:, :half], chunk)
+    y2, s2 = S.ssd_chunked(x[:, half:], dt[:, half:], A, B_[:, half:],
+                           C_[:, half:], chunk, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(fin_full),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba2_decode_continues_prefill():
+    from repro.configs.base import get_config, reduced
+    from repro.nn import blocks as B
+    cfg = reduced(get_config("mamba2-130m"))
+    key = jax.random.key(2)
+    p = S.ssm_init(key, cfg)
+    Bsz, T = 2, 33
+    x = jax.random.normal(key, (Bsz, T, cfg.d_model), jnp.float32)
+    y_full, st_full = S.mamba2_forward(p, x, cfg)
+    y_pre, st = S.mamba2_forward(p, x[:, :-1], cfg)
+    y_last, st2 = S.mamba2_decode_step(p, x[:, -1:], st, cfg)
+    np.testing.assert_allclose(np.asarray(y_last[:, 0]),
+                               np.asarray(y_full[:, -1]), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st2.state),
+                               np.asarray(st_full.state), atol=2e-3)
