@@ -258,13 +258,26 @@ def select_victim(lc: LayerKV, spec: CacheSpec, key: Optional[Array]) -> Array:
     if spec.policy in ("none", "streaming"):
         # oldest evictable slot (sink+window streaming eviction)
         crit = jnp.where(evictable, lc.slot_pos, jnp.iinfo(jnp.int32).max)
-        return jnp.argmin(crit, axis=-1)
-    score = lc.scores
-    if spec.policy == "nacl" and spec.nacl_temperature > 0 and key is not None:
-        g = jax.random.gumbel(key, lc.scores.shape, jnp.float32)
-        score = score + spec.nacl_temperature * g
-    crit = jnp.where(evictable, score, jnp.inf)
-    return jnp.argmin(crit, axis=-1)
+        victim = jnp.argmin(crit, axis=-1)
+    else:
+        score = lc.scores
+        if spec.policy == "nacl" and spec.nacl_temperature > 0 and key is not None:
+            g = jax.random.gumbel(key, lc.scores.shape, jnp.float32)
+            score = score + spec.nacl_temperature * g
+        crit = jnp.where(evictable, score, jnp.inf)
+        victim = jnp.argmin(crit, axis=-1)
+    # Degenerate case (budget <= sinks + recent_protect): nothing is
+    # evictable, the criterion is constant, and argmin would return slot 0
+    # — silently clobbering a protected attention sink. Relax the recency
+    # protection instead: evict the oldest non-sink slot; if every occupied
+    # slot holds a sink, take the last physical slot rather than sink 0.
+    occupied = lc.slot_pos >= 0
+    non_sink = occupied & (lc.slot_pos >= spec.sinks)
+    fb_crit = jnp.where(non_sink, lc.slot_pos, jnp.iinfo(jnp.int32).max)
+    fallback = jnp.where(jnp.any(non_sink, axis=-1),
+                         jnp.argmin(fb_crit, axis=-1),
+                         lc.slot_pos.shape[-1] - 1)
+    return jnp.where(jnp.any(evictable, axis=-1), victim, fallback)
 
 
 def _put_rows(arr: Array, slot: Array, val: Array) -> Array:
@@ -272,6 +285,75 @@ def _put_rows(arr: Array, slot: Array, val: Array) -> Array:
     def one(a, s, v):
         return jax.lax.dynamic_update_slice_in_dim(a, v[None], s, axis=0)
     return jax.vmap(one)(arr, slot, val)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache surgery (continuous batching): one sequence enters or
+# leaves batch position `slot_idx` of a live stacked cache without
+# recompiling or reallocating the cache.
+# ---------------------------------------------------------------------------
+
+
+def _scatter_batch(dst: Array, src: Array, slot_idx, batch_axis: int) -> Array:
+    """Write `src` (size 1 at `batch_axis`) into `dst` at `slot_idx`."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, src.astype(dst.dtype), slot_idx, axis=batch_axis)
+
+
+def insert_request_tree(stacked, slot_idx, prefilled, *, batch_axis: int):
+    """Generic pytree scatter: every leaf of `prefilled` (batch 1 at
+    `batch_axis`) replaces batch position `slot_idx` of `stacked`."""
+    return jax.tree.map(
+        lambda d, s: _scatter_batch(d, s, slot_idx, batch_axis),
+        stacked, prefilled)
+
+
+def reset_slot_tree(stacked, slot_idx, *, batch_axis: int, fill=0.0):
+    """Generic pytree clear of batch position `slot_idx`."""
+    def z(d):
+        shape = list(d.shape)
+        shape[batch_axis] = 1
+        return jax.lax.dynamic_update_slice_in_dim(
+            d, jnp.full(shape, fill, d.dtype), slot_idx, axis=batch_axis)
+    return jax.tree.map(z, stacked)
+
+
+def insert_request(stacked: LayerKV, slot_idx, prefilled: LayerKV, *,
+                   batch_axis: int = 1) -> LayerKV:
+    """Scatter one request's prefilled LayerKV (batch size 1 at
+    `batch_axis`) into batch position `slot_idx` of a live stacked cache.
+
+    Every per-sequence leaf is written — main store K/V (dense or packed
+    codes), quantized scales/zeros, the residual ring, scores, slot
+    positions, lengths, ring lengths, absolute positions. `budget` is
+    per-layer state shared by all slots (no batch dim) and belongs to the
+    live cache, so it is left untouched. Works on `stacked_kv` output
+    (leading [n_layers] dim -> batch_axis=1) and on `ModelCache.attn`
+    leaves (leading [n_sb, nA] dims -> batch_axis=2)."""
+    upd = {
+        f: _scatter_batch(getattr(stacked, f), getattr(prefilled, f),
+                          slot_idx, batch_axis)
+        for f in LayerKV._fields if f != "budget"
+    }
+    return stacked._replace(**upd)
+
+
+def reset_slot(stacked: LayerKV, slot_idx, *, batch_axis: int = 1) -> LayerKV:
+    """Clear batch position `slot_idx` back to the empty-cache state:
+    zeroed stores/scales/ring/scores, slot_pos = -1, length/rlen/pos = 0.
+    The next occupant sees exactly what a fresh `init_layer_kv` provides."""
+    upd = {}
+    for f in LayerKV._fields:
+        if f == "budget":
+            continue
+        leaf = getattr(stacked, f)
+        shape = list(leaf.shape)
+        shape[batch_axis] = 1
+        fill = -1 if f == "slot_pos" else 0
+        upd[f] = jax.lax.dynamic_update_slice_in_dim(
+            leaf, jnp.full(shape, fill, leaf.dtype), slot_idx,
+            axis=batch_axis)
+    return stacked._replace(**upd)
 
 
 # ---------------------------------------------------------------------------
@@ -361,8 +443,23 @@ def append_token_quantized(
             r_scores=jnp.zeros_like(lc.r_scores),
         )
 
-    must_flush = jnp.all(lc.rlen >= W)
-    lc = jax.lax.cond(must_flush, flush, lambda c: c, lc)
+    # Per-row flush: under continuous batching, sequences in one stacked
+    # cache sit at different ring phases, so a batch-wide `jnp.all` gate
+    # would stall a full ring until its neighbours catch up (and the next
+    # append would clamp out of bounds, corrupting the newest ring slot).
+    # Flush exactly the rows whose ring is full; skip the work entirely
+    # when none is (the common wave-lockstep / mid-window case).
+    need = lc.rlen >= W                                   # [B]
+
+    def flush_rows(lc: LayerKV) -> LayerKV:
+        flushed = flush(lc)
+        def sel(f, o):
+            return jnp.where(need.reshape((-1,) + (1,) * (f.ndim - 1)), f, o)
+        upd = {fld: sel(getattr(flushed, fld), getattr(lc, fld))
+               for fld in LayerKV._fields if fld != "budget"}
+        return lc._replace(**upd)
+
+    lc = jax.lax.cond(jnp.any(need), flush_rows, lambda c: c, lc)
     # ring append at rlen
     lc = lc._replace(
         rk=_put_rows(lc.rk, lc.rlen, k_new.astype(lc.rk.dtype)),

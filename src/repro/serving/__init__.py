@@ -1,1 +1,10 @@
-from repro.serving.engine import Engine, GenerationResult  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousGenerationResult,
+    Engine,
+    GenerationResult,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    Request,
+    RequestResult,
+    Scheduler,
+)

@@ -1,30 +1,48 @@
 """Batched serving engine with first-class cache compression.
 
-Wave-based continuous batching over fixed shape buckets (static shapes —
-TPU discipline): requests are grouped into waves of `slots` sequences of
-one `prompt_len` bucket; each wave is one compiled prefill + N compiled
-decode steps. The compression policy is plumbed end-to-end: prompt
-compression at prefill, budgeted eviction / quantized ring flushes at
-decode, layer budgets from the policy's allocator.
+Two decode disciplines over the same compiled model functions (static
+shapes — TPU discipline):
 
-Reports the survey's comparison axes per wave: decode step time,
-logical + physical cache bytes, compression ratio vs full cache.
+  * **Wave-based** (`generate`): requests are grouped into waves of
+    `slots` sequences of one `prompt_len` bucket; each wave is one
+    compiled prefill + N compiled decode steps. Simple, but padded slots
+    burn full decode steps, finished sequences cannot exit early, and
+    slots are never reused across waves.
+
+  * **Continuous** (`generate_continuous`): one persistent `slots`-wide
+    stacked cache that requests are admitted into and retired from
+    *individually*. Prompts are bucketed (one compiled prefill per bucket
+    length), a finished sequence (EOS / max-new) frees its slot
+    mid-decode via per-slot cache surgery (`core.cache.insert_request` /
+    `reset_slot`), and the next queued request is prefilled straight into
+    the freed batch position — no recompilation, no reallocation. This is
+    what converts a compression policy's capacity win (more live
+    sequences per byte) into throughput.
+
+The compression policy is plumbed end-to-end either way: prompt
+compression at prefill, budgeted eviction / quantized ring flushes at
+decode, layer budgets from the policy's allocator. Reports the survey's
+comparison axes: decode step time, logical + physical cache bytes,
+compression ratio vs full cache, and (continuous) TTFT / per-token
+latency / slot occupancy.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import budgets as budgets_lib
+from repro.core import cache as kvcache
 from repro.core.cache import CacheSpec, cache_logical_bytes_per_layer
 from repro.core.policy import CompressionPolicy
 from repro.nn import model as M
 from repro.serving import sampler as sampler_lib
+from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.utils import tree_bytes
 
 
@@ -41,11 +59,44 @@ class GenerationResult:
     policy_name: str
 
 
+@dataclass
+class ContinuousGenerationResult:
+    results: List[RequestResult]  # sorted by uid; per-request tokens + latency
+    prefill_seconds: float
+    decode_seconds: float
+    decode_steps: int
+    decode_tokens: int            # useful tokens produced by decode steps
+    decode_tokens_per_s: float
+    occupancy: float              # mean active-slot fraction per decode step
+    ttft_mean_s: float
+    cache_physical_bytes: int     # resident slots-wide cache footprint
+    cache_logical_bytes: float
+    full_cache_bytes: float
+    compression_ratio: float
+    policy_name: str
+
+    def tokens_for(self, uid: int) -> np.ndarray:
+        for r in self.results:
+            if r.uid == uid:
+                return r.tokens
+        raise KeyError(uid)
+
+
 class Engine:
     def __init__(self, cfg, params, policy: CompressionPolicy, *,
-                 prompt_len: int, max_new: int, slots: int = 4,
+                 prompt_len: Optional[int] = None, max_new: int,
+                 slots: int = 4, buckets: Optional[Sequence[int]] = None,
                  sampler: Callable = sampler_lib.greedy,
                  allocator_signal: Optional[dict] = None, seed: int = 0):
+        if prompt_len is None and not buckets:
+            raise ValueError("need prompt_len and/or buckets")
+        self.buckets = (tuple(sorted({int(b) for b in buckets}))
+                        if buckets else (int(prompt_len),))
+        if prompt_len is None:
+            prompt_len = max(self.buckets)
+        if max(self.buckets) > prompt_len:
+            raise ValueError(f"bucket {max(self.buckets)} exceeds "
+                             f"prompt_len {prompt_len}")
         self.cfg, self.params, self.policy = cfg, params, policy
         self.prompt_len, self.max_new, self.slots = prompt_len, max_new, slots
         self.sampler = sampler
@@ -53,7 +104,8 @@ class Engine:
 
         spec = policy.spec
         if not spec.compressed:
-            # uncompressed baseline still needs decode headroom
+            # uncompressed baseline still needs decode headroom (sized for
+            # the largest bucket so every bucket shares one cache shape)
             spec = CacheSpec(budget=prompt_len + max_new, policy="none",
                              sinks=spec.sinks)
         self.spec = spec
@@ -79,7 +131,44 @@ class Engine:
             logits, cache = M.decode_step(p, cfg, cache, tok, self.spec, key=k)
             nxt = self.sampler(logits, k)
             return nxt, cache
-        self._decode = jax.jit(_step)
+        # donate the live cache through decode and slot surgery so XLA
+        # aliases it in place instead of copying every leaf per step /
+        # admission (donation is unimplemented on cpu and only warns there)
+        dn = jax.default_backend() != "cpu"
+        self._decode = jax.jit(_step, donate_argnums=(1,) if dn else ())
+
+        # per-slot cache surgery (continuous batching): one compile each,
+        # `slot` is a traced operand so every slot index reuses it
+        def _insert(cache: M.ModelCache, pc: M.ModelCache, slot):
+            attn = (kvcache.insert_request(cache.attn, slot, pc.attn,
+                                           batch_axis=2)
+                    if cache.attn is not None else None)
+            ssm = (kvcache.insert_request_tree(cache.ssm, slot, pc.ssm,
+                                              batch_axis=2)
+                   if cache.ssm is not None else None)
+            return M.ModelCache(attn, ssm, cache.cross_k, cache.cross_v,
+                                cache.cross_bias)
+
+        def _reset(cache: M.ModelCache, slot):
+            attn = (kvcache.reset_slot(cache.attn, slot, batch_axis=2)
+                    if cache.attn is not None else None)
+            ssm = (kvcache.reset_slot_tree(cache.ssm, slot, batch_axis=2)
+                   if cache.ssm is not None else None)
+            return M.ModelCache(attn, ssm, cache.cross_k, cache.cross_v,
+                                cache.cross_bias)
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,) if dn else ())
+        self._reset = jax.jit(_reset, donate_argnums=(0,) if dn else ())
+
+    # ------------------------------------------------------------------
+    def _logical_bytes_per_seq(self) -> float:
+        """Per-sequence logical cache bytes under the layer budgets."""
+        return sum(
+            cache_logical_bytes_per_layer(
+                self.spec, self.prompt_len + self.max_new,
+                self.cfg.num_kv_heads, self.cfg.head_dim)
+            * (lb / max(self.spec.budget, 1))
+            for lb in self.layer_budgets)
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray,
@@ -123,22 +212,140 @@ class Engine:
                 tok = tok[:, None]
             jax.block_until_ready(cache)
             decode_s += time.perf_counter() - t0
-            phys = tree_bytes(cache)
-            n_attn = self.cfg.num_attn_layers()
-            logical = sum(
-                cache_logical_bytes_per_layer(
-                    self.spec, self.prompt_len + self.max_new,
-                    self.cfg.num_kv_heads, self.cfg.head_dim)
-                * (lb / max(self.spec.budget, 1))
-                for lb in self.layer_budgets) * self.slots
+            # accumulate across waves, normalized to the wave's *real*
+            # request count (a padded final wave must not bill phantom
+            # sequences at `slots` each)
+            active = w1 - w0
+            phys += tree_bytes(cache) * active / self.slots
+            logical += self._logical_bytes_per_seq() * active
         full = (self.cfg.kv_bytes_per_token() *
-                (self.prompt_len + self.max_new) * self.slots)
+                (self.prompt_len + self.max_new) * n)
         total_decode_tokens = n * (self.max_new - 1)
         return GenerationResult(
             tokens=outs,
             prefill_seconds=prefill_s,
             decode_seconds=decode_s,
             decode_tokens_per_s=total_decode_tokens / max(decode_s, 1e-9),
+            cache_physical_bytes=int(phys),
+            cache_logical_bytes=float(logical),
+            full_cache_bytes=float(full),
+            compression_ratio=float(full / max(logical, 1.0)),
+            policy_name=self.policy.name,
+        )
+
+    # ------------------------------------------------------------------
+    # Continuous batching
+    # ------------------------------------------------------------------
+    def generate_continuous(
+        self, requests: Sequence[Union[Request, np.ndarray]], *,
+        buckets: Optional[Sequence[int]] = None,
+    ) -> ContinuousGenerationResult:
+        """Serve `requests` through one persistent `slots`-wide cache.
+
+        Each request is prefilled at its prompt bucket (batch 1, one
+        compiled prefill per bucket length) and scattered into a free
+        batch slot; every decode step advances all occupied slots at
+        once; a request hitting its `eos_id` or `max_new` retires
+        immediately and its slot is handed to the next queued request.
+        Bare arrays are wrapped as `Request(tokens, max_new=self.max_new)`.
+
+        Decoder-only archs (the survey's subject). MoE routing uses
+        per-batch expert capacity, so co-resident garbage slots could
+        perturb active rows there — dense/SSM archs are exact.
+        """
+        if self.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "continuous batching is decoder-only for now (enc-dec "
+                "requests carry per-request cross memory)")
+        if buckets and max(int(b) for b in buckets) > self.prompt_len:
+            # the cache/spec were sized for prompt_len at construction; a
+            # longer bucket would silently truncate prompts via the
+            # compression path instead of erroring
+            raise ValueError(
+                f"bucket {max(int(b) for b in buckets)} exceeds engine "
+                f"prompt_len {self.prompt_len}")
+        sched = Scheduler(buckets or self.buckets, self.slots)
+        for r in requests:
+            if not isinstance(r, Request):
+                r = Request(tokens=r, max_new=self.max_new)
+            if r.max_new > self.max_new:
+                raise ValueError(
+                    f"request max_new {r.max_new} exceeds engine headroom "
+                    f"{self.max_new}")
+            sched.submit(r)
+
+        cache = M.init_cache(
+            self.cfg, self.spec, self.slots, self.prompt_len + self.max_new,
+            layer_budgets=jnp.asarray(self.layer_budgets, jnp.int32))
+        next_tok = np.zeros(self.slots, np.int32)
+        prefill_s = decode_s = 0.0
+        decode_tokens = 0
+        lb = jnp.asarray(self.layer_budgets)
+
+        def admit_into(slot_idx: int) -> None:
+            """Fill a free slot from the queue: bucketed batch-1 prefill,
+            scatter into the live cache, stream the first token. Loops in
+            case a request finishes on its very first token."""
+            nonlocal cache, prefill_s
+            while True:
+                req = sched.admit_next(slot_idx)
+                if req is None:
+                    # nothing queued: clear the slot so stale KV never
+                    # leaks into accounting or a later occupant
+                    cache = self._reset(cache, jnp.int32(slot_idx))
+                    return
+                self.key, k1 = jax.random.split(self.key)
+                t0 = time.perf_counter()
+                logits, pc = self._prefill(
+                    self.params, {"tokens": jnp.asarray(req.tokens[None])},
+                    lb, k1)
+                tok = self.sampler(logits, k1)
+                cache = self._insert(cache, pc, jnp.int32(slot_idx))
+                tok_i = int(jax.device_get(tok)[0])
+                prefill_s += time.perf_counter() - t0
+                next_tok[slot_idx] = tok_i
+                reason = sched.record_token(slot_idx, tok_i)
+                if reason is None:
+                    return
+                sched.retire(slot_idx, reason)   # 1-token request; refill
+
+        for i in range(self.slots):
+            admit_into(i)
+
+        while True:
+            active = sched.active_slots()
+            if not active:
+                break                             # queue drained too
+            self.key, k2 = jax.random.split(self.key)
+            t0 = time.perf_counter()
+            tok_dev, cache = self._decode(self.params, cache,
+                                          jnp.asarray(next_tok[:, None]), k2)
+            toks = np.asarray(tok_dev)            # blocks on the step
+            decode_s += time.perf_counter() - t0
+            sched.note_decode_step()
+            next_tok = toks.astype(np.int32).copy()
+            for i in active:
+                decode_tokens += 1
+                reason = sched.record_token(i, toks[i])
+                if reason is not None:
+                    sched.retire(i, reason)
+                    admit_into(i)
+
+        phys = tree_bytes(cache)
+        logical = self._logical_bytes_per_seq() * self.slots
+        full = (self.cfg.kv_bytes_per_token() *
+                (self.prompt_len + self.max_new) * self.slots)
+        results = sorted(sched.results, key=lambda r: r.uid)
+        ttfts = [r.ttft_s for r in results]
+        return ContinuousGenerationResult(
+            results=results,
+            prefill_seconds=prefill_s,
+            decode_seconds=decode_s,
+            decode_steps=sched.decode_steps,
+            decode_tokens=decode_tokens,
+            decode_tokens_per_s=decode_tokens / max(decode_s, 1e-9),
+            occupancy=sched.occupancy,
+            ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
             cache_physical_bytes=int(phys),
             cache_logical_bytes=float(logical),
             full_cache_bytes=float(full),

@@ -1,12 +1,19 @@
 """Cache invariants: budgets hold, sinks survive, recency is protected,
 quantized ring flushes keep positions consistent. Includes hypothesis
-property tests over the eviction state machine."""
-import hypothesis
-import hypothesis.strategies as st
+property tests over the eviction state machine (optional dep: when
+hypothesis is absent the properties run on a fixed example grid
+instead — `pip install -e .[test]` for the full search)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:     # pragma: no cover - env-dependent
+    hypothesis = None
+    st = None
 
 from repro.core import cache as C
 from repro.core.cache import CacheSpec
@@ -150,14 +157,7 @@ def test_packed_quantized_roundtrip_via_materialize():
     assert err.max() < float(lc.k_scale.max()) * 0.6 + 1e-4
 
 
-@hypothesis.settings(max_examples=20, deadline=None)
-@hypothesis.given(
-    budget=st.sampled_from([8, 16]),
-    sinks=st.integers(0, 3),
-    policy=st.sampled_from(["streaming", "h2o", "nacl"]),
-    n_appends=st.integers(1, 40),
-)
-def test_eviction_state_machine_properties(budget, sinks, policy, n_appends):
+def _eviction_state_machine_properties(budget, sinks, policy, n_appends):
     """Physical occupancy never exceeds budget; positions are unique and
     within range; pos counts all appends."""
     spec = CacheSpec(budget=budget, sinks=sinks, policy=policy, window=0,
@@ -180,3 +180,76 @@ def test_eviction_state_machine_properties(budget, sinks, policy, n_appends):
     assert occ.max(initial=-1) < n_appends
     if n_appends > budget and sinks > 0:
         assert set(range(min(sinks, budget))) <= set(occ.tolist())
+
+
+_EVICTION_EXAMPLES = [
+    (8, 2, "streaming", 12),
+    (16, 0, "h2o", 40),
+    (8, 3, "nacl", 5),
+    (16, 1, "h2o", 16),
+    (8, 0, "streaming", 1),
+]
+
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        budget=st.sampled_from([8, 16]),
+        sinks=st.integers(0, 3),
+        policy=st.sampled_from(["streaming", "h2o", "nacl"]),
+        n_appends=st.integers(1, 40),
+    )
+    def test_eviction_state_machine_properties(budget, sinks, policy,
+                                               n_appends):
+        _eviction_state_machine_properties(budget, sinks, policy, n_appends)
+else:
+    @pytest.mark.parametrize("budget,sinks,policy,n_appends",
+                             _EVICTION_EXAMPLES)
+    def test_eviction_state_machine_properties(budget, sinks, policy,
+                                               n_appends):
+        _eviction_state_machine_properties(budget, sinks, policy, n_appends)
+
+
+# ---------------------------------------------------------------------------
+# Victim-selection degenerate case (regression): when budget <=
+# sinks + recent_protect nothing is evictable, the criterion is constant,
+# and a bare argmin silently clobbered protected sink slot 0.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["streaming", "h2o"])
+def test_select_victim_degenerate_spares_sinks(policy):
+    spec = CacheSpec(budget=8, sinks=4, policy=policy, window=0, group=1,
+                     recent_protect=8)
+    B, H, D = 1, 1, 4
+    lc = C.init_layer_kv(spec, B, 8, H, D, jnp.float32)
+    lc = lc._replace(budget=jnp.asarray(8, jnp.int32))
+    for t in range(8):
+        kv = jnp.full((B, H, D), float(t))
+        lc = C.append_token(lc, spec, kv, kv)
+    # every occupied slot is a sink or recent-protected
+    assert not bool(C._evictable_mask(lc, spec).any())
+    victim = int(C.select_victim(lc, spec, None)[0])
+    assert victim == 4                       # oldest non-sink, never slot 0
+    lc = C.append_token(lc, spec, jnp.full((B, H, D), 99.0),
+                        jnp.full((B, H, D), 99.0))
+    pos = set(np.asarray(lc.slot_pos)[0].tolist())
+    assert {0, 1, 2, 3} <= pos               # sinks survive
+    assert 8 in pos and 4 not in pos
+
+
+def test_select_victim_all_sinks_avoids_slot0():
+    """budget == sinks: even then, sink 0 (the strongest attention sink)
+    must not be the silent victim — the last physical slot is."""
+    spec = CacheSpec(budget=4, sinks=4, policy="streaming", window=0,
+                     group=1, recent_protect=0)
+    B, H, D = 1, 1, 4
+    lc = C.init_layer_kv(spec, B, 4, H, D, jnp.float32)
+    lc = lc._replace(budget=jnp.asarray(4, jnp.int32))
+    for t in range(4):
+        kv = jnp.full((B, H, D), float(t))
+        lc = C.append_token(lc, spec, kv, kv)
+    victim = int(C.select_victim(lc, spec, None)[0])
+    assert victim == 3
+    lc = C.append_token(lc, spec, jnp.full((B, H, D), 9.0),
+                        jnp.full((B, H, D), 9.0))
+    assert 0 in np.asarray(lc.slot_pos)[0].tolist()

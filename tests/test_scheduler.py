@@ -1,0 +1,230 @@
+"""Continuous-batching lifecycle: scheduler bookkeeping, per-slot cache
+surgery (insert_request / reset_slot), and end-to-end early-exit +
+slot-reuse correctness against the wave-based reference path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as C
+from repro.core.cache import CacheSpec
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# Scheduler unit tests (pure python, fake clock)
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def _req(L, max_new=4, eos=None):
+    return Request(tokens=np.zeros(L, np.int32), max_new=max_new, eos_id=eos)
+
+
+def test_scheduler_fifo_and_buckets():
+    sched = Scheduler((128, 32, 64), n_slots=2, clock=_FakeClock())
+    assert sched.buckets == (32, 64, 128)
+    r1, r2, r3 = _req(32), _req(128), _req(64)
+    for r in (r1, r2, r3):
+        sched.submit(r)
+    assert sched.pending == 3
+    assert sched.admit_next(0).uid == r1.uid        # FIFO
+    assert sched.admit_next(1).uid == r2.uid
+    assert sched.free_slots() == []
+    with pytest.raises(ValueError):
+        sched.admit_next(0)                          # occupied
+    with pytest.raises(ValueError):
+        sched.submit(_req(33))                       # no such bucket
+
+
+def test_scheduler_lifecycle_eos_and_length():
+    sched = Scheduler((16,), n_slots=1, clock=_FakeClock())
+    sched.submit(_req(16, max_new=3, eos=7))
+    sched.submit(_req(16, max_new=2))
+    sched.admit_next(0)
+    assert sched.record_token(0, 5) is None
+    assert sched.record_token(0, 7) == "eos"         # before max_new
+    res = sched.retire(0, "eos")
+    assert res.finish_reason == "eos"
+    np.testing.assert_array_equal(res.tokens, [5, 7])
+    assert res.ttft_s > 0 and res.total_s >= res.ttft_s
+
+    sched.admit_next(0)
+    assert sched.record_token(0, 7) is None          # eos_id=None: ignored
+    assert sched.record_token(0, 9) == "length"
+    sched.retire(0, "length")
+    assert sched.all_done()
+    assert [r.n_tokens for r in sched.results] == [2, 2]
+
+
+def test_scheduler_occupancy_accounting():
+    sched = Scheduler((16,), n_slots=2, clock=_FakeClock())
+    sched.submit(_req(16))
+    sched.admit_next(0)
+    sched.note_decode_step()                         # 1 of 2 slots active
+    sched.note_decode_step()
+    assert sched.occupancy == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache surgery
+# ---------------------------------------------------------------------------
+
+
+_DENSE = CacheSpec(budget=16, sinks=2, policy="h2o", window=0, group=1,
+                   recent_protect=4)
+_QUANT = CacheSpec(budget=16, sinks=2, policy="streaming", window=4, group=4,
+                   bits=4)
+
+
+@pytest.mark.parametrize("spec", [_DENSE, _QUANT], ids=["dense", "quant"])
+def test_insert_request_and_reset_slot(spec):
+    n_layers, B, H, D, S_p = 2, 3, 2, 8, 32
+    stacked = C.stacked_kv(spec, n_layers, B, S_p, H, D, jnp.float32)
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    k = jax.random.normal(ks[0], (1, S_p, H, D), jnp.float32)
+    v = jax.random.normal(ks[1], (1, S_p, H, D), jnp.float32)
+    mass = jax.random.uniform(ks[2], (1, S_p))
+    one = C.compress_prompt(spec, k, v, mass, dtype=jnp.float32)
+    pref = jax.tree.map(lambda x: jnp.stack([x] * n_layers), one)
+
+    ins = C.insert_request(stacked, 1, pref, batch_axis=1)
+    for f in C.LayerKV._fields:
+        got, want = getattr(ins, f), getattr(pref, f)
+        if f == "budget":
+            # per-layer state shared by all slots: untouched by surgery
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(stacked.budget))
+            continue
+        np.testing.assert_array_equal(np.asarray(got[:, 1]),
+                                      np.asarray(want[:, 0]), err_msg=f)
+        # neighbouring slots untouched (still the init state)
+        np.testing.assert_array_equal(np.asarray(got[:, 0]),
+                                      np.asarray(getattr(stacked, f)[:, 0]),
+                                      err_msg=f)
+
+    # reset returns the slot to the fresh init state; neighbours keep theirs
+    ins2 = C.insert_request(ins, 2, pref, batch_axis=1)
+    back = C.reset_slot(ins2, 1, batch_axis=1)
+    for f in C.LayerKV._fields:
+        if f == "budget":
+            continue
+        np.testing.assert_array_equal(np.asarray(getattr(back, f)[:, 1]),
+                                      np.asarray(getattr(stacked, f)[:, 1]),
+                                      err_msg=f)
+        np.testing.assert_array_equal(np.asarray(getattr(back, f)[:, 2]),
+                                      np.asarray(getattr(ins2, f)[:, 2]),
+                                      err_msg=f)
+    assert int(back.length[0, 1]) == 0
+    assert int(back.rlen[0, 1]) == 0
+    assert bool((np.asarray(back.slot_pos[:, 1]) == -1).all())
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: continuous == wave prefix, early exit frees slots cleanly
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, L, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, L)).astype(np.int32)
+
+
+@pytest.mark.parametrize("pname", ["h2o", "kivi2"])
+def test_continuous_matches_wave_with_early_exit(small_model, pname):
+    """A request hitting EOS at step t produces tokens identical to the
+    wave-based path up to t, and the freed slot's next occupant (requests
+    3/4 reuse slots of 0..2) is unaffected by stale cache contents —
+    across dense (h2o) and quantized (kivi2) specs."""
+    cfg, params = small_model
+    L, NEW, n = 32, 8, 5
+    prompts = _prompts(cfg, n, L, seed=1)
+    pol = presets(budget=32, window=8)[pname]
+
+    wave = Engine(cfg, params, pol, prompt_len=L, max_new=NEW,
+                  slots=2).generate(prompts).tokens
+
+    eng = Engine(cfg, params, pol, prompt_len=L, max_new=NEW, slots=2)
+    eos = int(wave[2, 3])            # force request 2 to exit early
+    reqs = [Request(tokens=prompts[i], max_new=NEW,
+                    eos_id=(eos if i == 2 else None)) for i in range(n)]
+    res = eng.generate_continuous(reqs)
+
+    assert len(res.results) == n
+    for i, r in enumerate(res.results):
+        np.testing.assert_array_equal(
+            r.tokens, wave[i][:r.n_tokens],
+            err_msg=f"{pname} request {i} diverged from wave path")
+    early = res.results[2]
+    assert early.finish_reason == "eos"
+    # stops at the *first* occurrence of the eos value, eos included
+    first = int(np.argmax(wave[2] == eos))
+    assert early.n_tokens == first + 1
+    others = [r for i, r in enumerate(res.results) if i != 2]
+    assert all(r.finish_reason == "length" and r.n_tokens == NEW
+               for r in others)
+    # 5 requests through 2 slots: reuse actually happened
+    assert len({r.slot for r in res.results}) <= 2
+    assert res.decode_tokens > 0 and res.occupancy > 0
+
+
+def test_continuous_multibucket_matches_wave(small_model):
+    """Mixed 32/64-token prompts through one engine: every request matches
+    its own-bucket wave reference (bucketed prefills are exact)."""
+    cfg, params = small_model
+    NEW = 6
+    pol = presets(budget=32, window=8)["h2o"]
+    p32 = _prompts(cfg, 2, 32, seed=2)
+    p64 = _prompts(cfg, 2, 64, seed=3)
+    ref = {}
+    for L, ps in ((32, p32), (64, p64)):
+        ref[L] = Engine(cfg, params, pol, prompt_len=L, max_new=NEW,
+                        slots=2).generate(ps).tokens
+
+    eng = Engine(cfg, params, pol, max_new=NEW, slots=2, buckets=(32, 64))
+    reqs = [Request(tokens=p32[0], max_new=NEW),
+            Request(tokens=p64[0], max_new=NEW),
+            Request(tokens=p32[1], max_new=NEW),
+            Request(tokens=p64[1], max_new=NEW)]
+    res = eng.generate_continuous(reqs)
+    np.testing.assert_array_equal(res.results[0].tokens, ref[32][0])
+    np.testing.assert_array_equal(res.results[1].tokens, ref[64][0])
+    np.testing.assert_array_equal(res.results[2].tokens, ref[32][1])
+    np.testing.assert_array_equal(res.results[3].tokens, ref[64][1])
+    assert {r.bucket for r in res.results} == {32, 64}
+
+
+def test_continuous_rejects_oversized_request(small_model):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["h2o"]
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=4, slots=2)
+    with pytest.raises(ValueError):
+        eng.generate_continuous(
+            [Request(tokens=np.zeros(32, np.int32), max_new=99)])
+    with pytest.raises(ValueError):
+        eng.generate_continuous(
+            [Request(tokens=np.zeros(7, np.int32), max_new=2)])
+    with pytest.raises(ValueError):
+        # override buckets can't exceed what the cache was sized for
+        eng.generate_continuous(
+            [Request(tokens=np.zeros(64, np.int32), max_new=2)],
+            buckets=(64,))

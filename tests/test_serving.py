@@ -76,6 +76,33 @@ def test_layer_budget_allocators_run(small_model):
         assert len(set(eng.layer_budgets.tolist())) >= 1
 
 
+def test_multiwave_stats_accumulate(small_model):
+    """phys/logical/full accumulate across waves and a ragged final wave
+    bills only the real requests, not `slots` phantoms (regression: the
+    stats were overwritten per wave and padded to the full wave)."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["streaming"]
+
+    def run(n):
+        eng = Engine(cfg, params, pol, prompt_len=64, max_new=4, slots=2)
+        return eng.generate(_prompts(cfg, n, 64))
+
+    r2 = run(2)          # one full wave
+    r3 = run(3)          # two waves, ragged final (1 real + 1 padded)
+    r4 = run(4)          # two full waves
+    per_seq_logical = r2.cache_logical_bytes / 2
+    per_seq_phys = r2.cache_physical_bytes / 2
+    per_seq_full = r2.full_cache_bytes / 2
+    assert r3.cache_logical_bytes == pytest.approx(3 * per_seq_logical)
+    assert r4.cache_logical_bytes == pytest.approx(4 * per_seq_logical)
+    assert r3.cache_physical_bytes == pytest.approx(3 * per_seq_phys, rel=1e-6)
+    assert r4.cache_physical_bytes == pytest.approx(4 * per_seq_phys, rel=1e-6)
+    assert r3.full_cache_bytes == pytest.approx(3 * per_seq_full)
+    # the ratio is a per-sequence quantity: invariant to wave count/padding
+    assert r3.compression_ratio == pytest.approx(r2.compression_ratio)
+    assert r4.compression_ratio == pytest.approx(r2.compression_ratio)
+
+
 def test_compression_ratio_reporting(small_model):
     cfg, params = small_model
     kivi2 = presets(budget=256, window=16)["kivi2"]
