@@ -1,5 +1,21 @@
 """Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale
-timings; the real perf story is the roofline + §Perf HLO analysis)."""
+timings; the real perf story is the roofline + §Perf HLO analysis).
+
+The headline table is `decode_paths`: one decode-attention step over the
+same compressed `LayerKV` through the two paths —
+
+  * **materialize**: unpack + dequantize the whole main store to the
+    model dtype, concatenate the ring, XLA attention (the oracle);
+  * **fused**: the Pallas kernel reads packed codes + scales and the
+    ring directly (`repro.kernels.decode_qattn`).
+
+plus the analytic HBM bytes each path moves per step per layer. The
+bytes column is the survey's point: the fused path's cache read scales
+with bits/16 while the materialize path always moves (and round-trips)
+16-bit traffic.
+
+    PYTHONPATH=src python benchmarks/kernels_micro.py
+"""
 from __future__ import annotations
 
 import time
@@ -7,10 +23,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import cache as kvcache
+from repro.core.cache import CacheSpec
 from repro.kernels.kvquant import kernel as kq
 from repro.kernels.kvquant import ref as kq_ref
 from repro.kernels.decode_qattn import kernel as dq
 from repro.kernels.flash_prefill import kernel as fp
+from repro.nn import attention as attn
 
 
 def _time(fn, *args, n=3, **kw):
@@ -19,6 +38,58 @@ def _time(fn, *args, n=3, **kw):
     for _ in range(n):
         jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def decode_step_bytes(spec: CacheSpec, S: int, W: int, H: int, D: int,
+                      fused: bool) -> float:
+    """Analytic HBM cache traffic of one decode-attention step per layer
+    per sequence (reads; plus the materialize path's dequant round-trip)."""
+    if spec.quantized:
+        codes = 2 * S * H * D * spec.bits / 8          # packed K + V
+        k_meta = (S // spec.group) * H * D * 2 * 4.0   # scale + zero f32
+        v_meta = S * H * 2 * 4.0
+        ring = 2 * W * H * D * 2.0                     # bf16 residual
+        read = codes + k_meta + v_meta + ring
+        if not fused:
+            # dequantized bf16 main store written then read back by attn
+            read += 2 * (2 * S * H * D * 2.0)
+        return read
+    dense = 2 * (S + W) * H * D * 2.0
+    return dense
+
+
+def decode_paths_rows(rows):
+    B, H, D, Gq = 4, 4, 64, 2
+    S, W, S_p = 256, 16, 384
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    k = jax.random.normal(ks[0], (B, S_p, H, D), jnp.float32)
+    v = jax.random.normal(ks[1], (B, S_p, H, D), jnp.float32)
+    mass = jax.random.uniform(ks[2], (B, S_p))
+    q = jax.random.normal(ks[3], (B, 1, H * Gq, D), jnp.bfloat16)
+
+    rows.append("decode_paths: bits,materialize_us,fused_us,"
+                "mat_bytes,fused_bytes,byte_ratio")
+    for bits in (2, 4, 8, 16):
+        spec = CacheSpec(budget=S, window=W, bits=bits, group=W,
+                         policy="streaming")
+        lc = kvcache.compress_prompt(spec, k, v, mass, dtype=jnp.bfloat16)
+
+        def mat(lc, q):
+            return attn.decode_attention(q, lc, spec, dtype=jnp.bfloat16,
+                                         use_kernels=False)
+
+        def fus(lc, q):
+            return attn.decode_attention(q, lc, spec, dtype=jnp.bfloat16,
+                                         use_kernels=True, interpret=True)
+
+        us_m = _time(jax.jit(mat), lc, q)
+        us_f = _time(jax.jit(fus), lc, q)
+        b_m = decode_step_bytes(spec, S, W, H, D, fused=False)
+        b_f = decode_step_bytes(spec, S, W, H, D, fused=True)
+        rows.append(f"decode_paths,{bits},{us_m:.0f},{us_f:.0f},"
+                    f"{b_m:.0f},{b_f:.0f},{b_f / b_m:.3f}")
+    return rows
 
 
 def run() -> str:
@@ -43,7 +114,8 @@ def run() -> str:
     us = _time(fp.flash_prefill_pallas, qf, kf, kf, bq=64, bk=64,
                interpret=True)
     rows.append(f"flash_prefill,{us:.0f},T={T}")
-    return "\n".join(rows)
+
+    return "\n".join(decode_paths_rows(rows))
 
 
 if __name__ == "__main__":

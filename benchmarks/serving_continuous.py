@@ -58,7 +58,8 @@ def make_requests(vocab: int, n: int, buckets, max_new_cap: int, seed=0):
     return reqs
 
 
-def run_wave(cfg, params, pol, requests, slots, warmup: bool):
+def run_wave(cfg, params, pol, requests, slots, warmup: bool,
+             use_kernels=None):
     """Bucketed waves: one engine per bucket, decode to the group's max."""
     decode_s = 0.0
     useful = 0
@@ -66,7 +67,7 @@ def run_wave(cfg, params, pol, requests, slots, warmup: bool):
         group = [r for r in requests if len(r.tokens) == b]
         max_new = max(r.max_new for r in group)
         eng = Engine(cfg, params, pol, prompt_len=b, max_new=max_new,
-                     slots=slots)
+                     slots=slots, use_kernels=use_kernels)
         prompts = np.stack([r.tokens for r in group])
         if warmup:
             eng.generate(prompts[:1])
@@ -76,9 +77,10 @@ def run_wave(cfg, params, pol, requests, slots, warmup: bool):
     return useful / max(decode_s, 1e-9)
 
 
-def run_continuous(cfg, params, pol, requests, slots, buckets, warmup: bool):
+def run_continuous(cfg, params, pol, requests, slots, buckets, warmup: bool,
+                   use_kernels=None):
     eng = Engine(cfg, params, pol, max_new=MAX_NEW_CAP, slots=slots,
-                 buckets=buckets)
+                 buckets=buckets, use_kernels=use_kernels)
     if warmup:
         eng.generate_continuous([
             Request(tokens=r.tokens, max_new=2)
@@ -99,7 +101,14 @@ def main() -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless continuous >= wave tok/s "
                          "for every policy")
+    ap.add_argument("--use-kernels", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="fused Pallas decode/prefill path: auto = on for "
+                         "TPU only (interpret-mode kernels on CPU are an "
+                         "emulator — time them with kernels_micro, not "
+                         "here)")
     args = ap.parse_args()
+    use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg, params = bench_model(n_layers=2, d_model=128, train_steps=0)
     requests = make_requests(cfg.vocab_size, args.requests, BUCKETS,
@@ -113,9 +122,11 @@ def main() -> int:
     for pname in [p for p in args.policies.split(",") if p]:
         pol = presets(budget=args.budget, window=args.window)[pname]
         wave_tok_s = run_wave(cfg, params, pol, requests, args.slots,
-                              warmup=not args.no_warmup)
+                              warmup=not args.no_warmup,
+                              use_kernels=use_kernels)
         cont = run_continuous(cfg, params, pol, requests, args.slots,
-                              BUCKETS, warmup=not args.no_warmup)
+                              BUCKETS, warmup=not args.no_warmup,
+                              use_kernels=use_kernels)
         rows.append(HeadToHead(
             policy=pname,
             wave_tok_s=wave_tok_s,

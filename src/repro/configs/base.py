@@ -78,6 +78,12 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     # activation remat policy for training: "none"|"block"
     remat: str = "block"
+    # Pallas kernel dispatch for the serving hot paths (fused decode
+    # attention over the compressed cache + flash prefill). None = auto:
+    # kernels on TPU, the materialize/XLA oracle elsewhere. True forces
+    # the kernel path (interpret mode off-TPU — slow, tests only); False
+    # forces the oracle.
+    use_kernels: Optional[bool] = None
 
     def __post_init__(self):
         if self.head_dim == 0:

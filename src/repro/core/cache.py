@@ -198,12 +198,43 @@ def stacked_kv(
 # ---------------------------------------------------------------------------
 
 
+def validity_bias(lc: LayerKV) -> Array:
+    """[B, S+W] additive bias over [main | residual]: 0 where the slot
+    holds a live token (within `length`/`budget` for the main store,
+    within `rlen` for the ring), -inf elsewhere. This is the ragged-shape
+    encoding both decode paths share: the pure-jnp `materialize` oracle
+    and the fused Pallas kernel consume the same bias."""
+    B, S = lc.slot_pos.shape
+    idx = jnp.arange(S)[None]                                   # [1, S]
+    main_valid = (idx < jnp.minimum(lc.length, lc.budget)[:, None])
+    bias = jnp.where(main_valid, 0.0, NEG_INF).astype(jnp.float32)
+    if lc.rk.shape[1] > 0:
+        ridx = jnp.arange(lc.rk.shape[1])[None]
+        r_valid = ridx < lc.rlen[:, None]
+        bias_r = jnp.where(r_valid, 0.0, NEG_INF).astype(jnp.float32)
+        bias = jnp.concatenate([bias, bias_r], axis=1)
+    return bias
+
+
 def materialize(lc: LayerKV, spec: CacheSpec, dtype=jnp.bfloat16):
     """Return (k, v, bias) over the concatenated [main | residual] axis.
 
     k, v: [B, S+W, H, D]; bias: [B, S+W] additive (0 valid / -inf empty).
-    The pure-jnp path dequantizes the whole main store; the Pallas decode
-    kernel (`repro.kernels.decode_qattn`) fuses dequantization instead.
+    Convenience wrapper: `materialize_kv` + `validity_bias` (callers that
+    already hold the bias should call `materialize_kv` directly).
+    """
+    k, v = materialize_kv(lc, spec, dtype)
+    return k, v, validity_bias(lc)
+
+
+def materialize_kv(lc: LayerKV, spec: CacheSpec, dtype=jnp.bfloat16):
+    """Dense (k, v) [B, S+W, H, D] over [main | residual].
+
+    The pure-jnp path dequantizes the whole main store **every call** —
+    this is the decode oracle. The fused Pallas kernel
+    (`repro.kernels.decode_qattn.decode_attention_fused`, dispatched by
+    `nn.attention.decode_attention` under `use_kernels`) reads the packed
+    codes directly and never materializes this tensor.
     """
     B, S, H, _ = lc.k.shape
     if spec.quantized:
@@ -223,20 +254,10 @@ def materialize(lc: LayerKV, spec: CacheSpec, dtype=jnp.bfloat16):
     else:
         k, v = lc.k.astype(dtype), lc.v.astype(dtype)
 
-    idx = jnp.arange(S)[None]                                   # [1, S]
-    main_valid = (idx < jnp.minimum(lc.length, lc.budget)[:, None])
-    bias_main = jnp.where(main_valid, 0.0, NEG_INF).astype(jnp.float32)
-
     if lc.rk.shape[1] > 0:
-        ridx = jnp.arange(lc.rk.shape[1])[None]
-        r_valid = ridx < lc.rlen[:, None]
-        bias_r = jnp.where(r_valid, 0.0, NEG_INF).astype(jnp.float32)
         k = jnp.concatenate([k, lc.rk.astype(dtype)], axis=1)
         v = jnp.concatenate([v, lc.rv.astype(dtype)], axis=1)
-        bias = jnp.concatenate([bias_main, bias_r], axis=1)
-    else:
-        bias = bias_main
-    return k, v, bias
+    return k, v
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,27 @@
+"""Shared dispatch/tiling helpers for the Pallas kernels."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None = auto (compiled on TPU, interpret elsewhere); bool forces a
+    mode — tests force True on CPU, a future non-TPU Pallas backend
+    forces False instead of being silently mis-dispatched."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def pick_block(S: int, unit: int, target: int) -> int:
+    """Largest multiple of `unit` that divides S and is <= target.
+
+    Kernels snap their requested block size down with this so any
+    sequence length that tiles in `unit` steps (1 for dense stores, the
+    quantization group for packed ones) gets a legal grid."""
+    assert S % unit == 0, (S, unit)
+    best = unit
+    for bs in range(unit, min(target, S) + 1, unit):
+        if S % bs == 0:
+            best = bs
+    return best

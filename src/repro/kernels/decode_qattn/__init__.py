@@ -1,1 +1,4 @@
-from repro.kernels.decode_qattn.ops import decode_attention_quantized  # noqa: F401
+from repro.kernels.decode_qattn.ops import (  # noqa: F401
+    decode_attention_fused,
+    decode_attention_quantized,
+)

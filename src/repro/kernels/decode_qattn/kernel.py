@@ -1,16 +1,39 @@
-"""Flash-decode attention over a *quantized* KV cache.
+"""Fused flash-decode attention over the *compressed* KV cache.
 
 The survey's quantization systems (KVQuant [15], KIVI [17]) win because
 the decode step is HBM-bandwidth-bound: attention reads the whole cache
 per token. Their CUDA kernels fuse dequantization into the attention
 load. TPU adaptation (DESIGN.md §2): the packed int codes are what moves
 HBM->VMEM (bits/16 of the bf16 traffic); unpack+dequant happens in
-VREGs right after the copy; QK^T and PV run on the MXU per 128-aligned
-cache block; online softmax accumulators live in VMEM scratch across the
-sequential cache-block grid axis.
+VREGs right after the copy; QK^T and PV run on the MXU per cache block;
+online-softmax accumulators live in VMEM scratch across the sequential
+cache-block grid axis.
 
-Grid: (B, Hkv, S // block_s) — the cache-length axis is innermost and
-sequential, so scratch accumulators carry across it.
+This kernel is the real decode path of the model (see
+`repro.nn.attention.decode_attention`), so it covers everything the
+`cache.materialize` oracle provides:
+
+  * **quantized main store** (bits ∈ {2, 4, 8}): packed int8 codes +
+    per-channel K scales (KIVI layout), dequantized in-kernel;
+  * **dense main store** (bits == 16): a plain bf16 flash-decode branch,
+    so selective-only caches get the fused path too;
+  * **residual ring**: the full-precision recent window is attended as a
+    trailing grid block inside the same online-softmax pass — no concat,
+    no materialization;
+  * **attention mass** (optional): the per-key probability column sums
+    `[B, S+W]` that H2O/NACL/Keyformer score accumulation consumes,
+    assembled from a per-(kv-head) probability scratch that is rescaled
+    as the running max moves.
+
+Grid: (B, Hkv, n_main + has_ring) — the cache-block axis is innermost
+and sequential, so scratch accumulators carry across it; GQA query
+groups ride along in the q block. Ragged `length`/`rlen` are handled by
+the additive validity bias, exactly as on the oracle path.
+
+`compute_dtype` mirrors the oracle's precision: `materialize`
+dequantizes to the model dtype before the matmuls, so the kernel rounds
+its dequantized K/V through the same dtype to stay bit-near the
+reference (pass float32 to skip the rounding).
 """
 from __future__ import annotations
 
@@ -21,6 +44,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.blocking import pick_block  # noqa: F401  (re-export)
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -36,55 +61,196 @@ def _unpack(p: Array, bits: int, D: int) -> Array:
     return codes.reshape(*p.shape[:-1], D)
 
 
-def _kernel(q_ref, kq_ref, ks_ref, kz_ref, vq_ref, vs_ref, vz_ref, bias_ref,
-            out_ref, m_scr, l_scr, acc_scr, *, bits: int, D: int, group: int,
-            block_s: int):
-    """One (batch, kv-head, cache-block) cell.
+def _kernel(*refs, bits: int, D: int, group: int, block_s: int, n_main: int,
+            ring_w: int, return_mass: bool, compute_dtype):
+    """One (batch, kv-head, cache-block) grid cell.
 
-    q_ref:   [1, Gq, D]          queries of this kv head's group
-    kq_ref:  [1, BS, Dp]         packed K codes
-    ks_ref/kz_ref: [1, BS//G, D] per-channel scales/zeros for this block
-    vq_ref:  [1, BS, Dp]; vs_ref/vz_ref: [1, BS]
-    bias_ref: [1, BS]            additive validity/window bias
-    out_ref: [1, Gq, D]
-    scratch: m [Gq, 1], l [Gq, 1], acc [Gq, D] — persist across blocks.
+    Ref layout (inputs, then outputs, then scratch — pieces that are
+    statically absent simply aren't passed):
+
+      q [1,1,Gq,D];
+      k [1,1,BS,Dp] (+ k_scale/k_zero [1,1,BS//G,D], v_scale/v_zero
+      [1,1,BS] when bits<16); v [1,1,BS,Dp]; bias_main [1,BS];
+      ring: rk/rv [1,1,W,D] + bias_ring [1,W] when ring_w>0;
+      out o [1,1,Gq,D] (+ mass [1,1,S+W] when return_mass);
+      scratch m/l [Gq,1], acc [Gq,D] (+ p [Gq,S+W] when return_mass).
     """
+    it = iter(refs)
+    q_ref = next(it)
+    k_ref = next(it)
+    if bits < 16:
+        ks_ref, kz_ref = next(it), next(it)
+    v_ref = next(it)
+    if bits < 16:
+        vs_ref, vz_ref = next(it), next(it)
+    biasm_ref = next(it)
+    if ring_w:
+        rk_ref, rv_ref, biasr_ref = next(it), next(it), next(it)
+    o_ref = next(it)
+    mass_ref = next(it) if return_mass else None
+    m_scr, l_scr, acc_scr = next(it), next(it), next(it)
+    p_scr = next(it) if return_mass else None
+
     s_idx = pl.program_id(2)
-    n_blocks = pl.num_programs(2)
+    total = pl.num_programs(2)
 
     @pl.when(s_idx == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        if return_mass:
+            p_scr[...] = jnp.zeros_like(p_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)                    # [Gq, D]
-    # dequantize K block: per-channel scales repeat over the group axis
-    kc = _unpack(kq_ref[0, 0], bits, D).astype(jnp.float32)  # [BS, D]
-    ks = ks_ref[0, 0]                                        # [BS//G, D]
-    kz = kz_ref[0, 0]
-    ksr = jnp.repeat(ks, group, axis=0)                      # [BS, D]
-    kzr = jnp.repeat(kz, group, axis=0)
-    k = kc * ksr + kzr                                       # [BS, D]
+    q = q_ref[0, 0].astype(jnp.float32)                      # [Gq, D]
+    scale = 1.0 / math.sqrt(D)
 
-    s = (q @ k.T) / math.sqrt(D) + bias_ref[0][None, :]      # [Gq, BS]
+    def attend(k, v, bias_row, start, width):
+        """Online-softmax update for one key block [width, D]."""
+        s = (q @ k.T) * scale + bias_row[None, :]            # [Gq, width]
+        m_prev = m_scr[...]                                  # [Gq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                               # [Gq, width]
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+        if return_mass:
+            # stored probabilities stay relative to the *current* max:
+            # rescale history, then drop in the fresh block.
+            p_scr[...] = p_scr[...] * alpha
+            p_scr[:, pl.dslice(start, width)] = p
 
-    m_prev = m_scr[...]                                      # [Gq, 1]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                                   # [Gq, BS]
+    @pl.when(s_idx < n_main)
+    def _main_block():
+        if bits < 16:
+            kc = _unpack(k_ref[0, 0], bits, D).astype(jnp.float32)
+            ks = jnp.repeat(ks_ref[0, 0], group, axis=0)     # [BS, D]
+            kz = jnp.repeat(kz_ref[0, 0], group, axis=0)
+            k = ((kc * ks + kz).astype(compute_dtype)
+                 .astype(jnp.float32))
+            vc = _unpack(v_ref[0, 0], bits, D).astype(jnp.float32)
+            v = ((vc * vs_ref[0, 0][:, None] + vz_ref[0, 0][:, None])
+                 .astype(compute_dtype).astype(jnp.float32))
+        else:
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+        attend(k, v, biasm_ref[0], s_idx * block_s, block_s)
 
-    vc = _unpack(vq_ref[0, 0], bits, D).astype(jnp.float32)  # [BS, D]
-    v = vc * vs_ref[0, 0][:, None] + vz_ref[0, 0][:, None]
+    if ring_w:
+        @pl.when(s_idx == n_main)
+        def _ring_block():
+            k = rk_ref[0, 0].astype(jnp.float32)
+            v = rv_ref[0, 0].astype(jnp.float32)
+            attend(k, v, biasr_ref[0], n_main * block_s, ring_w)
 
-    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + p @ v
-    m_scr[...] = m_new
-
-    @pl.when(s_idx == n_blocks - 1)
+    @pl.when(s_idx == total - 1)
     def _done():
-        out_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
-                         ).astype(out_ref.dtype)
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        if return_mass:
+            mass_ref[0, 0] = (p_scr[...] / l).sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_s",
+                                             "return_mass", "compute_dtype",
+                                             "interpret"))
+def decode_attn_pallas(q, k, k_scale, k_zero, v, v_scale, v_zero, bias_main,
+                       rk, rv, bias_ring, *, bits: int, group: int,
+                       block_s: int = 512, return_mass: bool = False,
+                       compute_dtype=jnp.float32, interpret: bool = False):
+    """Fused decode attention over [main store | residual ring].
+
+    q: [B, Hq, D].
+    Main store (bits < 16): k/v [B, S, Hkv, D*bits/8] int8 packed codes,
+    k_scale/k_zero [B, S//group, Hkv, D], v_scale/v_zero [B, S, Hkv];
+    (bits == 16): k/v [B, S, Hkv, D] dense, scales/zeros None.
+    bias_main: [B, S] additive validity/window bias.
+    Ring (optional): rk/rv [B, W, Hkv, D] full precision, bias_ring
+    [B, W]; pass None/None/None for W == 0.
+
+    Returns (out [B, Hq, D] in q.dtype,
+             mass [B, S+W] f32 if return_mass else None) with `mass`
+    aligned to `cache.materialize` / `cache.accumulate_scores` ordering.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Gq = Hq // Hkv
+    W = rk.shape[1] if rk is not None else 0
+    unit = group if bits < 16 else 1
+    bs = pick_block(S, unit, block_s)
+    n_main = S // bs
+    gpb = bs // group if bits < 16 else 0
+    n_grid = n_main + (1 if W else 0)
+    S_tot = S + W
+
+    qh = q.reshape(B, Hkv, Gq, D)
+    kh = k.transpose(0, 2, 1, 3)              # [B, Hkv, S, Dp]
+    vh = v.transpose(0, 2, 1, 3)
+
+    def main_idx(b, h, s):
+        return (b, h, jnp.minimum(s, n_main - 1), 0)
+
+    def main_idx3(b, h, s):
+        return (b, h, jnp.minimum(s, n_main - 1))
+
+    def bias_idx(b, h, s):
+        return (b, jnp.minimum(s, n_main - 1))
+
+    operands = [qh, kh]
+    in_specs = [
+        pl.BlockSpec((1, 1, Gq, D), lambda b, h, s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, kh.shape[-1]), main_idx),
+    ]
+    if bits < 16:
+        operands += [k_scale.transpose(0, 2, 1, 3),
+                     k_zero.transpose(0, 2, 1, 3)]
+        in_specs += [pl.BlockSpec((1, 1, gpb, D), main_idx)] * 2
+    operands.append(vh)
+    in_specs.append(pl.BlockSpec((1, 1, bs, vh.shape[-1]), main_idx))
+    if bits < 16:
+        operands += [v_scale.transpose(0, 2, 1), v_zero.transpose(0, 2, 1)]
+        in_specs += [pl.BlockSpec((1, 1, bs), main_idx3)] * 2
+    operands.append(bias_main)
+    in_specs.append(pl.BlockSpec((1, bs), bias_idx))
+    if W:
+        operands += [rk.transpose(0, 2, 1, 3), rv.transpose(0, 2, 1, 3),
+                     bias_ring]
+        in_specs += [pl.BlockSpec((1, 1, W, D), lambda b, h, s: (b, h, 0, 0)),
+                     pl.BlockSpec((1, 1, W, D), lambda b, h, s: (b, h, 0, 0)),
+                     pl.BlockSpec((1, W), lambda b, h, s: (b, 0))]
+
+    out_shape = [jax.ShapeDtypeStruct((B, Hkv, Gq, D), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, Gq, D), lambda b, h, s: (b, h, 0, 0))]
+    if return_mass:
+        out_shape.append(jax.ShapeDtypeStruct((B, Hkv, S_tot), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, S_tot),
+                                      lambda b, h, s: (b, h, 0)))
+
+    scratch = [
+        pltpu.VMEM((Gq, 1), jnp.float32),
+        pltpu.VMEM((Gq, 1), jnp.float32),
+        pltpu.VMEM((Gq, D), jnp.float32),
+    ]
+    if return_mass:
+        scratch.append(pltpu.VMEM((Gq, S_tot), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, D=D, group=group, block_s=bs,
+                          n_main=n_main, ring_w=W, return_mass=return_mass,
+                          compute_dtype=compute_dtype),
+        grid=(B, Hkv, n_grid),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+
+    out = outs[0].reshape(B, Hq, D)
+    if return_mass:
+        return out, outs[1].sum(axis=1)       # sum over kv heads -> [B, S+W]
+    return out, None
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group", "block_s",
@@ -92,47 +258,12 @@ def _kernel(q_ref, kq_ref, ks_ref, kz_ref, vq_ref, vs_ref, vz_ref, bias_ref,
 def decode_qattn_pallas(q, kq, ks, kz, vq, vs, vz, bias, *, bits: int,
                         group: int, block_s: int = 512,
                         interpret: bool = False):
-    """q: [B, Hq, D]; kq/vq: [B, S, Hkv, Dp] int8;
-    ks/kz: [B, S//G, Hkv, D]; vs/vz: [B, S, Hkv]; bias: [B, S].
-    Returns out [B, Hq, D] (q.dtype)."""
-    B, Hq, D = q.shape
-    S, Hkv = kq.shape[1], kq.shape[2]
-    Gq = Hq // Hkv
-    Dp = kq.shape[3]
-    assert S % block_s == 0 and block_s % group == 0, (S, block_s, group)
-    nS = S // block_s
+    """Back-compat wrapper: quantized main store only, no ring, no mass.
 
-    # head-major layouts so the (b, h) grid axes map to leading dims
-    qh = q.reshape(B, Hkv, Gq, D)
-    kqh = kq.transpose(0, 2, 1, 3)        # [B, Hkv, S, Dp]
-    ksh = ks.transpose(0, 2, 1, 3)        # [B, Hkv, S//G, D]
-    kzh = kz.transpose(0, 2, 1, 3)
-    vqh = vq.transpose(0, 2, 1, 3)
-    vsh = vs.transpose(0, 2, 1)           # [B, Hkv, S]
-    vzh = vz.transpose(0, 2, 1)
-    gpb = block_s // group
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits, D=D, group=group,
-                          block_s=block_s),
-        grid=(B, Hkv, nS),
-        in_specs=[
-            pl.BlockSpec((1, 1, Gq, D), lambda b, h, s: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_s, Dp), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, gpb, D), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, gpb, D), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, block_s, Dp), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)),
-            pl.BlockSpec((1, 1, block_s), lambda b, h, s: (b, h, s)),
-            pl.BlockSpec((1, block_s), lambda b, h, s: (b, s)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, Gq, D), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gq, D), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((Gq, 1), jnp.float32),
-            pltpu.VMEM((Gq, 1), jnp.float32),
-            pltpu.VMEM((Gq, D), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qh, kqh, ksh, kzh, vqh, vsh, vzh, bias)
-    return out.reshape(B, Hq, D)
+    q: [B, Hq, D]; kq/vq: [B, S, Hkv, Dp] int8; ks/kz: [B, S//G, Hkv, D];
+    vs/vz: [B, S, Hkv]; bias: [B, S]. Returns out [B, Hq, D] (q.dtype)."""
+    out, _ = decode_attn_pallas(
+        q, kq, ks, kz, vq, vs, vz, bias, None, None, None, bits=bits,
+        group=group, block_s=block_s, return_mass=False,
+        compute_dtype=jnp.float32, interpret=interpret)
+    return out

@@ -15,14 +15,35 @@ def decode_qattn_ref(q, kq, ks, kz, vq, vs, vz, bias, *, bits: int,
                      group: int) -> Array:
     """Same signature as the kernel wrapper. q: [B, Hq, D];
     kq/vq: [B, S, Hkv, Dp] packed; returns [B, Hq, D]."""
+    out, _ = decode_attn_ref(q, kq, ks, kz, vq, vs, vz, bias, None, None,
+                             None, bits=bits, group=group)
+    return out
+
+
+def decode_attn_ref(q, k, k_scale, k_zero, v, v_scale, v_zero, bias_main,
+                    rk, rv, bias_ring, *, bits: int, group: int,
+                    compute_dtype=jnp.float32):
+    """Oracle for `kernel.decode_attn_pallas`: dequantize (bits < 16),
+    concatenate the residual ring, attend, and return (out, mass)."""
     B, Hq, D = q.shape
-    S, Hkv = kq.shape[1], kq.shape[2]
+    Hkv = k.shape[2]
     Gq = Hq // Hkv
-    k = qref.dequant_k_ref(kq, ks, kz, bits, group, jnp.float32)
-    v = qref.dequant_v_ref(vq, vs, vz, bits, jnp.float32)
+    if bits < 16:
+        kd = qref.dequant_k_ref(k, k_scale, k_zero, bits, group,
+                                compute_dtype).astype(jnp.float32)
+        vd = qref.dequant_v_ref(v, v_scale, v_zero, bits,
+                                compute_dtype).astype(jnp.float32)
+    else:
+        kd, vd = k.astype(jnp.float32), v.astype(jnp.float32)
+    bias = bias_main
+    if rk is not None and rk.shape[1] > 0:
+        kd = jnp.concatenate([kd, rk.astype(jnp.float32)], axis=1)
+        vd = jnp.concatenate([vd, rv.astype(jnp.float32)], axis=1)
+        bias = jnp.concatenate([bias_main, bias_ring], axis=1)
     qf = q.astype(jnp.float32).reshape(B, Hkv, Gq, D)
-    s = jnp.einsum("bhgd,bshd->bhgs", qf, k) / math.sqrt(D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kd) / math.sqrt(D)
     s = s + bias[:, None, None, :]
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
-    return o.reshape(B, Hq, D).astype(q.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, vd)
+    mass = p.sum(axis=(1, 2))                     # [B, S+W]
+    return o.reshape(B, Hq, D).astype(q.dtype), mass

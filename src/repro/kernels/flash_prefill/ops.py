@@ -1,15 +1,24 @@
-"""Jit'd wrapper: Pallas on TPU, interpret elsewhere."""
+"""Dispatch wrapper: compiled Pallas on TPU, interpret-mode elsewhere.
+
+`interpret=None` resolves from the backend at call time; pass a bool to
+force either mode (tests force `interpret=True` on CPU)."""
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
+from repro.kernels.blocking import pick_block, resolve_interpret
 from repro.kernels.flash_prefill import kernel, ref
 
 
 def flash_attention(q, k, v, *, window: int = 0, bq: int = 512,
-                    bk: int = 512):
-    interpret = jax.default_backend() != "tpu"
-    return kernel.flash_prefill_pallas(q, k, v, window=window, bq=bq, bk=bk,
+                    bk: int = 512, interpret: Optional[bool] = None):
+    """q: [B, T, Hq, D]; k, v: [B, T, Hkv, D]. Causal (optionally sliding
+    window) flash attention; block sizes snap down to divisors of T."""
+    interpret = resolve_interpret(interpret)
+    T = q.shape[1]
+    return kernel.flash_prefill_pallas(q, k, v, window=window,
+                                       bq=pick_block(T, 1, bq),
+                                       bk=pick_block(T, 1, bk),
                                        interpret=interpret)
 
 

@@ -41,7 +41,13 @@ def main() -> None:
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id for --continuous early exit "
                          "(-1: length-based exit only)")
+    ap.add_argument("--use-kernels", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="fused Pallas decode/prefill kernels: auto = on "
+                         "for TPU, materialize oracle elsewhere; on forces "
+                         "the kernel path (interpret mode off-TPU)")
     args = ap.parse_args()
+    use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -54,7 +60,8 @@ def main() -> None:
         buckets = sorted({int(b) for b in args.buckets.split(",") if b}
                          or {args.prompt_len})
         eng = Engine(cfg, params, pol, prompt_len=max(buckets),
-                     max_new=args.max_new, slots=args.slots, buckets=buckets)
+                     max_new=args.max_new, slots=args.slots, buckets=buckets,
+                     use_kernels=use_kernels)
         eos = args.eos_id if args.eos_id >= 0 else None
         reqs = [
             Request(
@@ -88,7 +95,8 @@ def main() -> None:
             (args.requests, max(args.prompt_len // 4, 16), cfg.d_model)
         ).astype(np.float32)
     eng = Engine(cfg, params, pol, prompt_len=args.prompt_len,
-                 max_new=args.max_new, slots=args.slots)
+                 max_new=args.max_new, slots=args.slots,
+                 use_kernels=use_kernels)
     res = eng.generate(prompts, src_embeds=src)
     print(f"policy={res.policy_name}")
     print(f"prefill_s={res.prefill_seconds:.2f} "

@@ -160,11 +160,42 @@ def gqa_attention(
 # ---------------------------------------------------------------------------
 # Decode attention over a compressed cache
 # ---------------------------------------------------------------------------
+#
+# Two implementations of the same contract:
+#
+#   * **materialize oracle** (`use_kernels=False`): `cache.materialize`
+#     unpacks + dequantizes the whole main store to the model dtype and
+#     concatenates the residual ring, then runs XLA attention. Simple,
+#     bit-exact reference — but it moves 16-bit traffic per decode step
+#     regardless of `spec.bits`.
+#   * **fused Pallas kernel** (`use_kernels=True`): the packed codes are
+#     what moves HBM->VMEM (bits/16 of the oracle's bytes); dequant, the
+#     residual ring, and the attention-mass statistic are fused into one
+#     online-softmax pass (`repro.kernels.decode_qattn`).
+#
+# `use_kernels=None` defaults to the kernel path on TPU and the oracle
+# elsewhere; an explicit True off-TPU runs the kernel in interpret mode
+# (slow — for tests / parity checks only).
+
+
+def resolve_use_kernels(flag: Optional[bool]) -> bool:
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return bool(flag)
+
+
+def _kernel_supported(lc: LayerKV, spec: CacheSpec) -> bool:
+    """Shapes the fused kernel can tile; everything else takes the oracle."""
+    S = lc.k.shape[1]
+    if spec.quantized:
+        return S % spec.group == 0 and spec.bits in (2, 4, 8)
+    return True
 
 
 def decode_attention(
     q: Array, lc: LayerKV, spec: CacheSpec, *, window: int = 0,
     dtype=jnp.bfloat16, q_pos: Optional[Array] = None,
+    use_kernels: Optional[bool] = None, interpret: Optional[bool] = None,
 ):
     """q: [B, 1, Hq, D] rotated at absolute position `q_pos` [B]
     (defaults to lc.pos - 1: the append-first decode convention, so the
@@ -175,15 +206,38 @@ def decode_attention(
     """
     if q_pos is None:
         q_pos = lc.pos - 1
-    k, v, bias = kvcache.materialize(lc, spec, dtype)
     S = lc.k.shape[1]
     W = lc.rk.shape[1]
     ring_pos = (lc.pos[:, None] - lc.rlen[:, None] + jnp.arange(W)[None])
     kv_positions = jnp.concatenate([lc.slot_pos, ring_pos.astype(jnp.int32)],
                                    axis=1) if W else lc.slot_pos
+    bias = kvcache.validity_bias(lc)
     if window > 0:  # sliding-window models (mixtral): mask stale slots
         in_win = kv_positions > (q_pos[:, None] - window)
         bias = bias + jnp.where(in_win, 0.0, NEG_INF)
+
+    if resolve_use_kernels(use_kernels) and _kernel_supported(lc, spec):
+        from repro.kernels.decode_qattn import ops as dq_ops
+        quant = spec.quantized
+        # the mass statistic costs a [Gq, S+W] probability scratch and a
+        # per-step HBM write — only pay for it when the policy reads it
+        want_mass = spec.track_scores()
+        out, mass = dq_ops.decode_attention_fused(
+            q[:, 0],
+            lc.k, lc.k_scale if quant else None,
+            lc.k_zero if quant else None,
+            lc.v, lc.v_scale if quant else None,
+            lc.v_zero if quant else None,
+            bias[:, :S],
+            lc.rk if W else None, lc.rv if W else None,
+            bias[:, S:] if W else None,
+            bits=spec.bits if quant else 16, group=spec.group,
+            return_mass=want_mass, compute_dtype=dtype, interpret=interpret)
+        if mass is None:
+            mass = jnp.zeros((q.shape[0], S + W), jnp.float32)
+        return out[:, None].astype(dtype), mass
+
+    k, v = kvcache.materialize_kv(lc, spec, dtype)
     out, mass = gqa_attention(
         q, k, v, causal=False, kv_positions=kv_positions, kv_bias=bias,
         q_positions=q_pos[:, None], return_mass=True,

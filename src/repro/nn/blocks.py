@@ -86,6 +86,19 @@ def cross_kv(p: dict, memory: Array, cfg):
 # ---------------------------------------------------------------------------
 
 
+def _use_flash_prefill(cfg, causal: bool, positions) -> bool:
+    """Dense full-sequence attention via the Pallas flash kernel —
+    **inference prefill only** (`block_prefill`): pallas_call has no AD
+    rule, so the differentiable training forward (`block_train`) must
+    stay on XLA attention. The kernel derives its causal/window mask
+    purely from block offsets (0-based arange), so it is only legal when
+    the caller left `positions=None` — the standard-arange default.
+    Callers with custom positions (offset prefills, packing) stay on the
+    XLA path."""
+    return (causal and positions is None
+            and attn.resolve_use_kernels(getattr(cfg, "use_kernels", None)))
+
+
 def block_train(p: dict, x: Array, cfg, kind: str, *,
                 positions: Optional[Array] = None, causal: bool = True,
                 memory_kv=None) -> tuple[Array, BlockAux]:
@@ -93,6 +106,8 @@ def block_train(p: dict, x: Array, cfg, kind: str, *,
     if kind == "attn":
         from repro.nn import sharding as shd
         q, k, v = attn.qkv(p["attn"], h, cfg, positions)
+        # no kernel dispatch here: block_train runs under value_and_grad
+        # and pallas_call is not differentiable (see _use_flash_prefill)
         o = attn.gqa_attention(q, k, v, causal=causal,
                                window=cfg.sliding_window,
                                q_positions=positions, kv_positions=positions)
@@ -121,9 +136,18 @@ def block_prefill(p: dict, x: Array, cfg, kind: str, spec: CacheSpec, *,
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind == "attn":
         q, k, v = attn.qkv(p["attn"], h, cfg, positions)
-        o, mass = attn.gqa_attention(
-            q, k, v, causal=True, window=cfg.sliding_window,
-            q_positions=positions, kv_positions=positions, return_mass=True)
+        if _use_flash_prefill(cfg, True, positions) and not spec.track_scores():
+            # policies that never read the mass statistic (streaming /
+            # quantized-only) take the flash kernel; compress_prompt's
+            # selection uses recency for these, so zero mass is exact.
+            from repro.kernels.flash_prefill import ops as fp_ops
+            o = fp_ops.flash_attention(q, k, v, window=cfg.sliding_window)
+            mass = jnp.zeros(x.shape[:2], jnp.float32)
+        else:
+            o, mass = attn.gqa_attention(
+                q, k, v, causal=True, window=cfg.sliding_window,
+                q_positions=positions, kv_positions=positions,
+                return_mass=True)
         B, T, _ = x.shape
         x = x + L.linear(p["attn"]["wo"], o.reshape(B, T, -1))
         lc = kvcache.compress_prompt(spec, k, v, mass, key=key, dtype=cfg.dtype,
@@ -154,9 +178,9 @@ def block_decode(p: dict, x: Array, cfg, kind: str, spec: CacheSpec,
         q, k_new, v_new = attn.qkv(p["attn"], h, cfg, pos)
         # append-first: the new token attends to itself through the cache
         lc = kvcache.append_token(lc, spec, k_new[:, 0], v_new[:, 0], key=key)
-        o, mass = attn.decode_attention(q, lc, spec,
-                                        window=cfg.sliding_window,
-                                        dtype=cfg.dtype, q_pos=pos[:, 0])
+        o, mass = attn.decode_attention(
+            q, lc, spec, window=cfg.sliding_window, dtype=cfg.dtype,
+            q_pos=pos[:, 0], use_kernels=getattr(cfg, "use_kernels", None))
         lc = kvcache.accumulate_scores(lc, spec, mass, key=key)
         B = x.shape[0]
         x = x + L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))

@@ -152,8 +152,6 @@ def train_forward(params, cfg, batch: dict):
     Returns (logits [B, S, V] f32, TrainAux)."""
     tokens = batch["tokens"]
     x = L.embed(params["embed"], tokens)
-    Bsz, T = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(T)[None], (Bsz, T))
     memory = None
     if cfg.is_encoder_decoder:
         memory = encode(params, cfg, batch["src_embeds"].astype(cfg.dtype))
@@ -166,8 +164,10 @@ def train_forward(params, cfg, batch: dict):
             if cfg.is_encoder_decoder:
                 k_, v_ = B.cross_kv(p_sb[f"sub{i}"], memory, cfg)
                 mk = (k_, v_, None)
+            # positions=None: standard arange (built inside qkv/attention)
+            # — the contract that lets blocks dispatch the flash kernel
             x, aux = B.block_train(p_sb[f"sub{i}"], x, cfg, kinds[i][0],
-                                   positions=positions, memory_kv=mk)
+                                   positions=None, memory_kv=mk)
             lb, zl = lb + aux.lb_loss, zl + aux.z_loss
         return (x, lb, zl), None
 
@@ -188,8 +188,7 @@ def prefill(params, cfg, batch: dict, spec: CacheSpec, *,
     """Returns (last-token logits [B, V], ModelCache)."""
     tokens = batch["tokens"]
     x = L.embed(params["embed"], tokens)
-    Bsz, T = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(T)[None], (Bsz, T))
+    T = tokens.shape[1]
     sb, n_sb, kinds = sb_layout(cfg)
     aps, sps = attn_positions(cfg), ssm_positions(cfg)
 
@@ -220,15 +219,16 @@ def prefill(params, cfg, batch: dict, spec: CacheSpec, *,
                 mkv = (k_, v_, None)
             if kinds[i][0] == "attn":
                 j = aps.index(i)
+                # positions=None: standard arange (flash-kernel eligible)
                 x, _, piece = B.block_prefill(
                     p_sb[f"sub{i}"], x, cfg, "attn", spec,
-                    positions=positions, logical_budget=buds[j],
+                    positions=None, logical_budget=buds[j],
                     key=ks[j], memory_kv=mkv)
                 attn_pieces.append(piece)
             else:
                 x, _, piece = B.block_prefill(
                     p_sb[f"sub{i}"], x, cfg, "ssm", spec,
-                    positions=positions, memory_kv=mkv)
+                    positions=None, memory_kv=mkv)
                 ssm_pieces.append(piece)
         a = (jax.tree.map(lambda *xs: jnp.stack(xs), *attn_pieces)
              if attn_pieces else None)

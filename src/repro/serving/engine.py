@@ -28,6 +28,7 @@ latency / slot occupancy.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence, Union
@@ -87,9 +88,14 @@ class Engine:
                  prompt_len: Optional[int] = None, max_new: int,
                  slots: int = 4, buckets: Optional[Sequence[int]] = None,
                  sampler: Callable = sampler_lib.greedy,
-                 allocator_signal: Optional[dict] = None, seed: int = 0):
+                 allocator_signal: Optional[dict] = None, seed: int = 0,
+                 use_kernels: Optional[bool] = None):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
+        if use_kernels is not None:
+            # fused Pallas decode/prefill vs the materialize oracle; None
+            # keeps the config's auto policy (kernels on TPU only)
+            cfg = dataclasses.replace(cfg, use_kernels=use_kernels)
         self.buckets = (tuple(sorted({int(b) for b in buckets}))
                         if buckets else (int(prompt_len),))
         if prompt_len is None:
@@ -282,10 +288,12 @@ class Engine:
         decode_tokens = 0
         lb = jnp.asarray(self.layer_budgets)
 
-        def admit_into(slot_idx: int) -> None:
+        def admit_into(slot_idx: int) -> bool:
             """Fill a free slot from the queue: bucketed batch-1 prefill,
             scatter into the live cache, stream the first token. Loops in
-            case a request finishes on its very first token."""
+            case a request finishes on its very first token. Returns True
+            when a request now occupies the slot (its first token is in
+            `next_tok[slot_idx]`)."""
             nonlocal cache, prefill_s
             while True:
                 req = sched.admit_next(slot_idx)
@@ -293,7 +301,7 @@ class Engine:
                     # nothing queued: clear the slot so stale KV never
                     # leaks into accounting or a later occupant
                     cache = self._reset(cache, jnp.int32(slot_idx))
-                    return
+                    return False
                 self.key, k1 = jax.random.split(self.key)
                 t0 = time.perf_counter()
                 logits, pc = self._prefill(
@@ -306,30 +314,62 @@ class Engine:
                 next_tok[slot_idx] = tok_i
                 reason = sched.record_token(slot_idx, tok_i)
                 if reason is None:
-                    return
+                    return True
                 sched.retire(slot_idx, reason)   # 1-token request; refill
 
         for i in range(self.slots):
             admit_into(i)
 
+        # Double-buffered decode: step N+1 is dispatched *before* blocking
+        # on step N's token fetch — its inputs are step N's device-side
+        # outputs, so the only host sync per step is the (pipelined) fetch
+        # of the previous step's tokens. A slot that retires at step N
+        # already has a stale step N+1 in flight: that step's output for
+        # the slot is dropped from the valid set, the admission's cache
+        # insert overwrites the slot wholesale (wiping the stale append),
+        # and the next dispatch carries the admitted first token — an
+        # admission simply lands one step later than a serial loop would
+        # place it. Per-request token streams are unchanged for
+        # deterministic sampling/eviction (greedy + full/streaming/h2o/
+        # kivi*); stochastic paths (non-greedy samplers, nacl/keyformer
+        # gumbel noise) see a different-but-equally-random key order,
+        # because dispatching ahead consumes self.key splits in a
+        # different sequence around mid-run admissions.
+        tok_in = jnp.asarray(next_tok)          # [slots] device-side
+        pending = None                          # (tok_dev, valid slots)
+        loop_t0 = time.perf_counter()
+        prefill_at_loop = prefill_s
         while True:
             active = sched.active_slots()
-            if not active:
-                break                             # queue drained too
-            self.key, k2 = jax.random.split(self.key)
-            t0 = time.perf_counter()
-            tok_dev, cache = self._decode(self.params, cache,
-                                          jnp.asarray(next_tok[:, None]), k2)
-            toks = np.asarray(tok_dev)            # blocks on the step
-            decode_s += time.perf_counter() - t0
-            sched.note_decode_step()
-            next_tok = toks.astype(np.int32).copy()
-            for i in active:
-                decode_tokens += 1
-                reason = sched.record_token(i, toks[i])
-                if reason is not None:
-                    sched.retire(i, reason)
-                    admit_into(i)
+            new_pending = None
+            if active:
+                self.key, k2 = jax.random.split(self.key)
+                tok_dev, cache = self._decode(self.params, cache,
+                                              tok_in[:, None], k2)
+                sched.note_decode_step()
+                new_pending = (tok_dev, list(active))
+                tok_in = tok_dev                # feed N+1 from N, no sync
+            if pending is None and new_pending is None:
+                break
+            if pending is not None:
+                ptok, pvalid = pending
+                toks = np.asarray(ptok)         # blocks on step N-1 only
+                admitted = []
+                for i in pvalid:
+                    decode_tokens += 1
+                    reason = sched.record_token(i, toks[i])
+                    if reason is not None:
+                        sched.retire(i, reason)
+                        if new_pending is not None and i in new_pending[1]:
+                            new_pending[1].remove(i)
+                        if admit_into(i):
+                            admitted.append(i)
+                if admitted:
+                    tok_in = tok_in.at[jnp.asarray(admitted)].set(
+                        jnp.asarray(next_tok[admitted]))
+            pending = new_pending
+        decode_s = (time.perf_counter() - loop_t0) - (prefill_s -
+                                                      prefill_at_loop)
 
         phys = tree_bytes(cache)
         logical = self._logical_bytes_per_seq() * self.slots

@@ -104,6 +104,71 @@ def test_decode_qattn_bf16_query():
         atol=2e-2)
 
 
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+@pytest.mark.parametrize("W", [0, 16])
+def test_decode_attn_fused_ring_mass_matches_ref(bits, W):
+    """The extended kernel: dense (bits=16) and quantized main stores,
+    the residual ring as a trailing online-softmax block, and the
+    per-key attention-mass output."""
+    B, S, Hkv, Gq, D, G = 2, 128, 2, 4, 64, 32
+    Hq = Hkv * Gq
+    keys = jax.random.split(jax.random.key(0), 7)
+    k = jax.random.normal(keys[0], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(keys[1], (B, S, Hkv, D), jnp.float32)
+    q = jax.random.normal(keys[2], (B, Hq, D), jnp.float32)
+    bias = jnp.where(jax.random.uniform(keys[3], (B, S)) < 0.2, -1e30, 0.0)
+    if W:
+        rk = jax.random.normal(keys[4], (B, W, Hkv, D), jnp.float32)
+        rv = jax.random.normal(keys[5], (B, W, Hkv, D), jnp.float32)
+        rbias = jnp.where(jax.random.uniform(keys[6], (B, W)) < 0.3,
+                          -1e30, 0.0)
+    else:
+        rk = rv = rbias = None
+    if bits < 16:
+        kk, ks, kz = kq_ref.kquant_ref(k, bits, G)
+        vv, vs, vz = kq_ref.vquant_ref(v, bits)
+    else:
+        kk, vv = k, v
+        ks = kz = vs = vz = None
+    o_ref, m_ref = dq_ref.decode_attn_ref(
+        q, kk, ks, kz, vv, vs, vz, bias, rk, rv, rbias, bits=bits, group=G)
+    o_ker, m_ker = dq_kernel.decode_attn_pallas(
+        q, kk, ks, kz, vv, vs, vz, bias, rk, rv, rbias, bits=bits, group=G,
+        block_s=64, return_mass=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(m_ker), np.asarray(m_ref),
+                               atol=2e-4, rtol=2e-4)
+    assert m_ker.shape == (B, S + W)
+    # mass is a probability decomposition: rows sum to #query heads
+    np.testing.assert_allclose(np.asarray(m_ker.sum(-1)),
+                               np.full((B,), Hq, np.float32), rtol=1e-4)
+
+
+def test_decode_attn_fused_block_snapping():
+    """Odd main-store lengths snap the cache block down to a divisor
+    (quantized stores tile in group units)."""
+    B, S, Hkv, Gq, D, G = 1, 96, 1, 2, 32, 32
+    keys = jax.random.split(jax.random.key(1), 3)
+    k = jax.random.normal(keys[0], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(keys[1], (B, S, Hkv, D), jnp.float32)
+    q = jax.random.normal(keys[2], (B, Hkv * Gq, D), jnp.float32)
+    bias = jnp.zeros((B, S))
+    kk, ks, kz = kq_ref.kquant_ref(k, 4, G)
+    vv, vs, vz = kq_ref.vquant_ref(v, 4)
+    assert dq_kernel.pick_block(S, G, 512) == 96
+    assert dq_kernel.pick_block(S, 1, 64) == 48
+    o_ref, m_ref = dq_ref.decode_attn_ref(
+        q, kk, ks, kz, vv, vs, vz, bias, None, None, None, bits=4, group=G)
+    o_ker, m_ker = dq_kernel.decode_attn_pallas(
+        q, kk, ks, kz, vv, vs, vz, bias, None, None, None, bits=4, group=G,
+        block_s=512, return_mass=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(m_ker), np.asarray(m_ref),
+                               atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # flash_prefill
 # ---------------------------------------------------------------------------
