@@ -11,7 +11,14 @@ can't recycle a finished sequence's slot; continuous batching retires a
 request the step it finishes and prefills the next one into the freed
 slot, so its useful-token rate is the one compression actually buys.
 
+Also reports mixed-budget capacity: physical pool bytes and effective
+co-resident sequences-per-GB for the paged block-table cache vs the
+dense per-slot layout when full-precision and kivi2 requests share one
+pool (the dense layout must reserve every slot at the full-precision
+worst case; the paged pool charges each request only its own blocks).
+
     PYTHONPATH=src python benchmarks/serving_continuous.py
+    PYTHONPATH=src python benchmarks/serving_continuous.py --paged
     PYTHONPATH=src python benchmarks/serving_continuous.py \
         --policies h2o,kivi2 --requests 24 --check
 """
@@ -78,15 +85,59 @@ def run_wave(cfg, params, pol, requests, slots, warmup: bool,
 
 
 def run_continuous(cfg, params, pol, requests, slots, buckets, warmup: bool,
-                   use_kernels=None):
+                   use_kernels=None, paged=False, block_len=16):
     eng = Engine(cfg, params, pol, max_new=MAX_NEW_CAP, slots=slots,
-                 buckets=buckets, use_kernels=use_kernels)
+                 buckets=buckets, use_kernels=use_kernels, paged=paged,
+                 block_len=block_len)
     if warmup:
         eng.generate_continuous([
             Request(tokens=r.tokens, max_new=2)
             for r in requests[:len(buckets)]])
     return eng.generate_continuous(
         [Request(tokens=r.tokens, max_new=r.max_new) for r in requests])
+
+
+def mixed_budget_capacity(cfg, params, slots, budget, window, block_len=16):
+    """Physical bytes per co-resident sequence, paged vs dense, for a
+    50/50 full + kivi2 mix.
+
+    Dense baseline: one slots-wide dense cache must reserve every slot at
+    the *worst case* (full-precision, max bucket) to accept either
+    request kind — per-slot bytes are measured from the real engine
+    cache. Paged: each request pins only the blocks its budgeted length
+    needs (measured peak from a live run), and retired blocks recycle, so
+    a byte-denominated pool admits whichever mix arrives. Returns a dict
+    of per-seq bytes and the co-resident sequences-per-GB ratio."""
+    L = max(BUCKETS)
+    per_seq = {}
+    pool_reserved = {}
+    for pname in ("full", "kivi2"):
+        pol = presets(budget=budget, window=window)[pname]
+        eng = Engine(cfg, params, pol, prompt_len=L, max_new=MAX_NEW_CAP,
+                     slots=slots, buckets=(L,), paged=True,
+                     block_len=block_len)
+        res = eng.generate_continuous(
+            [Request(tokens=np.arange(L, dtype=np.int32), max_new=2)])
+        per_seq[pname] = res.paged_bytes_per_seq(slots)
+        pool_reserved[pname] = res.pool_blocks * res.pool_block_bytes
+    dense_eng = Engine(cfg, params, presets(budget=budget, window=window)["full"],
+                       prompt_len=L, max_new=MAX_NEW_CAP, slots=slots,
+                       buckets=(L,))
+    resd = dense_eng.generate_continuous(
+        [Request(tokens=np.arange(L, dtype=np.int32), max_new=2)])
+    dense_slot = resd.cache_physical_bytes / slots
+    paged_mixed = (per_seq["full"] + per_seq["kivi2"]) / 2
+    GB = 2 ** 30
+    return {
+        "dense_bytes_per_slot": dense_slot,
+        "paged_bytes_full": per_seq["full"],
+        "paged_bytes_kivi2": per_seq["kivi2"],
+        "paged_bytes_mixed": paged_mixed,
+        "pool_reserved_bytes": pool_reserved,
+        "dense_seqs_per_gb": GB / dense_slot,
+        "paged_seqs_per_gb": GB / paged_mixed,
+        "ratio": dense_slot / paged_mixed,
+    }
 
 
 def main() -> int:
@@ -107,6 +158,13 @@ def main() -> int:
                          "TPU only (interpret-mode kernels on CPU are an "
                          "emulator — time them with kernels_micro, not "
                          "here)")
+    ap.add_argument("--paged", action="store_true",
+                    help="run the continuous engine on the paged "
+                         "block-table cache (resident bytes then report "
+                         "real pool usage)")
+    ap.add_argument("--block-len", type=int, default=16)
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="skip the mixed-budget capacity report")
     args = ap.parse_args()
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
@@ -126,7 +184,8 @@ def main() -> int:
                               use_kernels=use_kernels)
         cont = run_continuous(cfg, params, pol, requests, args.slots,
                               BUCKETS, warmup=not args.no_warmup,
-                              use_kernels=use_kernels)
+                              use_kernels=use_kernels, paged=args.paged,
+                              block_len=args.block_len)
         rows.append(HeadToHead(
             policy=pname,
             wave_tok_s=wave_tok_s,
@@ -149,12 +208,36 @@ def main() -> int:
               f"{r.ttft_mean_s * 1e3:>8.1f} "
               f"{human_bytes(r.resident_bytes):>12} {r.ratio:>5.1f}x")
 
+    cap = None
+    if not args.no_mixed:
+        cap = mixed_budget_capacity(cfg, params, args.slots, args.budget,
+                                    args.window, block_len=args.block_len)
+        print("\nmixed-budget capacity (50/50 full + kivi2 co-resident):")
+        print(f"  dense worst-case/slot: "
+              f"{human_bytes(cap['dense_bytes_per_slot']):>12}  "
+              f"({cap['dense_seqs_per_gb']:,.0f} seqs/GB)")
+        print(f"  paged full request:    "
+              f"{human_bytes(cap['paged_bytes_full']):>12}")
+        print(f"  paged kivi2 request:   "
+              f"{human_bytes(cap['paged_bytes_kivi2']):>12}")
+        print(f"  paged mixed mean:      "
+              f"{human_bytes(cap['paged_bytes_mixed']):>12}  "
+              f"({cap['paged_seqs_per_gb']:,.0f} seqs/GB)")
+        print(f"  co-residency at equal physical bytes: "
+              f"{cap['ratio']:.2f}x paged vs dense")
+
     if args.check:
         bad = [r.policy for r in rows if r.speedup < 1.0]
         if bad:
             print(f"CHECK FAILED: continuous slower than wave for {bad}")
             return 1
-        print("CHECK PASSED: continuous >= wave tok/s for all policies")
+        if cap is not None and cap["ratio"] < 1.5:
+            print(f"CHECK FAILED: mixed-budget paged co-residency "
+                  f"{cap['ratio']:.2f}x < 1.5x")
+            return 1
+        print("CHECK PASSED: continuous >= wave tok/s for all policies"
+              + ("" if cap is None else
+                 f"; paged mixed-budget co-residency {cap['ratio']:.2f}x"))
     return 0
 
 

@@ -3,4 +3,7 @@ from repro.core.cache import (  # noqa: F401
     CacheSpec, FULL, LayerKV, SSMState, append_token, compress_prompt,
     materialize, stacked_kv,
 )
+from repro.core.paging import (  # noqa: F401
+    BlockAllocator, PagedLayerKV, stacked_paged_kv,
+)
 from repro.core.policy import CompressionPolicy, presets  # noqa: F401

@@ -236,6 +236,12 @@ def materialize_kv(lc: LayerKV, spec: CacheSpec, dtype=jnp.bfloat16):
     `nn.attention.decode_attention` under `use_kernels`) reads the packed
     codes directly and never materializes this tensor.
     """
+    if not isinstance(lc, LayerKV):
+        # paged store: gather the slot's blocks into the dense per-slot
+        # view first (the parity/oracle path; the paged Pallas kernel
+        # walks the block table without this gather)
+        from repro.core import paging
+        lc = paging.gather_dense(lc, spec)
     B, S, H, _ = lc.k.shape
     if spec.quantized:
         G = spec.group
@@ -407,6 +413,44 @@ def append_token_dense(
 # ---------------------------------------------------------------------------
 
 
+def plan_group_flush(lc, spec: CacheSpec, S: int):
+    """Shared quantized-flush planning for the dense and paged stores.
+
+    `lc` is any cache pytree carrying the per-slot metadata fields
+    (scores/slot_pos/length/pos/budget/rk/rv) — `LayerKV` or
+    `paging.PagedLayerKV`. Returns ``(gslot, cap_groups, kq, vq,
+    new_pos)``: the destination group slot per row (victim when at
+    budget, else the next free group), the group capacity, the packed
+    quantized ring (KIVI per-channel K / per-token V), and the absolute
+    positions of the flushed tokens."""
+    B = lc.scores.shape[0]
+    G = spec.group
+    W = spec.window
+    n_groups = S // G
+    cap_groups = jnp.minimum(lc.budget // G, n_groups)
+    used_groups = lc.length // G
+    at_cap = used_groups >= cap_groups
+    # group-granular victim: argmin of summed scores per group
+    gscores = lc.scores.reshape(B, n_groups, G).sum(-1)
+    gpos = lc.slot_pos.reshape(B, n_groups, G).max(-1)
+    occupied = gpos >= 0
+    sinkg = jnp.arange(n_groups)[None] == 0          # protect group 0 (sinks)
+    evictable = occupied & ~sinkg
+    if spec.policy in ("none", "streaming"):
+        crit = jnp.where(evictable, gpos, jnp.iinfo(jnp.int32).max)
+    else:
+        crit = jnp.where(evictable, gscores, jnp.inf)
+    victim_g = jnp.argmin(crit, axis=-1)
+    gslot = jnp.where(at_cap, victim_g, used_groups)  # [B]
+
+    kq = qz.quantize_k_per_channel(lc.rk, spec.bits, G)   # codes [B,W,H,D]
+    vq = qz.quantize_v_per_token(lc.rv, spec.bits)
+    kq = kq._replace(q=qz.pack_codes(kq.q, spec.bits))    # -> [B,W,H,Dp]
+    vq = vq._replace(q=qz.pack_codes(vq.q, spec.bits))
+    new_pos = (lc.pos[:, None] - W + jnp.arange(W)[None]).astype(jnp.int32)
+    return gslot, cap_groups, kq, vq, new_pos
+
+
 def append_token_quantized(
     lc: LayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
     key: Optional[Array] = None,
@@ -423,32 +467,12 @@ def append_token_quantized(
         B, S, H, _Dp = lc.k.shape
         D = lc.k_scale.shape[-1]          # true head_dim (k is packed)
         n_groups = S // G
-        cap_groups = jnp.minimum(lc.budget // G, n_groups)
-        used_groups = lc.length // G
-        at_cap = used_groups >= cap_groups
-        # group-granular victim: argmin of summed scores per group
-        gscores = lc.scores.reshape(B, n_groups, G).sum(-1)
-        gpos = lc.slot_pos.reshape(B, n_groups, G).max(-1)
-        occupied = gpos >= 0
-        sinkg = jnp.arange(n_groups)[None] == 0          # protect group 0 (sinks)
-        evictable = occupied & ~sinkg
-        if spec.policy in ("none", "streaming"):
-            crit = jnp.where(evictable, gpos, jnp.iinfo(jnp.int32).max)
-        else:
-            crit = jnp.where(evictable, gscores, jnp.inf)
-        victim_g = jnp.argmin(crit, axis=-1)
-        gslot = jnp.where(at_cap, victim_g, used_groups)  # [B]
-
-        kq = qz.quantize_k_per_channel(lc.rk, spec.bits, G)   # codes [B,W,H,D]
-        vq = qz.quantize_v_per_token(lc.rv, spec.bits)
-        kq = kq._replace(q=qz.pack_codes(kq.q, spec.bits))    # -> [B,W,H,Dp]
-        vq = vq._replace(q=qz.pack_codes(vq.q, spec.bits))
+        gslot, cap_groups, kq, vq, new_pos = plan_group_flush(lc, spec, S)
 
         def put_group(arr, gs, val):   # arr [B, n_groups*?...]
             return _put_rows(arr.reshape(B, n_groups, -1), gs,
                              val.reshape(B, -1)).reshape(arr.shape)
 
-        new_pos = (lc.pos[:, None] - W + jnp.arange(W)[None]).astype(jnp.int32)
         return lc._replace(
             k=put_group(lc.k, gslot, kq.q),
             v=put_group(lc.v, gslot, vq.q),
@@ -493,8 +517,13 @@ def append_token_quantized(
     return lc
 
 
-def append_token(lc: LayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
-                 key: Optional[Array] = None) -> LayerKV:
+def append_token(lc, spec: CacheSpec, k_new: Array, v_new: Array,
+                 key: Optional[Array] = None):
+    if not isinstance(lc, LayerKV):
+        # paged store (core/paging.py): same eviction/flush semantics,
+        # writes routed through the block table
+        from repro.core import paging
+        return paging.append_token_paged(lc, spec, k_new, v_new, key=key)
     if spec.quantized:
         return append_token_quantized(lc, spec, k_new, v_new, key)
     return append_token_dense(lc, spec, k_new, v_new, key)
@@ -512,7 +541,7 @@ def accumulate_scores(
     (mean over query heads), aligned with `materialize` ordering."""
     if not spec.track_scores():
         return lc
-    S = lc.k.shape[1]
+    S = lc.scores.shape[1]          # main-store length (dense or paged)
     main, resid = attn_mass[:, :S], attn_mass[:, S:]
     if spec.policy == "keyformer" and spec.keyformer_tau > 0 and key is not None:
         g = jax.random.gumbel(key, main.shape, jnp.float32)
@@ -663,8 +692,16 @@ def init_ssm_state(batch: int, conv_dim: int, d_conv: int, heads: int,
 # ---------------------------------------------------------------------------
 
 
-def cache_physical_bytes(lc: LayerKV) -> int:
+def cache_physical_bytes(lc) -> int:
+    """Resident bytes of one cache pytree. Dense stores: every leaf is
+    per-slot reserved memory, so this is plain `tree_bytes`. Paged stores
+    report *allocated-block* bytes — pool rows a slot actually mapped via
+    the block table — plus the (small) per-slot metadata, so occupancy
+    stats reflect real pool usage rather than the reserved worst case."""
     from repro.utils import tree_bytes
+    if not isinstance(lc, LayerKV) and hasattr(lc, "block_tbl"):
+        from repro.core import paging
+        return paging.paged_physical_bytes(lc)
     return tree_bytes(lc)
 
 

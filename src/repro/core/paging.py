@@ -1,0 +1,487 @@
+"""Paged block-table KV cache: one physical pool shared across slots.
+
+The dense `LayerKV` reserves a worst-case ``[B, S, H, D]`` main store per
+batch slot, so a short-bucket request and a max-length request pin
+identical physical memory and mixed-budget co-residency wastes most of
+the pool (the fragmentation failure mode arXiv:2503.24000 names as the
+reason compression alone does not buy throughput). This module is the
+TPU-static adaptation of vLLM-style paging:
+
+  * **block pool** — per attention layer, ``[n_blocks, block_len, H, Dp]``
+    for the packed/dense codes plus matching scale/zero pools for
+    quantized stores. One *id space* spans every layer: allocating block
+    ``i`` reserves row ``i`` of every layer's pools at once, so the
+    free-list allocator and the per-slot table stay layer-agnostic.
+  * **block table** — ``[slots, max_blocks]`` int32 of pool block ids
+    (-1 = unmapped). Logical main-store row ``s`` of slot ``b`` lives at
+    pool row ``tbl[b, s // block_len] * block_len + s % block_len``.
+  * **free-list allocator** — host-side (like the scheduler: no jax),
+    consulted at admission; blocks return to the pool on retire, so
+    freed capacity is immediately reusable by any queued request.
+
+All shapes are static: fixed ``n_blocks``, fixed ``max_blocks`` per
+table row, reads/writes are gathers/scatters by block index — nothing
+dynamic under jit. Per-slot *metadata* (scores, slot positions, lengths,
+the fp residual ring) stays in dense ``[B, ...]`` leaves: it carries no
+``H*D`` factor, and keeping it dense lets the eviction / flush / bias
+logic in `core.cache` run unchanged on either store (the metadata field
+names deliberately match `LayerKV`).
+
+Two read paths over the same pool:
+
+  * `gather_dense` — materialize the slot's blocks back into the dense
+    per-slot view and reuse the `LayerKV` oracle math (bit-exact parity
+    with the dense store, the token-equality contract);
+  * the block-table Pallas kernel
+    (`kernels.decode_qattn.decode_attn_paged_pallas`) — walks the block
+    list via scalar-prefetch index maps, never materializing the view.
+
+Invalid table entries (-1) are handled by *indices*, not values: reads
+clamp to block 0 and are masked by the validity bias; writes redirect to
+one-past-the-end and are dropped by the scatter (`mode="drop"`).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as kvcache
+from repro.core.cache import CacheSpec
+
+Array = jax.Array
+
+# Leaves backed by the shared pool (no batch dim; leading dims are layer
+# stacking, then [n_blocks, rows_per_block, ...]).
+POOL_FIELDS = ("pk", "pv", "pk_scale", "pk_zero", "pv_scale", "pv_zero")
+# Dense per-slot metadata, name-compatible with LayerKV so the eviction /
+# flush / bias helpers in core.cache duck-type across both stores.
+META_FIELDS = ("rk", "rv", "r_scores", "scores", "slot_pos",
+               "length", "rlen", "pos")
+
+
+class PagedLayerKV(NamedTuple):
+    """One attention layer's paged cache. Pool leaves have **no batch
+    dim** — slots share them through `block_tbl`. Metadata leaves mirror
+    `LayerKV` exactly (same names, same shapes)."""
+
+    pk: Array         # [n_blocks, bl, H, Dp] bf16 | packed int8
+    pv: Array         # [n_blocks, bl, H, Dp]
+    pk_scale: Array   # [n_blocks, bl//G, H, D] f32 (bits<16) else [.., 0, H, D]
+    pk_zero: Array
+    pv_scale: Array   # [n_blocks, bl, H] f32 (bits<16) else [.., 0, H]
+    pv_zero: Array
+    block_tbl: Array  # [B, max_blocks] int32 pool block ids, -1 = unmapped
+    rk: Array         # [B, W, H, D] residual ring (W may be 0)
+    rv: Array
+    r_scores: Array   # [B, W] f32
+    scores: Array     # [B, S] f32 accumulated attention mass
+    slot_pos: Array   # [B, S] int32, -1 = empty
+    length: Array     # [B] int32 valid slots in main store
+    rlen: Array       # [B] int32 valid slots in residual
+    pos: Array        # [B] int32 absolute next position
+    budget: Array     # [] int32 logical per-layer budget (<= S physical)
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+
+def resolve_block_len(spec: CacheSpec, S: int, block_len: int) -> int:
+    """Largest legal block length <= the request. Quantized stores flush
+    whole groups, so the block IS the group; dense stores need
+    ``S % block_len == 0`` (static grids / exact table coverage), so snap
+    to the largest divisor of S — warning when the snap is drastic,
+    because a tiny block length is a table-width / kernel-grid perf
+    cliff (e.g. a prime S can only take block_len 1)."""
+    if spec.quantized:
+        return spec.group
+    req = max(int(block_len), 1)
+    bl = max(d for d in range(1, min(req, S) + 1) if S % d == 0)
+    if bl < req and bl < 4:
+        import warnings
+        warnings.warn(
+            f"paged block_len snapped {req} -> {bl} (store length {S} has "
+            f"no larger divisor <= {req}); pad prompt_len/max_new so "
+            f"S is divisible by the block length you want", stacklevel=2)
+    return bl
+
+
+def init_paged_kv(
+    spec: CacheSpec, batch: int, max_len: int, kv_heads: int, head_dim: int,
+    *, n_blocks: int, block_len: int, dtype=jnp.bfloat16,
+    logical_budget: Optional[int] = None,
+) -> PagedLayerKV:
+    """Zeros-initialized paged layer cache (cf. `cache.init_layer_kv`)."""
+    S = spec.main_store_len(max_len)
+    bl = resolve_block_len(spec, S, block_len)
+    assert S % bl == 0, (S, bl)
+    if spec.quantized:
+        assert bl == spec.group, "quantized blocks flush group-at-a-time"
+    n_max = S // bl
+    W = spec.window
+    G = spec.group if spec.quantized else max(spec.group, 1)
+    spb = bl // G if spec.quantized else 0      # scale rows per block
+    store_dt = jnp.int8 if spec.quantized else dtype
+    B, H, D = batch, kv_heads, head_dim
+    Dp = D * spec.bits // 8 if spec.quantized else D
+    lb = logical_budget if logical_budget is not None else S
+    return PagedLayerKV(
+        pk=jnp.zeros((n_blocks, bl, H, Dp), store_dt),
+        pv=jnp.zeros((n_blocks, bl, H, Dp), store_dt),
+        pk_scale=jnp.zeros((n_blocks, spb, H, D), jnp.float32),
+        pk_zero=jnp.zeros((n_blocks, spb, H, D), jnp.float32),
+        pv_scale=jnp.zeros((n_blocks, bl if spec.quantized else 0, H),
+                           jnp.float32),
+        pv_zero=jnp.zeros((n_blocks, bl if spec.quantized else 0, H),
+                          jnp.float32),
+        block_tbl=jnp.full((B, n_max), -1, jnp.int32),
+        rk=jnp.zeros((B, W, H, D), dtype),
+        rv=jnp.zeros((B, W, H, D), dtype),
+        r_scores=jnp.zeros((B, W), jnp.float32),
+        scores=jnp.zeros((B, S), jnp.float32),
+        slot_pos=jnp.full((B, S), -1, jnp.int32),
+        length=jnp.zeros((B,), jnp.int32),
+        rlen=jnp.zeros((B,), jnp.int32),
+        pos=jnp.zeros((B,), jnp.int32),
+        budget=jnp.asarray(lb, jnp.int32),
+    )
+
+
+def stacked_paged_kv(
+    spec: CacheSpec, n_layers: int, batch: int, max_len: int, kv_heads: int,
+    head_dim: int, *, n_blocks: int, block_len: int, dtype=jnp.bfloat16,
+    layer_budgets: Optional[Array] = None,
+) -> PagedLayerKV:
+    """Layer-stacked paged cache: every leaf gets a leading [n_layers]
+    dim. Each layer owns its own pool rows; `block_tbl` is replicated per
+    layer (one allocation maps the same id in every layer)."""
+    one = init_paged_kv(spec, batch, max_len, kv_heads, head_dim,
+                        n_blocks=n_blocks, block_len=block_len, dtype=dtype)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_layers, *x.shape)).copy(), one)
+    if layer_budgets is not None:
+        stacked = stacked._replace(budget=layer_budgets.astype(jnp.int32))
+    else:
+        S = spec.main_store_len(max_len)
+        stacked = stacked._replace(budget=jnp.full((n_layers,), S, jnp.int32))
+    return stacked
+
+
+# ---------------------------------------------------------------------------
+# Gather: paged -> dense per-slot view (the parity/oracle path)
+# ---------------------------------------------------------------------------
+
+
+def gather_dense(p: PagedLayerKV, spec: CacheSpec) -> kvcache.LayerKV:
+    """Materialize the dense `LayerKV` view of a paged layer: gather each
+    slot's blocks from the pool in table order. Unmapped entries clamp to
+    block 0 — those logical rows are beyond `length` and masked by the
+    validity bias, so their values are never observed."""
+    B, n_max = p.block_tbl.shape
+    tbl = jnp.maximum(p.block_tbl, 0)
+
+    def g(pool):                                   # [nb, r, ...] -> [B, n_max*r, ...]
+        x = pool[tbl]                              # [B, n_max, r, ...]
+        return x.reshape(B, n_max * pool.shape[1], *pool.shape[2:])
+
+    return kvcache.LayerKV(
+        k=g(p.pk), v=g(p.pv),
+        k_scale=g(p.pk_scale), k_zero=g(p.pk_zero),
+        v_scale=g(p.pv_scale), v_zero=g(p.pv_zero),
+        rk=p.rk, rv=p.rv, r_scores=p.r_scores, scores=p.scores,
+        slot_pos=p.slot_pos, length=p.length, rlen=p.rlen, pos=p.pos,
+        budget=p.budget,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scatter primitives
+# ---------------------------------------------------------------------------
+
+
+def _phys_rows(block_tbl: Array, slot: Array, bl: int, n_blocks: int) -> Array:
+    """[B] physical pool row for logical main-store row `slot[b]`.
+    Unmapped blocks map one-past-the-end so the scatter drops them
+    (negative indices would wrap NumPy-style and corrupt live rows)."""
+    blk = jnp.take_along_axis(block_tbl, (slot // bl)[:, None], axis=1)[:, 0]
+    return jnp.where(blk < 0, n_blocks * bl, blk * bl + slot % bl)
+
+
+def _scatter_rows(pool: Array, rows: Array, vals: Array) -> Array:
+    """pool [nb, bl, ...]; rows [B] flat row ids; vals [B, ...]."""
+    nb, bl = pool.shape[:2]
+    flat = pool.reshape(nb * bl, *pool.shape[2:])
+    flat = flat.at[rows].set(vals.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+# ---------------------------------------------------------------------------
+# Decode append — one token, through the block table
+# ---------------------------------------------------------------------------
+
+
+def append_token_paged(
+    p: PagedLayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
+    key: Optional[Array] = None,
+) -> PagedLayerKV:
+    """Paged twin of `cache.append_token`: identical eviction / ring-flush
+    semantics (shared planning helpers), K/V writes routed through the
+    block table."""
+    if spec.quantized:
+        return _append_quantized_paged(p, spec, k_new, v_new, key)
+    S = p.scores.shape[1]
+    nb, bl = p.pk.shape[:2]
+    cap = jnp.minimum(p.budget, S)
+    full = p.length >= cap
+    victim = kvcache.select_victim(p, spec, key)
+    slot = jnp.where(full, victim, p.length)
+    rows = _phys_rows(p.block_tbl, slot, bl, nb)
+    return p._replace(
+        pk=_scatter_rows(p.pk, rows, k_new),
+        pv=_scatter_rows(p.pv, rows, v_new),
+        scores=kvcache._put_rows(p.scores, slot,
+                                 jnp.zeros(p.scores.shape[:1])),
+        slot_pos=kvcache._put_rows(p.slot_pos, slot, p.pos),
+        length=jnp.minimum(p.length + 1, cap),
+        pos=p.pos + 1,
+    )
+
+
+def _append_quantized_paged(
+    p: PagedLayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
+    key: Optional[Array] = None,
+) -> PagedLayerKV:
+    W, G = spec.window, spec.group
+    assert W == G and W > 0
+    B, S = p.scores.shape
+    nb, bl = p.pk.shape[:2]
+    assert bl == G, "quantized pools flush one block per group"
+    n_groups = S // G
+    need = p.rlen >= W                                    # [B]
+
+    def flush_rows(p: PagedLayerKV) -> PagedLayerKV:
+        gslot, cap_groups, kq, vq, new_pos = kvcache.plan_group_flush(
+            p, spec, S)
+        H = p.rk.shape[2]
+        D = p.rk.shape[3]
+        # destination block per row; rows not flushing (or with an
+        # unmapped group — can't happen for live rows) write past the end
+        blk = jnp.take_along_axis(p.block_tbl, gslot[:, None], axis=1)[:, 0]
+        tgt = jnp.where(need & (blk >= 0), blk, nb)       # [B]
+        pk = p.pk.at[tgt].set(kq.q.astype(p.pk.dtype), mode="drop")
+        pv = p.pv.at[tgt].set(vq.q.astype(p.pv.dtype), mode="drop")
+        pk_scale = p.pk_scale.at[tgt].set(
+            kq.scale.reshape(B, 1, H, D), mode="drop")
+        pk_zero = p.pk_zero.at[tgt].set(
+            kq.zero.reshape(B, 1, H, D), mode="drop")
+        pv_scale = p.pv_scale.at[tgt].set(
+            vq.scale.reshape(B, W, H), mode="drop")
+        pv_zero = p.pv_zero.at[tgt].set(
+            vq.zero.reshape(B, W, H), mode="drop")
+
+        def put_group(arr, gs, val):
+            return kvcache._put_rows(arr.reshape(B, n_groups, -1), gs,
+                                     val.reshape(B, -1)).reshape(arr.shape)
+
+        # metadata is per-slot dense: gate non-flushing rows with a select
+        def sel(f, o):
+            return jnp.where(need.reshape((-1,) + (1,) * (f.ndim - 1)), f, o)
+
+        return p._replace(
+            pk=pk, pv=pv, pk_scale=pk_scale, pk_zero=pk_zero,
+            pv_scale=pv_scale, pv_zero=pv_zero,
+            scores=sel(put_group(p.scores, gslot, p.r_scores), p.scores),
+            slot_pos=sel(put_group(p.slot_pos, gslot, new_pos), p.slot_pos),
+            length=sel(jnp.minimum(p.length + W, cap_groups * G), p.length),
+            rlen=sel(jnp.zeros_like(p.rlen), p.rlen),
+            r_scores=sel(jnp.zeros_like(p.r_scores), p.r_scores),
+        )
+
+    p = jax.lax.cond(jnp.any(need), flush_rows, lambda c: c, p)
+    return p._replace(
+        rk=kvcache._put_rows(p.rk, p.rlen, k_new.astype(p.rk.dtype)),
+        rv=kvcache._put_rows(p.rv, p.rlen, v_new.astype(p.rv.dtype)),
+        r_scores=kvcache._put_rows(p.r_scores, p.rlen,
+                                   jnp.zeros(p.r_scores.shape[:1])),
+        rlen=p.rlen + 1,
+        pos=p.pos + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-slot surgery (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def insert_request_paged(stacked: PagedLayerKV, slot_idx,
+                         prefilled: kvcache.LayerKV, block_ids: Array, *,
+                         batch_axis: int = 1) -> PagedLayerKV:
+    """Scatter one request's prefilled *dense* `LayerKV` (batch 1 at
+    `batch_axis`; prefill always builds the dense view) into batch slot
+    `slot_idx` of a live paged cache whose blocks `block_ids` ([n_max]
+    int32, -1-padded) the allocator just granted.
+
+    Metadata rows scatter exactly like the dense `insert_request`; the
+    K/V store rows scatter into the granted pool blocks; table row
+    `slot_idx` becomes `block_ids`. Rows beyond the granted blocks (a
+    request admitted below the physical store length) are dropped — they
+    are headroom padding beyond the request's budgeted length, never
+    valid. Pool axes sit at `batch_axis` (layer dims lead both pool and
+    metadata leaves)."""
+    upd = {
+        f: kvcache._scatter_batch(getattr(stacked, f), getattr(prefilled, f),
+                                  slot_idx, batch_axis)
+        for f in META_FIELDS
+    }
+    tbl = stacked.block_tbl
+    n_max = tbl.shape[-1]
+    src = jnp.broadcast_to(block_ids.astype(tbl.dtype),
+                           (*tbl.shape[:batch_axis], 1, n_max))
+    upd["block_tbl"] = kvcache._scatter_batch(tbl, src, slot_idx, batch_axis)
+
+    nb = stacked.pk.shape[batch_axis]
+    bl = stacked.pk.shape[batch_axis + 1]
+
+    def rows_for(r: int) -> Array:
+        """Flat pool rows for the request's logical rows, r rows/block."""
+        base = block_ids[:, None] * r + jnp.arange(r)[None]
+        return jnp.where(block_ids[:, None] < 0, nb * r, base).reshape(-1)
+
+    def scat(pool: Array, val: Array) -> Array:
+        r = pool.shape[batch_axis + 1]
+        if r == 0:
+            return pool
+        flat = pool.reshape(*pool.shape[:batch_axis], nb * r,
+                            *pool.shape[batch_axis + 2:])
+        v = jax.lax.index_in_dim(val, 0, batch_axis, keepdims=False)
+        idx = (slice(None),) * batch_axis + (rows_for(r),)
+        flat = flat.at[idx].set(v.astype(pool.dtype), mode="drop")
+        return flat.reshape(pool.shape)
+
+    upd.update(
+        pk=scat(stacked.pk, prefilled.k),
+        pv=scat(stacked.pv, prefilled.v),
+        pk_scale=scat(stacked.pk_scale, prefilled.k_scale),
+        pk_zero=scat(stacked.pk_zero, prefilled.k_zero),
+        pv_scale=scat(stacked.pv_scale, prefilled.v_scale),
+        pv_zero=scat(stacked.pv_zero, prefilled.v_zero),
+    )
+    return stacked._replace(**upd)
+
+
+def reset_slot_paged(stacked: PagedLayerKV, slot_idx, *,
+                     batch_axis: int = 1) -> PagedLayerKV:
+    """Clear batch slot `slot_idx`: metadata back to the empty-cache
+    state, table row to -1. Pool rows are left as-is — the allocator owns
+    recycling, and unmapped rows are unreachable through any table."""
+    upd = {}
+    for f in META_FIELDS + ("block_tbl",):
+        leaf = getattr(stacked, f)
+        shape = list(leaf.shape)
+        shape[batch_axis] = 1
+        fill = -1 if f in ("slot_pos", "block_tbl") else 0
+        upd[f] = jax.lax.dynamic_update_slice_in_dim(
+            leaf, jnp.full(shape, fill, leaf.dtype), slot_idx,
+            axis=batch_axis)
+    return stacked._replace(**upd)
+
+
+# ---------------------------------------------------------------------------
+# Free-list allocator (host-side — no jax, like the scheduler)
+# ---------------------------------------------------------------------------
+
+
+class BlockAllocator:
+    """Free-list over the shared block-id space. One id reserves the same
+    row of every layer's pools. `alloc` is all-or-nothing: a request that
+    doesn't fit leaves the pool untouched (admission refusal)."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"need >= 1 block, got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._held: set[int] = set()
+        self.peak_used = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"negative block count {n}")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._held.update(ids)
+        self.peak_used = max(self.peak_used, self.used)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            if i not in self._held:
+                raise ValueError(f"block {i} is not allocated")
+            self._held.discard(i)
+            self._free.append(i)
+
+
+def blocks_for_len(n_rows: int, block_len: int) -> int:
+    return -(-n_rows // block_len)
+
+
+def request_blocks(spec: CacheSpec, S: int, prompt_len: int, max_new: int,
+                   block_len: int) -> int:
+    """Blocks that cover every row a request admitted at `prompt_len`
+    with `max_new` decode headroom can ever touch. Quantized stores flush
+    whole groups at group-aligned slots, so round up and add one group of
+    slack for a non-aligned prompt; everything clamps at the physical
+    store length S."""
+    rows = prompt_len + max_new
+    if spec.quantized:
+        G = spec.group
+        rows = -(-rows // G) * G + G
+    return blocks_for_len(min(S, rows), block_len)
+
+
+# ---------------------------------------------------------------------------
+# Bytes accounting
+# ---------------------------------------------------------------------------
+
+
+def pool_bytes(p: PagedLayerKV) -> int:
+    """Reserved bytes of the block pools (all layers)."""
+    from repro.utils import tree_bytes
+    return sum(tree_bytes(getattr(p, f)) for f in POOL_FIELDS)
+
+
+def bytes_per_block(p: PagedLayerKV) -> int:
+    """Physical bytes one block id pins across every layer's pools."""
+    n_blocks = p.pk.shape[-4]
+    return pool_bytes(p) // n_blocks
+
+
+def mapped_blocks(p: PagedLayerKV) -> int:
+    """Distinct pool blocks currently mapped by any slot (host sync).
+    Tables are replicated per layer; count one copy. Slots never share
+    blocks, so mapped entries == allocated blocks."""
+    import numpy as np
+    tbl = np.asarray(p.block_tbl)
+    n_max = tbl.shape[-1]
+    tbl2 = tbl.reshape(-1, tbl.shape[-2], n_max)[0]       # one layer copy
+    return int((tbl2 >= 0).sum())
+
+
+def paged_physical_bytes(p: PagedLayerKV) -> int:
+    """Allocated-block bytes + metadata bytes (see
+    `cache.cache_physical_bytes`)."""
+    from repro.utils import tree_bytes
+    meta = tree_bytes(p) - pool_bytes(p)
+    return meta + mapped_blocks(p) * bytes_per_block(p)

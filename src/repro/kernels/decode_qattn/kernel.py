@@ -253,6 +253,126 @@ def decode_attn_pallas(q, k, k_scale, k_zero, v, v_scale, v_zero, bias_main,
     return out, None
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "group", "return_mass",
+                                             "compute_dtype", "interpret"))
+def decode_attn_paged_pallas(q, block_tbl, pk, pk_scale, pk_zero, pv,
+                             pv_scale, pv_zero, bias_main, rk, rv, bias_ring,
+                             *, bits: int, group: int,
+                             return_mass: bool = False,
+                             compute_dtype=jnp.float32,
+                             interpret: bool = False):
+    """Block-table grid variant: walk each slot's block list.
+
+    Same online-softmax body as `decode_attn_pallas`; the only change is
+    *where the key blocks come from*. The main-store operands are shared
+    block **pools** with no batch dim — `[n_blocks, bl, Hkv, Dp]` codes
+    (+ `[n_blocks, bl//group, Hkv, D]` K scales and `[n_blocks, bl, Hkv]`
+    V scales when bits < 16) — and `block_tbl [B, n_max]` rides in as a
+    scalar-prefetch operand so the BlockSpec index maps can chase it:
+    grid step (b, h, s) DMAs pool block ``block_tbl[b, s]``. Unmapped
+    entries (-1) are clamped to block 0 here; the `bias_main
+    [B, n_max*bl]` validity bias masks those positions, so the clamped
+    reads never contribute.
+
+    q [B, Hq, D]; ring/bias/out exactly as `decode_attn_pallas`.
+    Returns (out [B, Hq, D], mass [B, S+W] | None)."""
+    B, Hq, D = q.shape
+    nb, bl, Hkv = pk.shape[0], pk.shape[1], pk.shape[2]
+    Gq = Hq // Hkv
+    n_max = block_tbl.shape[1]
+    S = n_max * bl
+    assert bias_main.shape == (B, S), (bias_main.shape, B, S)
+    if bits < 16:
+        assert bl % group == 0, (bl, group)
+    gpb = bl // group if bits < 16 else 0
+    W = rk.shape[1] if rk is not None else 0
+    n_grid = n_max + (1 if W else 0)
+    S_tot = S + W
+
+    qh = q.reshape(B, Hkv, Gq, D)
+    kh = pk.transpose(0, 2, 1, 3)              # [nb, Hkv, bl, Dp]
+    vh = pv.transpose(0, 2, 1, 3)
+    tbl = jnp.maximum(block_tbl, 0).astype(jnp.int32)
+
+    def pool_idx(b, h, s, t):
+        return (t[b, jnp.minimum(s, n_max - 1)], h, 0, 0)
+
+    def pool_idx3(b, h, s, t):
+        return (t[b, jnp.minimum(s, n_max - 1)], h, 0)
+
+    def bias_idx(b, h, s, t):
+        return (b, jnp.minimum(s, n_max - 1))
+
+    operands = [qh, kh]
+    in_specs = [
+        pl.BlockSpec((1, 1, Gq, D), lambda b, h, s, t: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bl, kh.shape[-1]), pool_idx),
+    ]
+    if bits < 16:
+        operands += [pk_scale.transpose(0, 2, 1, 3),
+                     pk_zero.transpose(0, 2, 1, 3)]
+        in_specs += [pl.BlockSpec((1, 1, gpb, D), pool_idx)] * 2
+    operands.append(vh)
+    in_specs.append(pl.BlockSpec((1, 1, bl, vh.shape[-1]), pool_idx))
+    if bits < 16:
+        operands += [pv_scale.transpose(0, 2, 1), pv_zero.transpose(0, 2, 1)]
+        in_specs += [pl.BlockSpec((1, 1, bl), pool_idx3)] * 2
+    operands.append(bias_main)
+    in_specs.append(pl.BlockSpec((1, bl), bias_idx))
+    if W:
+        operands += [rk.transpose(0, 2, 1, 3), rv.transpose(0, 2, 1, 3),
+                     bias_ring]
+        in_specs += [
+            pl.BlockSpec((1, 1, W, D), lambda b, h, s, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, W, D), lambda b, h, s, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, W), lambda b, h, s, t: (b, 0)),
+        ]
+
+    out_shape = [jax.ShapeDtypeStruct((B, Hkv, Gq, D), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, Gq, D), lambda b, h, s, t: (b, h, 0, 0))]
+    if return_mass:
+        out_shape.append(jax.ShapeDtypeStruct((B, Hkv, S_tot), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, S_tot),
+                                      lambda b, h, s, t: (b, h, 0)))
+
+    scratch = [
+        pltpu.VMEM((Gq, 1), jnp.float32),
+        pltpu.VMEM((Gq, 1), jnp.float32),
+        pltpu.VMEM((Gq, D), jnp.float32),
+    ]
+    if return_mass:
+        scratch.append(pltpu.VMEM((Gq, S_tot), jnp.float32))
+
+    body = functools.partial(_kernel, bits=bits, D=D, group=group,
+                             block_s=bl, n_main=n_max, ring_w=W,
+                             return_mass=return_mass,
+                             compute_dtype=compute_dtype)
+
+    def kernel(tbl_ref, *refs):
+        # the table is only consumed by the index maps; the body is the
+        # same online-softmax kernel as the dense-grid variant
+        del tbl_ref
+        body(*refs)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hkv, n_grid),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(tbl, *operands)
+
+    out = outs[0].reshape(B, Hq, D)
+    if return_mass:
+        return out, outs[1].sum(axis=1)
+    return out, None
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "group", "block_s",
                                              "interpret"))
 def decode_qattn_pallas(q, kq, ks, kz, vq, vs, vz, bias, *, bits: int,

@@ -32,6 +32,25 @@ def decode_attention_fused(q, k, k_scale, k_zero, v, v_scale, v_zero,
         interpret=resolve_interpret(interpret))
 
 
+def decode_attention_paged(q, block_tbl, pk, pk_scale, pk_zero, pv, pv_scale,
+                           pv_zero, bias_main, rk, rv, bias_ring, *,
+                           bits: int, group: int, return_mass: bool = False,
+                           compute_dtype=None,
+                           interpret: Optional[bool] = None):
+    """Block-table decode attention over the shared pool.
+
+    See `kernel.decode_attn_paged_pallas` for shapes; the caller passes
+    the pool leaves of a `core.paging.PagedLayerKV` plus its (clamped)
+    block table. Returns (out, mass|None)."""
+    import jax.numpy as jnp
+    return kernel.decode_attn_paged_pallas(
+        q, block_tbl, pk, pk_scale, pk_zero, pv, pv_scale, pv_zero,
+        bias_main, rk, rv, bias_ring, bits=bits, group=group,
+        return_mass=return_mass,
+        compute_dtype=jnp.float32 if compute_dtype is None else compute_dtype,
+        interpret=resolve_interpret(interpret))
+
+
 def decode_attention_quantized(q, kq, ks, kz, vq, vs, vz, bias, *,
                                bits: int, group: int, block_s: int = 512,
                                interpret: Optional[bool] = None):

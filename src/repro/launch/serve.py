@@ -46,7 +46,21 @@ def main() -> None:
                     help="fused Pallas decode/prefill kernels: auto = on "
                          "for TPU, materialize oracle elsewhere; on forces "
                          "the kernel path (interpret mode off-TPU)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-table KV cache for --continuous: one "
+                         "physical pool shared across slots, block-aware "
+                         "admission, blocks recycled on retire")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="tokens per pool block (snapped to the store "
+                         "shape; quantized stores use the flush group)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="physical pool size in blocks (0 = capacity "
+                         "parity with the dense layout); smaller pools "
+                         "refuse admission until blocks free up")
     args = ap.parse_args()
+    if args.paged and not args.continuous:
+        ap.error("--paged requires --continuous (the wave path decodes "
+                 "straight off the dense prefill cache)")
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg = get_config(args.arch)
@@ -61,7 +75,9 @@ def main() -> None:
                          or {args.prompt_len})
         eng = Engine(cfg, params, pol, prompt_len=max(buckets),
                      max_new=args.max_new, slots=args.slots, buckets=buckets,
-                     use_kernels=use_kernels)
+                     use_kernels=use_kernels, paged=args.paged,
+                     block_len=args.block_len,
+                     pool_blocks=args.pool_blocks or None)
         eos = args.eos_id if args.eos_id >= 0 else None
         reqs = [
             Request(
@@ -84,6 +100,12 @@ def main() -> None:
               f"(logical {res.cache_logical_bytes / 2**20:.1f} MiB vs "
               f"full {res.full_cache_bytes / 2**20:.1f} MiB; resident "
               f"{res.cache_physical_bytes / 2**20:.1f} MiB)")
+        if args.paged:
+            print(f"paged pool: {res.pool_peak_blocks}/{res.pool_blocks} "
+                  f"blocks peak ({res.pool_block_bytes} B/block, "
+                  f"block_len={eng.block_len}; reserved "
+                  f"{res.pool_blocks * res.pool_block_bytes / 2**20:.1f} "
+                  f"MiB)")
         return
 
     prompts = rng.integers(0, cfg.vocab_size,

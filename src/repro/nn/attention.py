@@ -176,6 +176,11 @@ def gqa_attention(
 # `use_kernels=None` defaults to the kernel path on TPU and the oracle
 # elsewhere; an explicit True off-TPU runs the kernel in interpret mode
 # (slow — for tests / parity checks only).
+#
+# Both paths also serve the *paged* store (`core.paging.PagedLayerKV`):
+# the oracle gathers the slot's blocks into the dense view first, the
+# kernel takes the block-table grid variant (`decode_attn_paged_pallas`)
+# and walks the block list via scalar-prefetch index maps.
 
 
 def resolve_use_kernels(flag: Optional[bool]) -> bool:
@@ -184,9 +189,9 @@ def resolve_use_kernels(flag: Optional[bool]) -> bool:
     return bool(flag)
 
 
-def _kernel_supported(lc: LayerKV, spec: CacheSpec) -> bool:
+def _kernel_supported(lc, spec: CacheSpec) -> bool:
     """Shapes the fused kernel can tile; everything else takes the oracle."""
-    S = lc.k.shape[1]
+    S = lc.scores.shape[1]
     if spec.quantized:
         return S % spec.group == 0 and spec.bits in (2, 4, 8)
     return True
@@ -206,7 +211,8 @@ def decode_attention(
     """
     if q_pos is None:
         q_pos = lc.pos - 1
-    S = lc.k.shape[1]
+    paged = not isinstance(lc, LayerKV)      # core.paging.PagedLayerKV
+    S = lc.scores.shape[1]
     W = lc.rk.shape[1]
     ring_pos = (lc.pos[:, None] - lc.rlen[:, None] + jnp.arange(W)[None])
     kv_positions = jnp.concatenate([lc.slot_pos, ring_pos.astype(jnp.int32)],
@@ -222,17 +228,34 @@ def decode_attention(
         # the mass statistic costs a [Gq, S+W] probability scratch and a
         # per-step HBM write — only pay for it when the policy reads it
         want_mass = spec.track_scores()
-        out, mass = dq_ops.decode_attention_fused(
-            q[:, 0],
-            lc.k, lc.k_scale if quant else None,
-            lc.k_zero if quant else None,
-            lc.v, lc.v_scale if quant else None,
-            lc.v_zero if quant else None,
-            bias[:, :S],
-            lc.rk if W else None, lc.rv if W else None,
-            bias[:, S:] if W else None,
-            bits=spec.bits if quant else 16, group=spec.group,
-            return_mass=want_mass, compute_dtype=dtype, interpret=interpret)
+        if paged:
+            # block-table grid: the kernel walks this slot's block list
+            # via scalar-prefetch index maps — the pool is never gathered
+            out, mass = dq_ops.decode_attention_paged(
+                q[:, 0], lc.block_tbl,
+                lc.pk, lc.pk_scale if quant else None,
+                lc.pk_zero if quant else None,
+                lc.pv, lc.pv_scale if quant else None,
+                lc.pv_zero if quant else None,
+                bias[:, :S],
+                lc.rk if W else None, lc.rv if W else None,
+                bias[:, S:] if W else None,
+                bits=spec.bits if quant else 16, group=spec.group,
+                return_mass=want_mass, compute_dtype=dtype,
+                interpret=interpret)
+        else:
+            out, mass = dq_ops.decode_attention_fused(
+                q[:, 0],
+                lc.k, lc.k_scale if quant else None,
+                lc.k_zero if quant else None,
+                lc.v, lc.v_scale if quant else None,
+                lc.v_zero if quant else None,
+                bias[:, :S],
+                lc.rk if W else None, lc.rv if W else None,
+                bias[:, S:] if W else None,
+                bits=spec.bits if quant else 16, group=spec.group,
+                return_mass=want_mass, compute_dtype=dtype,
+                interpret=interpret)
         if mass is None:
             mass = jnp.zeros((q.shape[0], S + W), jnp.float32)
         return out[:, None].astype(dtype), mass

@@ -303,14 +303,29 @@ def decode_step(params, cfg, cache: ModelCache, token: Array,
 
 def init_cache(cfg, spec: CacheSpec, batch: int, max_len: int, *,
                src_len: int = 0, as_spec: bool = False,
-               layer_budgets: Optional[Array] = None) -> ModelCache:
+               layer_budgets: Optional[Array] = None,
+               paged: bool = False, block_len: int = 16,
+               pool_blocks: Optional[int] = None) -> ModelCache:
     sb, n_sb, kinds = sb_layout(cfg)
     aps, sps = attn_positions(cfg), ssm_positions(cfg)
     attn_c = ssm_c = None
     if aps:
-        one = kvcache.stacked_kv(
-            spec, len(aps), batch, max_len, cfg.num_kv_heads, cfg.head_dim,
-            cfg.dtype, as_spec=as_spec)
+        if paged:
+            # block-table substrate: per-layer pools + shared table
+            # (core/paging.py); serving init only — dry-run specs and the
+            # wave engine stay dense
+            from repro.core import paging
+            assert not as_spec, "paged cache has no as_spec path"
+            S = spec.main_store_len(max_len)
+            bl = paging.resolve_block_len(spec, S, block_len)
+            nb = pool_blocks if pool_blocks else batch * (S // bl)
+            one = paging.stacked_paged_kv(
+                spec, len(aps), batch, max_len, cfg.num_kv_heads,
+                cfg.head_dim, n_blocks=nb, block_len=bl, dtype=cfg.dtype)
+        else:
+            one = kvcache.stacked_kv(
+                spec, len(aps), batch, max_len, cfg.num_kv_heads,
+                cfg.head_dim, cfg.dtype, as_spec=as_spec)
         if as_spec:
             attn_c = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((n_sb, *s.shape), s.dtype), one)

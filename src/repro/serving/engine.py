@@ -17,7 +17,12 @@ shapes — TPU discipline):
     `reset_slot`), and the next queued request is prefilled straight into
     the freed batch position — no recompilation, no reallocation. This is
     what converts a compression policy's capacity win (more live
-    sequences per byte) into throughput.
+    sequences per byte) into throughput. With ``paged=True`` the
+    persistent cache is the block-table substrate (`core.paging`): one
+    physical pool shared across slots, block-aware admission (a request
+    is admitted only when the free list covers its budgeted length), and
+    blocks recycled on retire — so short, compressed and full-precision
+    requests charge the pool only what they use.
 
 The compression policy is plumbed end-to-end either way: prompt
 compression at prefill, budgeted eviction / quantized ring flushes at
@@ -39,6 +44,7 @@ import numpy as np
 
 from repro.core import budgets as budgets_lib
 from repro.core import cache as kvcache
+from repro.core import paging as paging_lib
 from repro.core.cache import CacheSpec, cache_logical_bytes_per_layer
 from repro.core.policy import CompressionPolicy
 from repro.nn import model as M
@@ -70,17 +76,31 @@ class ContinuousGenerationResult:
     decode_tokens_per_s: float
     occupancy: float              # mean active-slot fraction per decode step
     ttft_mean_s: float
-    cache_physical_bytes: int     # resident slots-wide cache footprint
+    cache_physical_bytes: int     # dense: resident slots-wide footprint;
+                                  # paged: peak allocated-block + metadata
+                                  # bytes (real pool usage, not reserve)
     cache_logical_bytes: float
     full_cache_bytes: float
     compression_ratio: float
     policy_name: str
+    pool_blocks: int = 0          # paged runs only: reserved pool size,
+    pool_block_bytes: int = 0     # bytes one block pins across layers,
+    pool_peak_blocks: int = 0     # high-water allocated blocks
 
     def tokens_for(self, uid: int) -> np.ndarray:
         for r in self.results:
             if r.uid == uid:
                 return r.tokens
         raise KeyError(uid)
+
+    def paged_bytes_per_seq(self, slots: int) -> float:
+        """Physical bytes one live request pins under paging: its peak
+        allocated blocks plus its share of the per-slot metadata. The
+        single source of truth for capacity accounting (inverse of the
+        `cache_physical_bytes = metadata + peak * block_bytes` report);
+        meaningful for single-request paged runs."""
+        blocks = self.pool_peak_blocks * self.pool_block_bytes
+        return blocks + (self.cache_physical_bytes - blocks) / slots
 
 
 class Engine:
@@ -89,7 +109,9 @@ class Engine:
                  slots: int = 4, buckets: Optional[Sequence[int]] = None,
                  sampler: Callable = sampler_lib.greedy,
                  allocator_signal: Optional[dict] = None, seed: int = 0,
-                 use_kernels: Optional[bool] = None):
+                 use_kernels: Optional[bool] = None,
+                 paged: bool = False, block_len: int = 16,
+                 pool_blocks: Optional[int] = None):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
         if use_kernels is not None:
@@ -115,6 +137,23 @@ class Engine:
             spec = CacheSpec(budget=prompt_len + max_new, policy="none",
                              sinks=spec.sinks)
         self.spec = spec
+
+        # --- paged block-table cache (continuous batching only) ---------
+        # One physical pool per layer + a per-slot block table; requests
+        # only pin the blocks their budgeted length needs, and retired
+        # blocks recycle through the free-list (core/paging.py). Default
+        # pool sizing is capacity parity with the dense layout
+        # (slots * S / block_len); size it smaller to realize the
+        # capacity win (admission then refuses what doesn't fit).
+        self.paged = bool(paged)
+        self._S_phys = self.spec.main_store_len(prompt_len + max_new)
+        self.block_len = paging_lib.resolve_block_len(
+            self.spec, self._S_phys, block_len) if paged else 0
+        self.n_max_blocks = (self._S_phys // self.block_len) if paged else 0
+        self.pool_blocks = (
+            int(pool_blocks) if (paged and pool_blocks)
+            else slots * self.n_max_blocks if paged else 0)
+        self.block_allocator: Optional[paging_lib.BlockAllocator] = None
 
         n_attn = cfg.num_attn_layers()
         alloc = budgets_lib.ALLOCATORS[policy.allocator]
@@ -155,16 +194,44 @@ class Engine:
             return M.ModelCache(attn, ssm, cache.cross_k, cache.cross_v,
                                 cache.cross_bias)
 
-        def _reset(cache: M.ModelCache, slot):
-            attn = (kvcache.reset_slot(cache.attn, slot, batch_axis=2)
+        def _insert_paged(cache: M.ModelCache, pc: M.ModelCache, slot, ids):
+            # prefill always builds the dense batch-1 view; the insert
+            # scatters its rows into the slot's freshly granted blocks
+            attn = (paging_lib.insert_request_paged(
+                        cache.attn, slot, pc.attn, ids, batch_axis=2)
                     if cache.attn is not None else None)
+            ssm = (kvcache.insert_request_tree(cache.ssm, slot, pc.ssm,
+                                              batch_axis=2)
+                   if cache.ssm is not None else None)
+            return M.ModelCache(attn, ssm, cache.cross_k, cache.cross_v,
+                                cache.cross_bias)
+
+        def _reset(cache: M.ModelCache, slot):
+            if self.paged:
+                attn = (paging_lib.reset_slot_paged(cache.attn, slot,
+                                                    batch_axis=2)
+                        if cache.attn is not None else None)
+            else:
+                attn = (kvcache.reset_slot(cache.attn, slot, batch_axis=2)
+                        if cache.attn is not None else None)
             ssm = (kvcache.reset_slot_tree(cache.ssm, slot, batch_axis=2)
                    if cache.ssm is not None else None)
             return M.ModelCache(attn, ssm, cache.cross_k, cache.cross_v,
                                 cache.cross_bias)
 
-        self._insert = jax.jit(_insert, donate_argnums=(0,) if dn else ())
+        if self.paged:
+            self._insert = jax.jit(_insert_paged,
+                                   donate_argnums=(0,) if dn else ())
+        else:
+            self._insert = jax.jit(_insert, donate_argnums=(0,) if dn else ())
         self._reset = jax.jit(_reset, donate_argnums=(0,) if dn else ())
+
+    # ------------------------------------------------------------------
+    def _request_blocks(self, req: Request) -> int:
+        """Pool blocks that cover one request's budgeted length."""
+        return paging_lib.request_blocks(
+            self.spec, self._S_phys, len(req.tokens), req.max_new,
+            self.block_len)
 
     # ------------------------------------------------------------------
     def _logical_bytes_per_seq(self) -> float:
@@ -180,6 +247,11 @@ class Engine:
     def generate(self, prompts: np.ndarray,
                  src_embeds: Optional[np.ndarray] = None) -> GenerationResult:
         """prompts: [n, prompt_len] int32 (exact bucket length)."""
+        if self.paged:
+            raise ValueError(
+                "the wave path decodes straight off the prefill cache "
+                "(dense by construction); build a dense engine for "
+                "generate(), paged applies to generate_continuous()")
         n, L = prompts.shape
         assert L == self.prompt_len, (L, self.prompt_len)
         outs = np.zeros((n, self.max_new), np.int32)
@@ -270,7 +342,15 @@ class Engine:
             raise ValueError(
                 f"bucket {max(int(b) for b in buckets)} exceeds engine "
                 f"prompt_len {self.prompt_len}")
-        sched = Scheduler(buckets or self.buckets, self.slots)
+        if self.paged:
+            # fresh free list per run (the cache is rebuilt below too);
+            # kept on self for post-run inspection (peak usage)
+            self.block_allocator = paging_lib.BlockAllocator(self.pool_blocks)
+            sched = Scheduler(buckets or self.buckets, self.slots,
+                              allocator=self.block_allocator,
+                              block_need=self._request_blocks)
+        else:
+            sched = Scheduler(buckets or self.buckets, self.slots)
         for r in requests:
             if not isinstance(r, Request):
                 r = Request(tokens=r, max_new=self.max_new)
@@ -282,25 +362,47 @@ class Engine:
 
         cache = M.init_cache(
             self.cfg, self.spec, self.slots, self.prompt_len + self.max_new,
-            layer_budgets=jnp.asarray(self.layer_budgets, jnp.int32))
+            layer_budgets=jnp.asarray(self.layer_budgets, jnp.int32),
+            paged=self.paged, block_len=self.block_len,
+            pool_blocks=self.pool_blocks)
         next_tok = np.zeros(self.slots, np.int32)
         prefill_s = decode_s = 0.0
         decode_tokens = 0
         lb = jnp.asarray(self.layer_budgets)
+        # slots known to hold the empty-cache state (the init above):
+        # admission refusals reset a slot at most once, not per retry
+        clean_slots = set(range(self.slots))
 
         def admit_into(slot_idx: int) -> bool:
             """Fill a free slot from the queue: bucketed batch-1 prefill,
             scatter into the live cache, stream the first token. Loops in
             case a request finishes on its very first token. Returns True
             when a request now occupies the slot (its first token is in
-            `next_tok[slot_idx]`)."""
+            `next_tok[slot_idx]`). Under paging, `admit_next` may refuse
+            while the pool is exhausted — the slot then idles until a
+            retire frees blocks (the decode loop retries every free slot
+            after each batch of retirements)."""
             nonlocal cache, prefill_s
             while True:
                 req = sched.admit_next(slot_idx)
                 if req is None:
-                    # nothing queued: clear the slot so stale KV never
-                    # leaks into accounting or a later occupant
-                    cache = self._reset(cache, jnp.int32(slot_idx))
+                    if (self.paged and sched.pending
+                            and not sched.active_slots()):
+                        # nothing running will ever free blocks: the head
+                        # request simply doesn't fit this pool
+                        need = self._request_blocks(sched.head_request())
+                        raise RuntimeError(
+                            f"paged pool too small: head request needs "
+                            f"{need} blocks, pool has {self.pool_blocks} "
+                            f"({self.block_allocator.available} free)")
+                    # nothing admittable: clear the slot so stale KV never
+                    # leaks into accounting or a later occupant — under
+                    # paging this is load-bearing, not hygiene: a stale
+                    # block table would keep routing this garbage row's
+                    # appends into freed (soon re-granted) blocks
+                    if slot_idx not in clean_slots:
+                        cache = self._reset(cache, jnp.int32(slot_idx))
+                        clean_slots.add(slot_idx)
                     return False
                 self.key, k1 = jax.random.split(self.key)
                 t0 = time.perf_counter()
@@ -308,7 +410,15 @@ class Engine:
                     self.params, {"tokens": jnp.asarray(req.tokens[None])},
                     lb, k1)
                 tok = self.sampler(logits, k1)
-                cache = self._insert(cache, pc, jnp.int32(slot_idx))
+                if self.paged:
+                    ids = np.full(self.n_max_blocks, -1, np.int32)
+                    got = sched.slot_blocks(slot_idx)
+                    ids[:len(got)] = got
+                    cache = self._insert(cache, pc, jnp.int32(slot_idx),
+                                         jnp.asarray(ids))
+                else:
+                    cache = self._insert(cache, pc, jnp.int32(slot_idx))
+                clean_slots.discard(slot_idx)
                 tok_i = int(jax.device_get(tok)[0])
                 prefill_s += time.perf_counter() - t0
                 next_tok[slot_idx] = tok_i
@@ -355,15 +465,27 @@ class Engine:
                 ptok, pvalid = pending
                 toks = np.asarray(ptok)         # blocks on step N-1 only
                 admitted = []
+                retired_any = False
                 for i in pvalid:
                     decode_tokens += 1
                     reason = sched.record_token(i, toks[i])
                     if reason is not None:
                         sched.retire(i, reason)
+                        retired_any = True
                         if new_pending is not None and i in new_pending[1]:
                             new_pending[1].remove(i)
                         if admit_into(i):
                             admitted.append(i)
+                if self.paged and retired_any and sched.pending:
+                    # a retire frees *blocks*, not just its own slot: a
+                    # different slot that was refused admission while the
+                    # pool was exhausted may fit now. Admission is FIFO,
+                    # so the first refusal (head request doesn't fit)
+                    # settles every remaining free slot this step.
+                    for i in sched.free_slots():
+                        if not sched.pending or not admit_into(i):
+                            break
+                        admitted.append(i)
                 if admitted:
                     tok_in = tok_in.at[jnp.asarray(admitted)].set(
                         jnp.asarray(next_tok[admitted]))
@@ -371,7 +493,20 @@ class Engine:
         decode_s = (time.perf_counter() - loop_t0) - (prefill_s -
                                                       prefill_at_loop)
 
-        phys = tree_bytes(cache)
+        if self.paged:
+            # real pool usage, not the reserved worst case: bytes of the
+            # blocks the run actually pinned at its high-water mark, plus
+            # the dense metadata/ring leaves
+            per_block = paging_lib.bytes_per_block(cache.attn)
+            meta = tree_bytes(cache) - paging_lib.pool_bytes(cache.attn)
+            peak = self.block_allocator.peak_used
+            phys = meta + peak * per_block
+            pool_stats = dict(pool_blocks=self.pool_blocks,
+                              pool_block_bytes=per_block,
+                              pool_peak_blocks=peak)
+        else:
+            phys = tree_bytes(cache)
+            pool_stats = {}
         logical = self._logical_bytes_per_seq() * self.slots
         full = (self.cfg.kv_bytes_per_token() *
                 (self.prompt_len + self.max_new) * self.slots)
@@ -391,4 +526,5 @@ class Engine:
             full_cache_bytes=float(full),
             compression_ratio=float(full / max(logical, 1.0)),
             policy_name=self.policy.name,
+            **pool_stats,
         )

@@ -70,6 +70,7 @@ class _SlotState:
     t_admit: float
     t_first: float = 0.0
     emitted: List[int] = field(default_factory=list)
+    blocks: List[int] = field(default_factory=list)   # paged-pool block ids
 
 
 class Scheduler:
@@ -80,17 +81,33 @@ class Scheduler:
     sampled token through `record_token` (which returns a finish reason
     once EOS or the request's max_new is hit), then `retire`s the slot —
     freeing it for the next queued request immediately, mid-decode.
+
+    **Block-aware admission** (paged cache): pass `allocator` (an object
+    with `alloc(n) -> list | None` / `free(ids)`, e.g.
+    `core.paging.BlockAllocator`) and `block_need(req) -> int`. A request
+    is only admitted when the allocator can cover its budgeted length;
+    otherwise `admit_next` returns None and the request stays at the
+    head of the queue (FIFO head-of-line — a big request is not starved
+    by smaller ones jumping it). `retire` frees the slot's blocks, so
+    freed capacity is immediately admissible to any queued request —
+    this is what lets mixed-budget policies share one physical pool.
     """
 
     def __init__(self, buckets: Sequence[int], n_slots: int, *,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 allocator=None,
+                 block_need: Optional[Callable[[Request], int]] = None):
         buckets = tuple(sorted({int(b) for b in buckets}))
         if not buckets or buckets[0] <= 0:
             raise ValueError(f"need positive prompt buckets, got {buckets}")
         if n_slots < 1:
             raise ValueError(f"need >= 1 slot, got {n_slots}")
+        if (allocator is None) != (block_need is None):
+            raise ValueError("allocator and block_need come together")
         self.buckets = buckets
         self.n_slots = n_slots
+        self.allocator = allocator
+        self._block_need = block_need
         self._clock = clock
         self._queue: Deque[Tuple[Request, float]] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
@@ -114,6 +131,10 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
+    def head_request(self) -> Optional[Request]:
+        """The next request FIFO would admit (None when queue is empty)."""
+        return self._queue[0][0] if self._queue else None
+
     # ---- slots -----------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
@@ -129,15 +150,32 @@ class Scheduler:
         return not self._queue and all(s is None for s in self._slots)
 
     def admit_next(self, slot_idx: int) -> Optional[Request]:
-        """Pop the next queued request into a free slot (FIFO)."""
+        """Pop the next queued request into a free slot (FIFO). Returns
+        None when the queue is empty or (block-aware mode) the allocator
+        cannot cover the head request's blocks yet."""
         if self._slots[slot_idx] is not None:
             raise ValueError(f"slot {slot_idx} is occupied")
         if not self._queue:
             return None
+        blocks: List[int] = []
+        if self.allocator is not None:
+            need = self._block_need(self._queue[0][0])
+            got = self.allocator.alloc(need)
+            if got is None:
+                return None            # pool exhausted: wait for a retire
+            blocks = got
         req, t_submit = self._queue.popleft()
         self._slots[slot_idx] = _SlotState(
-            req, self.bucket_for(len(req.tokens)), t_submit, self._clock())
+            req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
+            blocks=blocks)
         return req
+
+    def slot_blocks(self, slot_idx: int) -> List[int]:
+        """Pool block ids granted to the slot's current request."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        return list(st.blocks)
 
     # ---- token stream ----------------------------------------------------
     def record_token(self, slot_idx: int, token: int) -> Optional[str]:
@@ -161,6 +199,8 @@ class Scheduler:
         if st is None:
             raise ValueError(f"slot {slot_idx} is empty")
         self._slots[slot_idx] = None
+        if self.allocator is not None and st.blocks:
+            self.allocator.free(st.blocks)     # freed capacity is reusable
         now = self._clock()
         res = RequestResult(
             uid=st.req.uid,

@@ -1,0 +1,330 @@
+"""Paged block-table cache: allocator, substrate parity, block-aware
+admission, paged-vs-dense token equality, mixed-budget capacity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as C
+from repro.core import paging as P
+from repro.core.cache import CacheSpec
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, Request
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator (host-side free list)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_reuse():
+    a = P.BlockAllocator(8)
+    x = a.alloc(3)
+    y = a.alloc(2)
+    assert sorted(x + y) == list(range(5)) and a.used == 5
+    a.free(x)
+    assert a.available == 6
+    z = a.alloc(6)                      # reuses the freed ids
+    assert z is not None and a.available == 0
+    assert sorted(y + z) == list(range(8))
+    assert a.peak_used == 8
+
+
+def test_allocator_exhaustion_is_all_or_nothing():
+    a = P.BlockAllocator(4)
+    assert a.alloc(3) is not None
+    before = a.available
+    assert a.alloc(2) is None           # refused...
+    assert a.available == before        # ...without partial grabs
+    assert a.alloc(1) is not None
+
+
+def test_allocator_rejects_foreign_and_double_free():
+    a = P.BlockAllocator(4)
+    ids = a.alloc(2)
+    a.free(ids)
+    with pytest.raises(ValueError):
+        a.free(ids)                     # double free
+    with pytest.raises(ValueError):
+        a.free([99])                    # never allocated
+
+
+def test_scheduler_block_aware_admission_and_recycling():
+    """Pool-exhausted admission refuses (request stays queued); a retire
+    frees blocks and the same request admits."""
+    alloc = P.BlockAllocator(6)
+    sched = Scheduler((8,), 2, allocator=alloc, block_need=lambda r: 4)
+    r1, r2 = (Request(tokens=np.zeros(8, np.int32), max_new=4)
+              for _ in range(2))
+    sched.submit(r1)
+    sched.submit(r2)
+    assert sched.admit_next(0) is r1 and alloc.used == 4
+    assert sched.admit_next(1) is None          # 2 free < 4 needed
+    assert sched.pending == 1                   # r2 still queued
+    sched.record_token(0, 1)
+    sched.retire(0, "length")                   # frees r1's 4 blocks
+    assert alloc.used == 0
+    assert sched.admit_next(1) is r2            # retire-then-admit
+    assert alloc.used == 4 and alloc.peak_used == 4
+
+
+# ---------------------------------------------------------------------------
+# Substrate parity: paged append/materialize == dense, bit for bit
+# ---------------------------------------------------------------------------
+
+
+SPECS = [
+    CacheSpec(budget=32, window=0, policy="streaming", bits=16, group=8,
+              recent_protect=8),
+    CacheSpec(budget=32, window=0, policy="h2o", bits=16, group=8,
+              recent_protect=8),
+    CacheSpec(budget=32, window=8, policy="streaming", bits=2, group=8),
+    CacheSpec(budget=32, window=8, policy="h2o", bits=4, group=8,
+              recent_protect=8),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: f"{s.policy}-b{s.bits}")
+def test_paged_append_matches_dense(spec):
+    B, H, D, max_len, bl = 3, 2, 8, 64, 8
+    S = spec.main_store_len(max_len)
+    n_max = S // P.resolve_block_len(spec, S, bl)
+    lc = C.init_layer_kv(spec, B, max_len, H, D)
+    pg = P.init_paged_kv(spec, B, max_len, H, D, n_blocks=B * n_max + 2,
+                         block_len=bl)
+    # shuffled block assignment proves the table indirection matters
+    ids = np.random.default_rng(0).permutation(B * n_max).reshape(B, n_max)
+    pg = pg._replace(block_tbl=jnp.asarray(ids, jnp.int32))
+    key = jax.random.key(0)
+    for t in range(S + spec.window + 6):        # past budget: evictions
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        kn = jax.random.normal(k1, (B, H, D), jnp.float32)
+        vn = jax.random.normal(k2, (B, H, D), jnp.float32)
+        lc = C.append_token(lc, spec, kn, vn)
+        pg = C.append_token(pg, spec, kn, vn)
+        if spec.track_scores():
+            mass = jnp.abs(jax.random.normal(k3, (B, S + spec.window)))
+            lc = C.accumulate_scores(lc, spec, mass)
+            pg = C.accumulate_scores(pg, spec, mass)
+    k1, v1, b1 = C.materialize(lc, spec)
+    k2, v2, b2 = C.materialize(pg, spec)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    valid = np.asarray(b1) == 0
+    for a, b in ((k1, k2), (v1, v2)):
+        diff = np.where(valid[..., None, None],
+                        np.asarray(a, np.float32) - np.asarray(b, np.float32),
+                        0.0)
+        assert np.abs(diff).max() == 0
+    for f in P.META_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(lc, f)),
+                                      np.asarray(getattr(pg, f)), err_msg=f)
+
+
+def test_paged_insert_reset_matches_dense():
+    spec = CacheSpec(budget=16, window=8, policy="streaming", bits=2, group=8)
+    B, H, D, max_len, bl, nL = 3, 2, 8, 32, 8, 2
+    S = spec.main_store_len(max_len)
+    n_max = S // P.resolve_block_len(spec, S, bl)
+    dn = C.stacked_kv(spec, nL, B, max_len, H, D)
+    pg = P.stacked_paged_kv(spec, nL, B, max_len, H, D,
+                            n_blocks=B * n_max, block_len=bl)
+    key = jax.random.key(0)
+    one = C.init_layer_kv(spec, 1, max_len, H, D)
+    kk = jax.random.normal(key, (1, S, H, one.k.shape[-1]), jnp.float32)
+    SG = S // spec.group
+    one = one._replace(
+        k=kk.astype(one.k.dtype), v=(kk * 2).astype(one.v.dtype),
+        k_scale=jnp.ones((1, SG, H, D)), k_zero=jnp.full((1, SG, H, D), 0.5),
+        v_scale=jnp.full((1, S, H), 2.0), v_zero=jnp.zeros((1, S, H)),
+        scores=jnp.abs(kk[..., 0, 0]), slot_pos=jnp.arange(S)[None],
+        length=jnp.full((1,), S // 2, jnp.int32),
+        pos=jnp.full((1,), S // 2, jnp.int32))
+    pre = jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                  (nL, *x.shape)).copy(), one)
+    pre = pre._replace(budget=dn.budget)
+    slot = jnp.int32(1)
+    dn2 = C.insert_request(dn, slot, pre, batch_axis=1)
+    ids = jnp.arange(n_max, dtype=jnp.int32) + 1
+    pg2 = P.insert_request_paged(pg, slot, pre, ids, batch_axis=1)
+    for L in range(nL):
+        g = P.gather_dense(jax.tree.map(lambda t: t[L], pg2), spec)
+        d = jax.tree.map(lambda t: t[L], dn2)
+        for f in ("k", "v", "k_scale", "k_zero", "v_scale", "v_zero"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(d, f))[1], np.asarray(getattr(g, f))[1],
+                err_msg=f"layer {L} field {f}")
+    dn3 = C.reset_slot(dn2, slot, batch_axis=1)
+    pg3 = P.reset_slot_paged(pg2, slot, batch_axis=1)
+    for f in P.META_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(dn3, f)),
+                                      np.asarray(getattr(pg3, f)), err_msg=f)
+    assert (np.asarray(pg3.block_tbl)[:, 1] == -1).all()
+
+    # partial allocation (request smaller than the physical store): rows
+    # beyond the granted blocks are dropped, no other block is touched
+    ids_part = jnp.concatenate([ids[:1], jnp.full((n_max - 1,), -1,
+                                                  jnp.int32)])
+    before = np.asarray(pg.pk, np.int32)
+    pg4 = P.insert_request_paged(pg, slot, pre, ids_part, batch_axis=1)
+    touched = (np.asarray(pg4.pk, np.int32) != before).reshape(
+        nL, B * n_max, -1).any(-1)
+    others = [i for i in range(B * n_max) if i != 1]
+    assert not touched[:, others].any()
+
+
+def test_paged_physical_bytes_counts_mapped_blocks():
+    spec = CacheSpec(budget=16, window=8, policy="streaming", bits=2, group=8)
+    pg = P.stacked_paged_kv(spec, 2, 3, 32, 2, 8, n_blocks=6, block_len=8)
+    empty = C.cache_physical_bytes(pg)
+    pg = pg._replace(block_tbl=pg.block_tbl.at[:, 0, 0].set(2))
+    assert C.cache_physical_bytes(pg) == empty + P.bytes_per_block(pg)
+
+
+# ---------------------------------------------------------------------------
+# Paged Pallas kernel vs gather-oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [
+    CacheSpec(budget=32, window=0, policy="h2o", bits=16, group=8,
+              recent_protect=8),
+    CacheSpec(budget=32, window=8, policy="h2o", bits=2, group=8,
+              recent_protect=8),
+], ids=["dense16", "kivi2"])
+def test_paged_kernel_matches_gather_oracle(spec):
+    from repro.nn import attention as A
+    B, Hq, Hkv, D, max_len, bl = 2, 4, 2, 8, 32, 8
+    S = spec.main_store_len(max_len)
+    n_max = S // P.resolve_block_len(spec, S, bl)
+    pg = P.init_paged_kv(spec, B, max_len, Hkv, D,
+                         n_blocks=B * n_max + 3, block_len=bl)
+    ids = np.random.default_rng(0).permutation(B * n_max).reshape(B, n_max)
+    pg = pg._replace(block_tbl=jnp.asarray(ids, jnp.int32))
+    key = jax.random.key(0)
+    for _ in range(S + spec.window + 5):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        pg = C.append_token(pg, spec,
+                            jax.random.normal(k1, (B, Hkv, D), jnp.float32),
+                            jax.random.normal(k2, (B, Hkv, D), jnp.float32))
+        pg = C.accumulate_scores(
+            pg, spec, jnp.abs(jax.random.normal(k3, (B, S + spec.window))))
+    key, kq = jax.random.split(key)
+    q = jax.random.normal(kq, (B, 1, Hq, D), jnp.bfloat16)
+    o_ref, m_ref = A.decode_attention(q, pg, spec, use_kernels=False)
+    o_k, m_k = A.decode_attention(q, pg, spec, use_kernels=True,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_ref), atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# End to end: generate_continuous paged == dense, admission under pressure
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+BUCKETS = (16, 32)
+
+
+def _requests(cfg, n, seed=0, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        tokens=rng.integers(0, cfg.vocab_size,
+                            size=BUCKETS[i % 2]).astype(np.int32),
+        max_new=int(rng.integers(3, max_new + 1))) for i in range(n)]
+
+
+def _uid_tokens(res):
+    return {r.uid - res.results[0].uid: r.tokens.tolist()
+            for r in sorted(res.results, key=lambda r: r.uid)}
+
+
+@pytest.mark.parametrize("pname", ["full", "h2o", "kivi2"])
+def test_continuous_paged_equals_dense(small_model, pname):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)[pname]
+    reqs = _requests(cfg, 5, seed=2)
+    outs = {}
+    for paged in (False, True):
+        eng = Engine(cfg, params, pol, max_new=6, slots=2, buckets=BUCKETS,
+                     paged=paged, block_len=8, seed=0)
+        res = eng.generate_continuous(
+            [Request(tokens=r.tokens, max_new=r.max_new) for r in reqs])
+        outs[paged] = _uid_tokens(res)
+    assert outs[False] == outs[True]
+
+
+def test_paged_pool_exhaustion_recycles(small_model):
+    """A pool sized for ~one request serializes decode but still serves
+    everything, never exceeds the pool, and matches dense tokens."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                        size=32).astype(np.int32), max_new=4)
+            for _ in range(4)]
+    # S = 32 + 8 = 40 rows -> block_len 8 sticks; each request pins
+    # ceil((32+4)/8) = 5 blocks, so a 6-block pool fits exactly one
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=3,
+                 buckets=(32,), paged=True, block_len=8, pool_blocks=6,
+                 seed=0)
+    res = eng.generate_continuous(reqs)
+    assert len(res.results) == 4
+    assert all(r.n_tokens == 4 for r in res.results)
+    assert res.pool_peak_blocks <= 6
+    assert res.occupancy <= 1 / 3 + 1e-6        # serialized co-residency
+    dense = Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=3,
+                   buckets=(32,), seed=0)
+    resd = dense.generate_continuous(
+        [Request(tokens=r.tokens, max_new=r.max_new) for r in reqs])
+    assert _uid_tokens(res) == _uid_tokens(resd)
+
+
+def test_paged_pool_too_small_raises(small_model):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=2,
+                 buckets=(32,), paged=True, block_len=8, pool_blocks=2,
+                 seed=0)
+    with pytest.raises(RuntimeError, match="pool too small"):
+        eng.generate_continuous(
+            [Request(tokens=np.zeros(32, np.int32), max_new=4)])
+
+
+def test_mixed_budget_capacity_paged_vs_dense(small_model):
+    """Acceptance: at equal physical bytes, a paged pool serving a 50/50
+    full + kivi2 mix co-resides >= 1.5x the sequences of the dense
+    layout (which must reserve every slot at the full-precision
+    worst case to accept either request kind)."""
+    cfg, params = small_model
+    L, NEW = 32, 6
+    per_seq = {}
+    for pname in ("full", "kivi2"):
+        pol = presets(budget=32, window=8)[pname]
+        eng = Engine(cfg, params, pol, prompt_len=L, max_new=NEW, slots=2,
+                     buckets=(L,), paged=True, block_len=8, seed=0)
+        res = eng.generate_continuous(
+            [Request(tokens=np.arange(L, dtype=np.int32), max_new=2)])
+        # bytes one live request pins: its blocks + its metadata share
+        per_seq[pname] = res.paged_bytes_per_seq(eng.slots)
+    dense = Engine(cfg, params, presets(budget=32, window=8)["full"],
+                   prompt_len=L, max_new=NEW, slots=2, buckets=(L,), seed=0)
+    resd = dense.generate_continuous(
+        [Request(tokens=np.arange(L, dtype=np.int32), max_new=2)])
+    dense_slot = resd.cache_physical_bytes / dense.slots
+    paged_mixed = (per_seq["full"] + per_seq["kivi2"]) / 2
+    ratio = dense_slot / paged_mixed
+    assert ratio >= 1.5, (
+        f"paged mixed-budget co-residency {ratio:.2f}x < 1.5x "
+        f"(dense {dense_slot:.0f} B/slot vs paged {paged_mixed:.0f} B/seq)")
