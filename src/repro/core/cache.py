@@ -529,6 +529,39 @@ def append_token(lc, spec: CacheSpec, k_new: Array, v_new: Array,
     return append_token_dense(lc, spec, k_new, v_new, key)
 
 
+def append_segment(lc, spec: CacheSpec, k_seg: Array, v_seg: Array,
+                   key: Optional[Array] = None):
+    """Append `n` tokens in order: k_seg/v_seg [B, n, H, D] (post-RoPE).
+
+    The multi-token generalization of `append_token` — one call per
+    prompt segment or speculative draft instead of one per token. It is
+    *bit-compatible with the monolithic path by construction*: the body
+    is a `lax.scan` of `append_token` over the segment, so evictions and
+    quantized group flushes fire at exactly the token positions they
+    would in a token-at-a-time loop (a segment-granular bulk write could
+    not reproduce mid-segment victim selection). Works on both stores —
+    `LayerKV` and `paging.PagedLayerKV` ride through `append_token`'s
+    dispatch (segment writes scatter through the block table there).
+
+    `key` is split once per token (policy noise, e.g. NACL), matching a
+    caller that splits its own key per step."""
+    n = k_seg.shape[1]
+    if n == 0:
+        return lc
+    keys = (jax.random.split(key, n) if key is not None
+            else jnp.zeros((n, 0), jnp.uint32))
+
+    def body(c, xs):
+        k1, v1, kk = xs
+        return append_token(c, spec, k1, v1,
+                            key=kk if key is not None else None), None
+
+    lc, _ = jax.lax.scan(
+        body, lc, (k_seg.transpose(1, 0, 2, 3), v_seg.transpose(1, 0, 2, 3),
+                   keys))
+    return lc
+
+
 # ---------------------------------------------------------------------------
 # Score accumulation (H2O / NACL / Keyformer statistics)
 # ---------------------------------------------------------------------------

@@ -437,6 +437,22 @@ def blocks_for_len(n_rows: int, block_len: int) -> int:
     return -(-n_rows // block_len)
 
 
+def request_blocks_prefix(spec: CacheSpec, S: int, rows_streamed: int,
+                          block_len: int) -> int:
+    """Chunk-wise grant schedule for a streaming (chunked-prefill)
+    admission: pool blocks that cover the prompt rows streamed so far.
+    Monotone in `rows_streamed` and bounded by `request_blocks` — the
+    engine grants the difference before each segment and tops up to the
+    full `request_blocks` (decode headroom + quantization slack) at the
+    final one, so a long prompt only pins the pool as it actually
+    arrives (the first step toward the ROADMAP's lazy block growth)."""
+    rows = rows_streamed
+    if spec.quantized:
+        G = spec.group
+        rows = -(-rows // G) * G
+    return blocks_for_len(min(S, max(rows, 1)), block_len)
+
+
 def request_blocks(spec: CacheSpec, S: int, prompt_len: int, max_new: int,
                    block_len: int) -> int:
     """Blocks that cover every row a request admitted at `prompt_len`

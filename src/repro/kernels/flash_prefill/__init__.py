@@ -1,1 +1,4 @@
-from repro.kernels.flash_prefill.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_prefill.ops import (  # noqa: F401
+    flash_attention,
+    flash_attention_chunk,
+)

@@ -66,6 +66,102 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
                          ).astype(out_ref.dtype)
 
 
+def _chunk_kernel(off_ref, q_ref, k_ref, v_ref, out_ref, m_scr, l_scr,
+                  acc_scr, *, bq: int, bk: int, window: int, scale: float):
+    """Rectangular variant for chunked prefill: Tq (one prompt segment)
+    attends over Tk (the full prompt scratch) at absolute query offset
+    `off_ref[0]` — scalar-prefetched so the offset stays a traced operand
+    (one compile per segment *length*, not per offset). The causal mask
+    compares absolute positions, so scratch rows beyond the segment end
+    (still zero) are masked exactly like the monolithic kernel masks
+    future rows."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = off_ref[0] + iq * bq
+    k_start = ik * bk
+    needed = k_start <= q_start + bq - 1          # causal reachability
+    if window > 0:
+        needed = jnp.logical_and(needed, k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)        # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)        # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = (q @ k.T) * scale                      # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos <= qpos
+        if window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        out_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def flash_prefill_chunk_pallas(q, k, v, q_offset, *, window: int = 0,
+                               bq: int = 512, bk: int = 512,
+                               interpret: bool = False):
+    """q: [B, Tq, Hq, D] (one segment, rotated at absolute positions
+    q_offset..q_offset+Tq); k, v: [B, Tk, Hkv, D] (full prompt scratch).
+    q_offset: [1] int32. Returns out [B, Tq, Hq, D]."""
+    B, Tq, Hq, D = q.shape
+    Tk = k.shape[1]
+    Hkv = k.shape[2]
+    Gq = Hq // Hkv
+    bq, bk = min(bq, Tq), min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0
+    qh = q.transpose(0, 2, 1, 3)                   # [B, Hq, Tq, D]
+    kh = k.transpose(0, 2, 1, 3)                   # [B, Hkv, Tk, D]
+    vh = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_chunk_kernel, bq=bq, bk=bk, window=window,
+                          scale=1.0 / math.sqrt(D)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hq, Tq // bq, Tk // bk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D),
+                             lambda b, h, i, j, off: (b, h, i, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, i, j, off: (b, h // Gq, j, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, i, j, off: (b, h // Gq, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, D),
+                                   lambda b, h, i, j, off: (b, h, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tq, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(q_offset, jnp.int32).reshape(1), qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
                                              "interpret"))
 def flash_prefill_pallas(q, k, v, *, window: int = 0, bq: int = 512,

@@ -22,4 +22,20 @@ def flash_attention(q, k, v, *, window: int = 0, bq: int = 512,
                                        interpret=interpret)
 
 
+def flash_attention_chunk(q, k, v, *, q_offset, window: int = 0,
+                          bq: int = 512, bk: int = 512,
+                          interpret: Optional[bool] = None):
+    """Chunked-prefill variant: q is one prompt segment [B, C, Hq, D]
+    rotated at absolute positions q_offset..q_offset+C; k, v are the
+    full prompt scratch [B, T, Hkv, D] (rows beyond the segment end
+    still zero — masked by the absolute-position causal test). q_offset
+    is a traced scalar: one compile per segment length."""
+    interpret = resolve_interpret(interpret)
+    C, T = q.shape[1], k.shape[1]
+    return kernel.flash_prefill_chunk_pallas(
+        q, k, v, q_offset, window=window,
+        bq=pick_block(C, 1, bq), bk=pick_block(T, 1, bk),
+        interpret=interpret)
+
+
 flash_attention_ref = ref.flash_prefill_ref

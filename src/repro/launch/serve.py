@@ -57,10 +57,21 @@ def main() -> None:
                     help="physical pool size in blocks (0 = capacity "
                          "parity with the dense layout); smaller pools "
                          "refuse admission until blocks free up")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="stream long-prompt admissions in --chunk-len "
+                         "segments between decode steps (--continuous "
+                         "only): resident slots keep emitting tokens "
+                         "while a prompt loads, token streams unchanged")
+    ap.add_argument("--chunk-len", type=int, default=64,
+                    help="prompt tokens per prefill segment (snapped "
+                         "down to the mass-accumulation group)")
     args = ap.parse_args()
     if args.paged and not args.continuous:
         ap.error("--paged requires --continuous (the wave path decodes "
                  "straight off the dense prefill cache)")
+    if args.chunked_prefill and not args.continuous:
+        ap.error("--chunked-prefill requires --continuous (wave prefills "
+                 "have no resident decode to stall)")
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg = get_config(args.arch)
@@ -77,7 +88,9 @@ def main() -> None:
                      max_new=args.max_new, slots=args.slots, buckets=buckets,
                      use_kernels=use_kernels, paged=args.paged,
                      block_len=args.block_len,
-                     pool_blocks=args.pool_blocks or None)
+                     pool_blocks=args.pool_blocks or None,
+                     chunked_prefill=args.chunked_prefill,
+                     chunk_len=args.chunk_len)
         eos = args.eos_id if args.eos_id >= 0 else None
         reqs = [
             Request(
@@ -91,7 +104,13 @@ def main() -> None:
         ]
         res = eng.generate_continuous(reqs)
         print(f"policy={res.policy_name} continuous "
-              f"requests={len(res.results)} buckets={buckets}")
+              f"requests={len(res.results)} buckets={buckets}"
+              + (f" chunked_prefill(chunk_len={eng.chunk_len})"
+                 if args.chunked_prefill else ""))
+        failed = res.failed()
+        if failed:
+            print(f"failed ({len(failed)} requests never fit the paged "
+                  f"pool): uids={[r.uid for r in failed]}")
         print(f"prefill_s={res.prefill_seconds:.2f} "
               f"decode_tok/s={res.decode_tokens_per_s:.1f} "
               f"occupancy={res.occupancy:.2f} "

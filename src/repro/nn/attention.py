@@ -22,6 +22,15 @@ from repro.nn.rope import apply_rope
 Array = jax.Array
 NEG_INF = -1e30
 
+# Canonical query-row group for attention-mass accumulation. Masses are
+# folded over fixed MASS_GROUP-row groups *sequentially* (left to right),
+# so a prompt processed in one monolithic pass and the same prompt
+# processed in chunks accumulate bit-identical totals — float addition
+# is not associative, and the chunked-prefill token-equality contract
+# (serving/engine.py) needs the same association chain in both paths.
+# Chunk starts must be MASS_GROUP-aligned (the engine snaps chunk_len).
+MASS_GROUP = 8
+
 
 # ---------------------------------------------------------------------------
 # Parameters
@@ -74,13 +83,37 @@ def qkv(p: dict, x: Array, cfg, positions: Optional[Array], *, rope: bool = True
 
 
 def _attend_block(q, k, v, mask_bias, scale):
-    """q: [B,Tq,Hkv,G,D]; k/v: [B,Tk,Hkv,D]; mask_bias: [B,1,1,Tq,Tk]."""
+    """q: [B,Tq,Hkv,G,D]; k/v: [B,Tk,Hkv,D]; mask_bias: [B,1,1,Tq,Tk].
+    Returns (out, row_mass [B, Tq, Tk]) — per-query-row attention mass,
+    reduced over heads only (row-stable: a row's value is independent of
+    which other query rows share the block)."""
     s = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32) * scale
     s = s + mask_bias.transpose(0, 1, 2, 3, 4)  # [B,Hkv|1,G|1,Tq,Tk]
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
-    mass = p.sum(axis=(1, 2, 3))                # [B, Tk]
-    return o, mass
+    row_mass = p.sum(axis=(1, 2))               # [B, Tq, Tk]
+    return o, row_mass
+
+
+def _fold_mass(carry: Array, row_mass: Array, group: Optional[int]) -> Array:
+    """Accumulate per-row masses into `carry` [B, Tk].
+
+    group=None: one reduce over the row axis (legacy single-call path).
+    group=g: rows are reduced in g-row blocks and the block partials are
+    folded into `carry` strictly left to right (lax.scan — sequential by
+    construction). Because the fold continues *from the carry*, a prompt
+    split across multiple calls accumulates the exact association chain
+    of one big call, provided every call starts on a g-aligned row."""
+    B, Tq, Tk = row_mass.shape
+    if group is None:
+        return carry + row_mass.sum(axis=1)
+    pad = (-Tq) % group
+    if pad:
+        row_mass = jnp.pad(row_mass, ((0, 0), (0, pad), (0, 0)))
+    g_mass = row_mass.reshape(B, -1, group, Tk).sum(axis=2)  # [B, nG, Tk]
+    carry, _ = jax.lax.scan(lambda c, m: (c + m, None), carry,
+                            g_mass.transpose(1, 0, 2))
+    return carry
 
 
 def gqa_attention(
@@ -88,7 +121,8 @@ def gqa_attention(
     causal: bool, window: int = 0,
     q_positions: Optional[Array] = None, kv_positions: Optional[Array] = None,
     kv_bias: Optional[Array] = None, q_chunk: int = 512,
-    return_mass: bool = False,
+    return_mass: bool = False, mass_group: Optional[int] = None,
+    mass_init: Optional[Array] = None,
 ):
     """General GQA attention.
 
@@ -97,6 +131,11 @@ def gqa_attention(
     Chunked over Tq (flash-style memory profile in pure XLA: scores are
     never materialized beyond [.., q_chunk, Tk]).
     Returns out [B, Tq, Hq, D] (+ attention mass [B, Tk] if requested).
+
+    mass_group / mass_init: canonical grouped mass accumulation (see
+    `_fold_mass`). `mass_init` seeds the fold — chunked prefill passes
+    the running mass so a prompt split across calls accumulates the
+    exact association chain of one monolithic call.
     """
     B, Tq, Hq, D = q.shape
     Hkv = k.shape[2]
@@ -125,10 +164,14 @@ def gqa_attention(
             b = b + kv_bias[:, None, None, None, :]
         return b
 
+    mass0 = (mass_init if mass_init is not None
+             else jnp.zeros((B, k.shape[1]), jnp.float32))
     if Tq <= q_chunk:
-        o, mass = _attend_block(qg, k, v, bias_for(q_positions), scale)
+        o, row_mass = _attend_block(qg, k, v, bias_for(q_positions), scale)
         out = o.reshape(B, Tq, Hq, D)
-        return (out, mass) if return_mass else out
+        if not return_mass:
+            return out
+        return out, _fold_mass(mass0, row_mass, mass_group)
 
     if Tq % q_chunk:
         # pad queries to a chunk multiple; padded rows are sliced off.
@@ -148,10 +191,9 @@ def gqa_attention(
 
     def body(carry_mass, xs):
         qc, qp = xs
-        o, m = _attend_block(qc, k, v, bias_for(qp), scale)
-        return carry_mass + m, o
+        o, row_mass = _attend_block(qc, k, v, bias_for(qp), scale)
+        return _fold_mass(carry_mass, row_mass, mass_group), o
 
-    mass0 = jnp.zeros((B, k.shape[1]), jnp.float32)
     mass, outs = jax.lax.scan(body, mass0, (qg_c, qpos_c))
     out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, Hq, D)
     return (out, mass) if return_mass else out

@@ -144,10 +144,12 @@ def block_prefill(p: dict, x: Array, cfg, kind: str, spec: CacheSpec, *,
             o = fp_ops.flash_attention(q, k, v, window=cfg.sliding_window)
             mass = jnp.zeros(x.shape[:2], jnp.float32)
         else:
+            # mass_group: canonical sequential fold so a chunked prefill
+            # (block_prefill_chunk) accumulates bit-identical totals
             o, mass = attn.gqa_attention(
                 q, k, v, causal=True, window=cfg.sliding_window,
                 q_positions=positions, kv_positions=positions,
-                return_mass=True)
+                return_mass=True, mass_group=attn.MASS_GROUP)
         B, T, _ = x.shape
         x = x + L.linear(p["attn"]["wo"], o.reshape(B, T, -1))
         lc = kvcache.compress_prompt(spec, k, v, mass, key=key, dtype=cfg.dtype,
@@ -161,6 +163,64 @@ def block_prefill(p: dict, x: Array, cfg, kind: str, spec: CacheSpec, *,
         x = _cross_attend(p, x, memory_kv, cfg)
         x, aux = _ffn(p, x, cfg)
         return x, aux, st
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: one prompt segment against the admission scratch
+# ---------------------------------------------------------------------------
+
+
+def block_prefill_chunk(p: dict, x: Array, cfg, spec: CacheSpec,
+                        k_scr: Array, v_scr: Array, mass_scr: Array,
+                        positions: Array):
+    """One attention layer's step of a chunked prefill (attn blocks only —
+    `nn.model.prefill_chunk` gates SSM/MoE archs).
+
+    x: [1, C, d_model] — the current segment's hidden states; positions:
+    [1, C] absolute prompt positions (contiguous, MASS_GROUP-aligned
+    start). k_scr/v_scr: [1, T, Hkv, D] full-precision prompt K/V scratch
+    (rows beyond this segment still zero); mass_scr: [1, T] running
+    attention mass. The segment's K/V are written into the scratch first,
+    then its queries attend to the whole scratch under the ordinary
+    causal mask — full attention to the prefix, causal within the
+    segment. Because every op outside attention is query-row-independent
+    and the attention keys span the same [T] axis as the monolithic pass,
+    activations (and therefore the scratch handed to
+    `cache.compress_prompt` at finalize) are bit-identical to a
+    monolithic `block_prefill` over the whole prompt.
+
+    Returns (x, k_scr, v_scr, mass_scr) updated."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(p["attn"], h, cfg, positions)
+    c0 = positions[0, 0]
+    k_scr = jax.lax.dynamic_update_slice_in_dim(k_scr, k.astype(k_scr.dtype),
+                                                c0, axis=1)
+    v_scr = jax.lax.dynamic_update_slice_in_dim(v_scr, v.astype(v_scr.dtype),
+                                                c0, axis=1)
+    if _use_flash_prefill_chunk(cfg, spec):
+        # same dispatch rule as the monolithic path: policies that never
+        # read the mass statistic take the flash kernel (and record zero
+        # mass there too, so the two engines stay comparable)
+        from repro.kernels.flash_prefill import ops as fp_ops
+        o = fp_ops.flash_attention_chunk(q, k_scr, v_scr, q_offset=c0,
+                                         window=cfg.sliding_window)
+    else:
+        o, mass_scr = attn.gqa_attention(
+            q, k_scr, v_scr, causal=True, window=cfg.sliding_window,
+            q_positions=positions, return_mass=True,
+            mass_group=attn.MASS_GROUP, mass_init=mass_scr)
+    B, C, _ = x.shape
+    x = x + L.linear(p["attn"]["wo"], o.reshape(B, C, -1))
+    x, _ = _ffn(p, x, cfg)
+    return x, k_scr, v_scr, mass_scr
+
+
+def _use_flash_prefill_chunk(cfg, spec: CacheSpec) -> bool:
+    """Chunk twin of `_use_flash_prefill`: the chunk variant of the flash
+    kernel takes the query offset explicitly, so standard-arange
+    positions are implied rather than required."""
+    return (attn.resolve_use_kernels(getattr(cfg, "use_kernels", None))
+            and not spec.track_scores())
 
 
 # ---------------------------------------------------------------------------

@@ -243,6 +243,129 @@ def prefill(params, cfg, batch: dict, spec: CacheSpec, *,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: stream the prompt in segments, compress at the end
+# ---------------------------------------------------------------------------
+#
+# A monolithic prefill of a long prompt is one big compiled call — during
+# a continuous-batching admission it stalls every resident slot's decode
+# for its whole duration. Chunked prefill splits the prompt into
+# MASS_GROUP-aligned segments the engine interleaves between decode
+# steps. Each segment runs against a full-precision per-admission
+# *scratch* (`PrefillState`): its K/V rows are written into the scratch,
+# its queries attend causally over the whole scratch (full attention to
+# the prefix — the already-streamed rows — causal within the segment),
+# and attention mass accumulates via the canonical grouped fold
+# (`nn.attention.MASS_GROUP`). `prefill_finalize` then runs the same
+# per-layer `compress_prompt` the monolithic path runs, on bit-identical
+# inputs — so chunked and monolithic admissions produce bit-identical
+# caches, logits, and greedy token streams (the serving contract;
+# tests/test_chunked_prefill.py).
+#
+# Attention-only decoder archs: SSM state and MoE capacity couple tokens
+# across segment boundaries, so those archs are gated (ValueError).
+
+
+class PrefillState(NamedTuple):
+    """Per-admission scratch: exact prompt K/V + running attention mass.
+    Leaves are layer-stacked like `ModelCache.attn` ([n_sb, nA, ...])."""
+
+    k: Any      # [n_sb, nA, 1, T, Hkv, D] model dtype
+    v: Any      # [n_sb, nA, 1, T, Hkv, D]
+    mass: Any   # [n_sb, nA, 1, T] f32
+
+
+def _check_chunkable(cfg) -> None:
+    if ssm_positions(cfg):
+        raise ValueError("chunked prefill is attention-only: SSM state "
+                         "carries across segments (sequential scan)")
+    if cfg.is_moe:
+        raise ValueError("chunked prefill needs per-row MoE capacity: "
+                         "per-batch expert capacity couples segment "
+                         "tokens, so segmenting changes routing")
+    if cfg.is_encoder_decoder:
+        raise ValueError("chunked prefill is decoder-only")
+
+
+def init_prefill_state(cfg, prompt_len: int) -> PrefillState:
+    _check_chunkable(cfg)
+    sb, n_sb, _ = sb_layout(cfg)
+    nA = len(attn_positions(cfg))
+    H, D = cfg.num_kv_heads, cfg.head_dim
+    return PrefillState(
+        k=jnp.zeros((n_sb, nA, 1, prompt_len, H, D), cfg.dtype),
+        v=jnp.zeros((n_sb, nA, 1, prompt_len, H, D), cfg.dtype),
+        mass=jnp.zeros((n_sb, nA, 1, prompt_len), jnp.float32),
+    )
+
+
+def prefill_chunk(params, cfg, st: PrefillState, tokens: Array, c0,
+                  spec: CacheSpec):
+    """Run one prompt segment. tokens: [1, C] (C MASS_GROUP-aligned
+    except a final ragged segment); c0: scalar int32 absolute start
+    (traced — one compile per segment *length*, not per offset).
+    Returns (logits [1, V] of the segment's last token, new state)."""
+    x = L.embed(params["embed"], tokens)
+    C = tokens.shape[1]
+    positions = c0 + jnp.arange(C)[None]
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps = attn_positions(cfg)
+
+    assert all(k == "attn" for k, _ in kinds), "gated by _check_chunkable"
+
+    def body(x, xs):
+        p_sb, k_sl, v_sl, m_sl = xs
+        ks, vs, ms = [], [], []
+        for i in range(sb):
+            j = aps.index(i)
+            x, k_j, v_j, m_j = B.block_prefill_chunk(
+                p_sb[f"sub{i}"], x, cfg, spec,
+                k_sl[j], v_sl[j], m_sl[j], positions)
+            ks.append(k_j); vs.append(v_j); ms.append(m_j)
+        return x, (jnp.stack(ks), jnp.stack(vs), jnp.stack(ms))
+
+    x, (k_n, v_n, m_n) = jax.lax.scan(
+        body, x, (params["blocks"], st.k, st.v, st.mass))
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, PrefillState(k_n, v_n, m_n)
+
+
+def prefill_finalize(cfg, st: PrefillState, spec: CacheSpec, *,
+                     layer_budgets: Optional[Array] = None,
+                     key: Optional[Array] = None) -> ModelCache:
+    """Compress the completed scratch into a batch-1 `ModelCache` — the
+    same per-layer `compress_prompt` calls (same key/budget splitting) as
+    monolithic `prefill`, so the result is insert-compatible with
+    `Engine._insert` and bit-identical to the monolithic cache."""
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps = attn_positions(cfg)
+    nA = max(len(aps), 1)
+    if key is None:
+        key = jax.random.key(0)
+    keys = jax.random.split(key, n_sb * nA).reshape(n_sb, nA)
+    T = st.mass.shape[-1]
+    if layer_budgets is None:
+        S_phys = spec.main_store_len(T)
+        layer_budgets = jnp.full((n_sb, nA), S_phys, jnp.int32)
+    else:
+        layer_budgets = jnp.asarray(layer_budgets, jnp.int32).reshape(
+            n_sb, nA)
+
+    def body(carry, xs):
+        k_sl, v_sl, m_sl, ks, buds = xs
+        pieces = []
+        for i in range(sb):
+            j = aps.index(i)
+            pieces.append(kvcache.compress_prompt(
+                spec, k_sl[j], v_sl[j], m_sl[j], key=ks[j],
+                dtype=cfg.dtype, logical_budget=buds[j]))
+        return carry, jax.tree.map(lambda *xs: jnp.stack(xs), *pieces)
+
+    _, attn_c = jax.lax.scan(
+        body, 0, (st.k, st.v, st.mass, keys, layer_budgets))
+    return ModelCache(attn_c, None, None, None, None)
+
+
+# ---------------------------------------------------------------------------
 # Decode: one token
 # ---------------------------------------------------------------------------
 

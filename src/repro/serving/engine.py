@@ -17,7 +17,14 @@ shapes — TPU discipline):
     `reset_slot`), and the next queued request is prefilled straight into
     the freed batch position — no recompilation, no reallocation. This is
     what converts a compression policy's capacity win (more live
-    sequences per byte) into throughput. With ``paged=True`` the
+    sequences per byte) into throughput. With ``chunked_prefill=True``
+    admissions stream their prompt in ``chunk_len``-token segments
+    interleaved one bounded step per decode step (segment / compress /
+    insert), so a long prompt never stalls resident slots' decode —
+    with greedy token streams bit-identical to monolithic admission
+    (the canonical mass fold in `nn.attention` plus the full-precision
+    admission scratch in `nn.model` make the compressed cache the same
+    bits either way). With ``paged=True`` the
     persistent cache is the block-table substrate (`core.paging`): one
     physical pool shared across slots, block-aware admission (a request
     is admitted only when the free list covers its budgeted length), and
@@ -48,6 +55,7 @@ from repro.core import paging as paging_lib
 from repro.core.cache import CacheSpec, cache_logical_bytes_per_layer
 from repro.core.policy import CompressionPolicy
 from repro.nn import model as M
+from repro.nn.attention import MASS_GROUP
 from repro.serving import sampler as sampler_lib
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.utils import tree_bytes
@@ -93,6 +101,12 @@ class ContinuousGenerationResult:
                 return r.tokens
         raise KeyError(uid)
 
+    def failed(self) -> List[RequestResult]:
+        """Requests retired without being served (e.g. a paged pool too
+        small for their budgeted length). Their completed peers' results
+        are preserved alongside."""
+        return [r for r in self.results if r.finish_reason == "failed"]
+
     def paged_bytes_per_seq(self, slots: int) -> float:
         """Physical bytes one live request pins under paging: its peak
         allocated blocks plus its share of the per-slot metadata. The
@@ -103,6 +117,23 @@ class ContinuousGenerationResult:
         return blocks + (self.cache_physical_bytes - blocks) / slots
 
 
+@dataclass
+class _ChunkedAdmission:
+    """One in-flight chunked admission (at most one per engine loop):
+    the PREFILLING slot, its device-side scratch, and the MASS_GROUP-
+    aligned prompt segments still to stream."""
+    slot: int
+    st: Any                        # M.PrefillState scratch (device)
+    segs: List[np.ndarray]
+    starts: List[int]
+    key: Any
+    total_blocks: int = 0          # paged: full grant target
+    granted: int = 0
+    next_i: int = 0
+    last_logits: Any = None        # device logits of the last segment run
+    pc: Any = None                 # finalized batch-1 cache awaiting insert
+
+
 class Engine:
     def __init__(self, cfg, params, policy: CompressionPolicy, *,
                  prompt_len: Optional[int] = None, max_new: int,
@@ -111,7 +142,8 @@ class Engine:
                  allocator_signal: Optional[dict] = None, seed: int = 0,
                  use_kernels: Optional[bool] = None,
                  paged: bool = False, block_len: int = 16,
-                 pool_blocks: Optional[int] = None):
+                 pool_blocks: Optional[int] = None,
+                 chunked_prefill: bool = False, chunk_len: int = 64):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
         if use_kernels is not None:
@@ -154,6 +186,25 @@ class Engine:
             int(pool_blocks) if (paged and pool_blocks)
             else slots * self.n_max_blocks if paged else 0)
         self.block_allocator: Optional[paging_lib.BlockAllocator] = None
+
+        # --- chunked prefill (continuous batching only) -----------------
+        # Long-prompt admissions stream in `chunk_len`-token segments
+        # interleaved between decode steps, so resident slots keep
+        # emitting tokens while a prompt loads (nn/model.py chunked-
+        # prefill section). chunk_len snaps to the canonical mass group
+        # so chunked and monolithic admissions fold attention mass in
+        # the same association chain (bit-identical greedy streams).
+        self.chunked_prefill = bool(chunked_prefill)
+        self.chunk_len = 0
+        if self.chunked_prefill:
+            M._check_chunkable(cfg)
+            self.chunk_len = max(MASS_GROUP,
+                                 int(chunk_len) - int(chunk_len) % MASS_GROUP)
+            bad = [b for b in self.buckets if b % MASS_GROUP]
+            if bad:
+                raise ValueError(
+                    f"chunked prefill needs MASS_GROUP({MASS_GROUP})-"
+                    f"aligned prompt buckets, got {bad}")
 
         n_attn = cfg.num_attn_layers()
         alloc = budgets_lib.ALLOCATORS[policy.allocator]
@@ -226,6 +277,17 @@ class Engine:
             self._insert = jax.jit(_insert, donate_argnums=(0,) if dn else ())
         self._reset = jax.jit(_reset, donate_argnums=(0,) if dn else ())
 
+        if self.chunked_prefill:
+            # one compile per segment *length* (the offset is traced):
+            # <= 2 shapes per bucket (chunk_len + a ragged tail)
+            self._chunk_step = jax.jit(
+                lambda p, st, toks, c0: M.prefill_chunk(p, cfg, st, toks,
+                                                        c0, self.spec),
+                donate_argnums=(1,) if dn else ())
+            self._finalize = jax.jit(
+                lambda st, lb2, k: M.prefill_finalize(
+                    cfg, st, self.spec, layer_budgets=lb2, key=k))
+
     # ------------------------------------------------------------------
     def _request_blocks(self, req: Request) -> int:
         """Pool blocks that cover one request's budgeted length."""
@@ -283,11 +345,23 @@ class Engine:
             tok = self.sampler(logits, k1)[:, None]
             outs[w0:w1, 0] = np.asarray(tok)[: w1 - w0, 0]
             t0 = time.perf_counter()
+            # Double-buffered decode (same discipline as the continuous
+            # path): step t+1 is dispatched from step t's device-side
+            # tokens before the host fetches step t, so the per-step
+            # host sync pipelines behind the next dispatch instead of
+            # serializing every step. Token streams are unchanged — the
+            # compute chain is identical, only the fetch moves.
+            pend_tok = None
+            pend_t = 0
             for t in range(1, self.max_new):
                 self.key, k2 = jax.random.split(self.key)
-                tok, cache = self._decode(self.params, cache, tok, k2)
-                outs[w0:w1, t] = np.asarray(tok)[: w1 - w0]
-                tok = tok[:, None]
+                tok_dev, cache = self._decode(self.params, cache, tok, k2)
+                tok = tok_dev[:, None]
+                if pend_tok is not None:
+                    outs[w0:w1, pend_t] = np.asarray(pend_tok)[: w1 - w0]
+                pend_tok, pend_t = tok_dev, t
+            if pend_tok is not None:
+                outs[w0:w1, pend_t] = np.asarray(pend_tok)[: w1 - w0]
             jax.block_until_ready(cache)
             decode_s += time.perf_counter() - t0
             # accumulate across waves, normalized to the wave's *real*
@@ -342,6 +416,12 @@ class Engine:
             raise ValueError(
                 f"bucket {max(int(b) for b in buckets)} exceeds engine "
                 f"prompt_len {self.prompt_len}")
+        if buckets and self.chunked_prefill:
+            bad = [int(b) for b in buckets if int(b) % MASS_GROUP]
+            if bad:
+                raise ValueError(
+                    f"chunked prefill needs MASS_GROUP({MASS_GROUP})-"
+                    f"aligned prompt buckets, got {bad}")
         if self.paged:
             # fresh free list per run (the cache is rebuilt below too);
             # kept on self for post-run inspection (peak usage)
@@ -387,14 +467,14 @@ class Engine:
                 req = sched.admit_next(slot_idx)
                 if req is None:
                     if (self.paged and sched.pending
-                            and not sched.active_slots()):
+                            and not sched.active_slots()
+                            and not sched.prefilling_slots()):
                         # nothing running will ever free blocks: the head
-                        # request simply doesn't fit this pool
-                        need = self._request_blocks(sched.head_request())
-                        raise RuntimeError(
-                            f"paged pool too small: head request needs "
-                            f"{need} blocks, pool has {self.pool_blocks} "
-                            f"({self.block_allocator.available} free)")
+                        # request simply doesn't fit this pool. Retire it
+                        # as "failed" (preserving every completed
+                        # request's results) and try the next head.
+                        sched.fail_head()
+                        continue
                     # nothing admittable: clear the slot so stale KV never
                     # leaks into accounting or a later occupant — under
                     # paging this is load-bearing, not hygiene: a stale
@@ -427,8 +507,124 @@ class Engine:
                     return True
                 sched.retire(slot_idx, reason)   # 1-token request; refill
 
-        for i in range(self.slots):
-            admit_into(i)
+        # --- chunked admission (tentpole: long prompts must not stall
+        # resident decode). At most one admission is in flight; the loop
+        # below runs at most one prompt segment of it per decode step.
+        # The scratch (M.PrefillState) is disjoint from the live cache,
+        # so resident slots' rows never see a partial prompt — the
+        # finalize inserts the same compressed cache a monolithic
+        # admission would (bit-identical greedy streams).
+        adm: Optional[_ChunkedAdmission] = None
+
+        def start_admission() -> Optional[_ChunkedAdmission]:
+            """Begin a chunked admission into the first free slot; heads
+            that can never fit the pool fail immediately (as above)."""
+            while sched.pending:
+                free = sched.free_slots()
+                if not free:
+                    return None
+                req = sched.head_request()
+                total = self._request_blocks(req) if self.paged else 0
+                if self.paged and total > self.pool_blocks:
+                    sched.fail_head()
+                    continue
+                slot = free[0]
+                sched.begin_prefill(slot)
+                self.key, k1 = jax.random.split(self.key)
+                C = self.chunk_len
+                starts = list(range(0, len(req.tokens), C))
+                return _ChunkedAdmission(
+                    slot=slot,
+                    st=M.init_prefill_state(self.cfg, len(req.tokens)),
+                    segs=[req.tokens[s:s + C] for s in starts],
+                    starts=starts, key=k1, total_blocks=total)
+            return None
+
+        def advance_admission(run_all: bool):
+            """Advance the in-flight admission by one interleave step: a
+            prompt segment, the finalize (compress), or the insert +
+            first-token sample. Finalize and insert are separate steps —
+            each costs work proportional to the prompt/cache, so lumping
+            them (or a segment) together would itself become the
+            resident stall the tentpole removes. Returns
+            (slot, first_token_device) once the slot goes ACTIVE — the
+            token stays on device; the loop fetches and records it
+            alongside the next pending decode tokens (same double-buffer
+            discipline). `run_all` drains everything back-to-back — used
+            when no resident slot is decoding, so there is nothing to
+            stall."""
+            nonlocal cache, adm, prefill_s
+            t0 = time.perf_counter()
+            first = None
+            while adm is not None:
+                i = adm.next_i
+                if i == len(adm.segs):        # compress the scratch
+                    adm.pc = self._finalize(adm.st, lb, adm.key)
+                    adm.next_i += 1
+                    if run_all:
+                        continue
+                    break
+                if i == len(adm.segs) + 1:    # insert + first token
+                    # the full grant must be in place before the insert
+                    # scatters (decode headroom + quantization slack)
+                    if self.paged and adm.total_blocks > adm.granted:
+                        if not sched.grant_blocks(
+                                adm.slot, adm.total_blocks - adm.granted):
+                            if not sched.active_slots():
+                                # can't happen: total <= pool_blocks and
+                                # nothing else holds blocks — guard so a
+                                # bookkeeping bug can't spin forever
+                                raise RuntimeError(
+                                    "chunked admission stalled with no "
+                                    "active slots (allocator invariant "
+                                    "violated)")
+                            break  # stall until a retire frees blocks
+                        adm.granted = adm.total_blocks
+                    tok = self.sampler(adm.last_logits, adm.key)
+                    slot = adm.slot
+                    if self.paged:
+                        ids = np.full(self.n_max_blocks, -1, np.int32)
+                        got = sched.slot_blocks(slot)
+                        ids[:len(got)] = got
+                        cache = self._insert(cache, adm.pc, jnp.int32(slot),
+                                             jnp.asarray(ids))
+                    else:
+                        cache = self._insert(cache, adm.pc, jnp.int32(slot))
+                    clean_slots.discard(slot)
+                    sched.finish_prefill(slot)
+                    first = (slot, tok)
+                    adm = None
+                    break
+                if self.paged:
+                    # chunk-wise grants: pin only the blocks the rows
+                    # streamed so far need (first step toward the
+                    # ROADMAP's lazy block growth)
+                    c1 = adm.starts[i] + len(adm.segs[i])
+                    target = min(
+                        adm.total_blocks, paging_lib.request_blocks_prefix(
+                            self.spec, self._S_phys, c1, self.block_len))
+                    if target > adm.granted:
+                        if not sched.grant_blocks(adm.slot,
+                                                  target - adm.granted):
+                            if not sched.active_slots():
+                                raise RuntimeError(
+                                    "chunked admission stalled with no "
+                                    "active slots (allocator invariant "
+                                    "violated)")
+                            break  # stall until a retire frees blocks
+                        adm.granted = target
+                adm.last_logits, adm.st = self._chunk_step(
+                    self.params, adm.st, jnp.asarray(adm.segs[i][None]),
+                    jnp.int32(adm.starts[i]))
+                adm.next_i += 1
+                if not run_all:
+                    break
+            prefill_s += time.perf_counter() - t0
+            return first
+
+        if not self.chunked_prefill:
+            for i in range(self.slots):
+                admit_into(i)
 
         # Double-buffered decode: step N+1 is dispatched *before* blocking
         # on step N's token fetch — its inputs are step N's device-side
@@ -447,9 +643,12 @@ class Engine:
         # different sequence around mid-run admissions.
         tok_in = jnp.asarray(next_tok)          # [slots] device-side
         pending = None                          # (tok_dev, valid slots)
+        first_pending = None                    # (slot, first-token dev)
         loop_t0 = time.perf_counter()
         prefill_at_loop = prefill_s
         while True:
+            if self.chunked_prefill and adm is None:
+                adm = start_admission()
             active = sched.active_slots()
             new_pending = None
             if active:
@@ -459,7 +658,35 @@ class Engine:
                 sched.note_decode_step()
                 new_pending = (tok_dev, list(active))
                 tok_in = tok_dev                # feed N+1 from N, no sync
-            if pending is None and new_pending is None:
+            if first_pending is not None:
+                # fetch last iteration's first token (its compute has
+                # drained behind this iteration's dispatch by now)
+                slot0, ftok = first_pending
+                tok_i = int(jax.device_get(ftok)[0])
+                next_tok[slot0] = tok_i
+                reason = sched.record_token(slot0, tok_i)
+                if reason is not None:
+                    sched.retire(slot0, reason)      # 1-token request
+                    if new_pending is not None and slot0 in new_pending[1]:
+                        new_pending[1].remove(slot0)
+                    cache = self._reset(cache, jnp.int32(slot0))
+                    clean_slots.add(slot0)
+                first_pending = None
+            # interleave at most one step of the in-flight admission (a
+            # prompt segment, the compress, or the insert) per decode
+            # step; with nothing decoding there is nothing to stall, so
+            # the remaining steps stream through back-to-back
+            first = (advance_admission(run_all=not active)
+                     if self.chunked_prefill else None)
+            if first is not None:
+                # the slot joins the next dispatch with its first token —
+                # device-to-device; the host fetch + record are deferred
+                # to the next iteration like any pending decode token
+                slot0, ftok = first
+                tok_in = tok_in.at[slot0].set(ftok[0])
+                first_pending = (slot0, ftok)
+            if (pending is None and new_pending is None and adm is None
+                    and first_pending is None and not sched.pending):
                 break
             if pending is not None:
                 ptok, pvalid = pending
@@ -474,9 +701,17 @@ class Engine:
                         retired_any = True
                         if new_pending is not None and i in new_pending[1]:
                             new_pending[1].remove(i)
-                        if admit_into(i):
+                        if self.chunked_prefill:
+                            # admissions restart at the top of the loop;
+                            # clear the slot now so its garbage appends
+                            # can't route through a stale block table
+                            # into freed (soon re-granted) pool blocks
+                            cache = self._reset(cache, jnp.int32(i))
+                            clean_slots.add(i)
+                        elif admit_into(i):
                             admitted.append(i)
-                if self.paged and retired_any and sched.pending:
+                if (self.paged and retired_any and sched.pending
+                        and not self.chunked_prefill):
                     # a retire frees *blocks*, not just its own slot: a
                     # different slot that was refused admission while the
                     # pool was exhausted may fit now. Admission is FIFO,
@@ -511,7 +746,7 @@ class Engine:
         full = (self.cfg.kv_bytes_per_token() *
                 (self.prompt_len + self.max_new) * self.slots)
         results = sorted(sched.results, key=lambda r: r.uid)
-        ttfts = [r.ttft_s for r in results]
+        ttfts = [r.ttft_s for r in results if r.finish_reason != "failed"]
         return ContinuousGenerationResult(
             results=results,
             prefill_seconds=prefill_s,

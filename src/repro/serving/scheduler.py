@@ -51,15 +51,29 @@ class RequestResult:
     tokens: np.ndarray            # [n_emitted] generated (EOS included)
     prompt_len: int
     bucket: int
-    slot: int
-    finish_reason: str            # "eos" | "length"
-    ttft_s: float                 # submit -> first token
+    slot: int                     # -1: failed before ever holding a slot
+    finish_reason: str            # "eos" | "length" | "failed"
+    ttft_s: float                 # submit -> first token (0.0 if failed)
     total_s: float                # submit -> retirement
     decode_s: float               # first token -> retirement
+    token_times: np.ndarray = field(  # [n_emitted] clock at each token —
+        default_factory=lambda: np.zeros(0))  # inter-token stall analysis
 
     @property
     def n_tokens(self) -> int:
         return int(self.tokens.shape[0])
+
+    def max_inter_token_s(self, t0: float = -np.inf,
+                          t1: float = np.inf) -> float:
+        """Largest gap between consecutive token timestamps whose later
+        token lands in [t0, t1] — the per-request stall metric the
+        chunked-prefill benchmark reports."""
+        tt = self.token_times
+        if tt.shape[0] < 2:
+            return 0.0
+        gaps = np.diff(tt)
+        sel = (tt[1:] >= t0) & (tt[1:] <= t1)
+        return float(gaps[sel].max()) if sel.any() else 0.0
 
 
 @dataclass
@@ -70,7 +84,10 @@ class _SlotState:
     t_admit: float
     t_first: float = 0.0
     emitted: List[int] = field(default_factory=list)
+    token_times: List[float] = field(default_factory=list)
     blocks: List[int] = field(default_factory=list)   # paged-pool block ids
+    prefilling: bool = False      # chunked admission in flight: occupied,
+                                  # not yet decoding (no tokens yet)
 
 
 class Scheduler:
@@ -81,6 +98,13 @@ class Scheduler:
     sampled token through `record_token` (which returns a finish reason
     once EOS or the request's max_new is hit), then `retire`s the slot —
     freeing it for the next queued request immediately, mid-decode.
+
+    **Chunked admission** inserts a PREFILLING stage: QUEUED ->
+    (begin_prefill) PREFILLING -> (grant_blocks x chunks, paged) ->
+    (finish_prefill) ACTIVE -> ... The slot is occupied but takes no
+    decode steps; TTFT still clocks at the real first token. A request
+    that can never be served is retired from the queue head with
+    `fail_head` ("failed" finish reason) so completed work survives.
 
     **Block-aware admission** (paged cache): pass `allocator` (an object
     with `alloc(n) -> list | None` / `free(ids)`, e.g.
@@ -140,7 +164,14 @@ class Scheduler:
         return [i for i, s in enumerate(self._slots) if s is None]
 
     def active_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self._slots) if s is not None]
+        """Slots decoding (PREFILLING slots are occupied but not active:
+        they take no decode steps and emit no tokens yet)."""
+        return [i for i, s in enumerate(self._slots)
+                if s is not None and not s.prefilling]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots)
+                if s is not None and s.prefilling]
 
     def slot_request(self, slot_idx: int) -> Optional[Request]:
         st = self._slots[slot_idx]
@@ -177,6 +208,47 @@ class Scheduler:
             raise ValueError(f"slot {slot_idx} is empty")
         return list(st.blocks)
 
+    # ---- chunked-prefill lifecycle (QUEUED -> PREFILLING -> ACTIVE) ------
+    def begin_prefill(self, slot_idx: int) -> Optional[Request]:
+        """Pop the head request into a free slot in the PREFILLING state:
+        the slot is occupied (it owns its scratch and, under paging, its
+        chunk-wise block grants) but takes no decode steps until
+        `finish_prefill`. Block grants are paced by the engine through
+        `grant_blocks` — unlike `admit_next`, nothing is allocated here."""
+        if self._slots[slot_idx] is not None:
+            raise ValueError(f"slot {slot_idx} is occupied")
+        if not self._queue:
+            return None
+        req, t_submit = self._queue.popleft()
+        self._slots[slot_idx] = _SlotState(
+            req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
+            prefilling=True)
+        return req
+
+    def grant_blocks(self, slot_idx: int, n: int) -> bool:
+        """Grant `n` more pool blocks to a PREFILLING slot (chunk-wise
+        admission pacing). False when the allocator can't cover them yet
+        — the admission stalls until a retire frees blocks."""
+        st = self._slots[slot_idx]
+        if st is None or not st.prefilling:
+            raise ValueError(f"slot {slot_idx} is not prefilling")
+        if self.allocator is None or n <= 0:
+            return True
+        got = self.allocator.alloc(n)
+        if got is None:
+            return False
+        st.blocks.extend(got)
+        return True
+
+    def finish_prefill(self, slot_idx: int) -> None:
+        """PREFILLING -> ACTIVE: the admission's cache is inserted and
+        the request starts decoding. TTFT is *not* clocked here — it is
+        clocked at the first `record_token`, the real first token."""
+        st = self._slots[slot_idx]
+        if st is None or not st.prefilling:
+            raise ValueError(f"slot {slot_idx} is not prefilling")
+        st.prefilling = False
+
     # ---- token stream ----------------------------------------------------
     def record_token(self, slot_idx: int, token: int) -> Optional[str]:
         """Append one sampled token; returns the finish reason ("eos" |
@@ -184,10 +256,14 @@ class Scheduler:
         st = self._slots[slot_idx]
         if st is None:
             raise ValueError(f"slot {slot_idx} is empty")
+        if st.prefilling:
+            raise ValueError(f"slot {slot_idx} is still prefilling")
         token = int(token)
+        now = self._clock()
         if not st.emitted:
-            st.t_first = self._clock()
+            st.t_first = now
         st.emitted.append(token)
+        st.token_times.append(now)
         if st.req.eos_id is not None and token == st.req.eos_id:
             return "eos"
         if len(st.emitted) >= st.req.max_new:
@@ -209,9 +285,35 @@ class Scheduler:
             bucket=st.bucket,
             slot=slot_idx,
             finish_reason=reason,
-            ttft_s=st.t_first - st.t_submit,
+            # a slot retired before its first token (failed mid-prefill)
+            # has no t_first: zero latencies instead of clock garbage
+            ttft_s=(st.t_first - st.t_submit) if st.emitted else 0.0,
             total_s=now - st.t_submit,
-            decode_s=now - st.t_first,
+            decode_s=(now - st.t_first) if st.emitted else 0.0,
+            token_times=np.asarray(st.token_times, np.float64),
+        )
+        self.results.append(res)
+        return res
+
+    def fail_head(self, reason: str = "failed") -> RequestResult:
+        """Retire the head of the queue without ever admitting it — the
+        request can't be served (e.g. its budgeted length exceeds the
+        whole paged pool). Earlier completions keep their results; the
+        next queued request moves up to the head."""
+        if not self._queue:
+            raise ValueError("queue is empty")
+        req, t_submit = self._queue.popleft()
+        now = self._clock()
+        res = RequestResult(
+            uid=req.uid,
+            tokens=np.zeros(0, np.int32),
+            prompt_len=len(req.tokens),
+            bucket=self.bucket_for(len(req.tokens)),
+            slot=-1,
+            finish_reason=reason,
+            ttft_s=0.0,
+            total_s=now - t_submit,
+            decode_s=0.0,
         )
         self.results.append(res)
         return res

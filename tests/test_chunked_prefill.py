@@ -1,0 +1,226 @@
+"""Chunked prefill: bit-identical admissions, segment appends, and the
+serving-loop robustness fixes that ride along.
+
+The contract (serving/engine.py): admitting a prompt in `chunk_len`
+segments interleaved between decode steps produces token streams
+*identical* to a monolithic admission — across eviction policies
+(full/h2o/kivi2), both stores (dense + paged), and chunk lengths that
+do and don't divide the prompt. The fast grid runs two covering cases;
+the full cross product runs under `-m slow` (CI `slow` job).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as C
+from repro.core import paging as P
+from repro.core.cache import CacheSpec
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, L, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, L)).astype(np.int32)
+
+
+def _run(cfg, params, pname, *, chunked, chunk_len=16, paged=False,
+         L=64, new=6, n=5, eos_at=None):
+    pol = presets(budget=32, window=8)[pname]
+    eng = Engine(cfg, params, pol, prompt_len=L, max_new=new, slots=2,
+                 paged=paged, block_len=8, chunked_prefill=chunked,
+                 chunk_len=chunk_len)
+    prompts = _prompts(cfg, n, L, seed=1)
+    reqs = [Request(tokens=prompts[i], max_new=new,
+                    eos_id=(eos_at if i == 1 else None)) for i in range(n)]
+    return eng.generate_continuous(reqs)
+
+
+def _assert_equal_streams(res_m, res_c, label):
+    assert len(res_m.results) == len(res_c.results)
+    for a, b in zip(res_m.results, res_c.results):
+        np.testing.assert_array_equal(
+            a.tokens, b.tokens,
+            err_msg=f"{label}: chunked diverged from monolithic")
+        assert a.finish_reason == b.finish_reason
+
+
+# Fast covering cases: a mass-driven eviction policy on the dense store
+# with a chunk that doesn't divide the prompt, and a quantized policy on
+# the paged store (chunk-wise block grants + group flushes).
+FAST_GRID = [("h2o", False, 24), ("kivi2", True, 16)]
+FULL_GRID = [(p, paged, cl)
+             for p in ("full", "h2o", "kivi2")
+             for paged in (False, True)
+             for cl in (16, 24)]
+
+
+@pytest.mark.parametrize("pname,paged,chunk_len", FAST_GRID,
+                         ids=lambda v: str(v))
+def test_chunked_matches_monolithic(small_model, pname, paged, chunk_len):
+    cfg, params = small_model
+    res_m = _run(cfg, params, pname, chunked=False, paged=paged)
+    res_c = _run(cfg, params, pname, chunked=True, chunk_len=chunk_len,
+                 paged=paged)
+    _assert_equal_streams(res_m, res_c, f"{pname}/paged={paged}/{chunk_len}")
+    # chunked runs really did slot reuse (5 requests through 2 slots)
+    assert len({r.slot for r in res_c.results}) <= 2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pname,paged,chunk_len", FULL_GRID,
+                         ids=lambda v: str(v))
+def test_chunked_matches_monolithic_full_grid(small_model, pname, paged,
+                                              chunk_len):
+    cfg, params = small_model
+    res_m = _run(cfg, params, pname, chunked=False, paged=paged)
+    res_c = _run(cfg, params, pname, chunked=True, chunk_len=chunk_len,
+                 paged=paged)
+    _assert_equal_streams(res_m, res_c, f"{pname}/paged={paged}/{chunk_len}")
+
+
+def test_chunked_matches_monolithic_with_early_exit(small_model):
+    """EOS mid-stream retires a slot while an admission is in flight;
+    the freed slot's next occupant still matches."""
+    cfg, params = small_model
+    probe = _run(cfg, params, "h2o", chunked=False)
+    # a value request 1 emits mid-stream: with eos_id set, both paths
+    # must cut the stream at its first occurrence
+    eos = int(probe.results[1].tokens[2])
+    res_m = _run(cfg, params, "h2o", chunked=False, eos_at=eos)
+    res_c = _run(cfg, params, "h2o", chunked=True, chunk_len=16, eos_at=eos)
+    _assert_equal_streams(res_m, res_c, "h2o/eos")
+    assert res_c.results[1].finish_reason == "eos"
+    first = int(np.argmax(probe.results[1].tokens == eos))
+    assert res_c.results[1].n_tokens == first + 1
+
+
+def test_chunked_flash_kernel_path(small_model):
+    """use_kernels=True routes chunk attention through the rectangular
+    flash kernel (interpret mode on CPU); streams still match the
+    monolithic kernel-path admission."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["kivi2"]
+    prompts = _prompts(cfg, 2, 32, seed=3)
+    outs = []
+    for chunked in (False, True):
+        eng = Engine(cfg, params, pol, prompt_len=32, max_new=3, slots=2,
+                     use_kernels=True, chunked_prefill=chunked, chunk_len=16)
+        outs.append(eng.generate_continuous(
+            [Request(tokens=p, max_new=3) for p in prompts]))
+    _assert_equal_streams(outs[0], outs[1], "kivi2/kernels")
+
+
+def test_chunked_validation(small_model):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["h2o"]
+    # chunk_len snaps down to the mass group
+    eng = Engine(cfg, params, pol, prompt_len=64, max_new=4, slots=2,
+                 chunked_prefill=True, chunk_len=27)
+    assert eng.chunk_len == 24
+    # buckets must be mass-group aligned when chunking
+    with pytest.raises(ValueError):
+        Engine(cfg, params, pol, prompt_len=68, max_new=4, slots=2,
+               buckets=(68,), chunked_prefill=True)
+    with pytest.raises(ValueError):
+        eng.generate_continuous(
+            [Request(tokens=np.zeros(64, np.int32), max_new=2)],
+            buckets=(12, 64))
+    # attention-only gate: SSM archs can't segment their state scan
+    ssm_cfg = reduced(get_config("mamba2-130m"))
+    with pytest.raises(ValueError):
+        M.init_prefill_state(ssm_cfg, 64)
+
+
+# ---------------------------------------------------------------------------
+# append_segment: the multi-token decode append
+# ---------------------------------------------------------------------------
+
+
+_DENSE = CacheSpec(budget=16, sinks=2, policy="h2o", window=0, group=1,
+                   recent_protect=4)
+_QUANT = CacheSpec(budget=16, sinks=2, policy="streaming", window=4,
+                   group=4, bits=4)
+
+
+@pytest.mark.parametrize("spec", [_DENSE, _QUANT], ids=["dense", "quant"])
+@pytest.mark.parametrize("store", ["layerkv", "paged"])
+def test_append_segment_matches_token_loop(spec, store):
+    """One `append_segment` call == the same tokens appended one by one
+    (bit-identical: evictions and quantized group flushes fire at the
+    same positions), on both stores."""
+    B, H, D, S, n = 2, 2, 8, 16, 7
+    if store == "layerkv":
+        lc = C.init_layer_kv(spec, B, S, H, D, jnp.float32)
+    else:
+        lc = P.init_paged_kv(spec, B, S, H, D, n_blocks=2 * (S // 4),
+                             block_len=4, dtype=jnp.float32)
+        nb = S // 4
+        lc = lc._replace(block_tbl=jnp.stack(
+            [jnp.arange(nb, dtype=jnp.int32),
+             jnp.arange(nb, 2 * nb, dtype=jnp.int32)]))
+    ks = jax.random.split(jax.random.key(7), 2)
+    k_seg = jax.random.normal(ks[0], (B, n, H, D), jnp.float32)
+    v_seg = jax.random.normal(ks[1], (B, n, H, D), jnp.float32)
+
+    seg = C.append_segment(lc, spec, k_seg, v_seg)
+    loop = lc
+    for t in range(n):
+        loop = C.append_token(loop, spec, k_seg[:, t], v_seg[:, t])
+    for f in type(lc)._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(seg, f)),
+                                      np.asarray(getattr(loop, f)),
+                                      err_msg=f"{store}/{f}")
+    if spec.quantized:
+        # the segment crossed at least one ring flush
+        assert int(np.asarray(seg.length).max()) > 0
+
+
+def test_append_segment_empty_is_identity():
+    lc = C.init_layer_kv(_DENSE, 1, 16, 2, 8, jnp.float32)
+    out = C.append_segment(lc, _DENSE, jnp.zeros((1, 0, 2, 8)),
+                           jnp.zeros((1, 0, 2, 8)))
+    assert out is lc
+
+
+# ---------------------------------------------------------------------------
+# Serving-loop robustness: completed work survives an unserviceable head
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunked", [False, True], ids=["mono", "chunked"])
+def test_failed_head_preserves_completed(small_model, chunked):
+    """A request whose budgeted length can never fit the paged pool is
+    retired with finish_reason="failed"; every other request completes
+    and keeps its results (regression: this used to raise RuntimeError
+    mid-run, discarding already-completed requests)."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["h2o"]
+    rng = np.random.default_rng(0)
+    new = 4
+    # bucket-16 requests need 3 blocks (16 + 4 rows / block_len 8);
+    # the bucket-32 request needs 4 > pool of 3 — unserviceable
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=new, slots=2,
+                 buckets=(16, 32), paged=True, block_len=8, pool_blocks=3,
+                 chunked_prefill=chunked, chunk_len=8)
+    mk = lambda L: Request(
+        tokens=rng.integers(0, cfg.vocab_size, size=L).astype(np.int32),
+        max_new=new)
+    reqs = [mk(16), mk(32), mk(16)]
+    res = eng.generate_continuous(reqs)
+    reasons = [r.finish_reason for r in res.results]
+    assert reasons == ["length", "failed", "length"]
+    assert [r.n_tokens for r in res.results] == [new, 0, new]
+    failed = res.failed()
+    assert len(failed) == 1 and failed[0].slot == -1
+    assert failed[0].ttft_s == 0.0 and failed[0].total_s >= 0.0

@@ -209,3 +209,28 @@ def test_flash_prefill_matches_model_attention():
                                            interpret=True)
     np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_model),
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_prefill_chunk_matches_square_kernel(window):
+    """The rectangular chunked-prefill variant (segment queries at a
+    scalar-prefetched offset over the full-prompt key axis, rows beyond
+    the segment zero) reproduces the square kernel's rows exactly —
+    chunk by chunk, covering a ragged tail."""
+    B, T, Hkv, Gq, D, C = 1, 96, 2, 2, 32, 40
+    Hq = Hkv * Gq
+    q = jax.random.normal(jax.random.key(1), (B, T, Hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (B, T, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (B, T, Hkv, D), jnp.float32)
+    o_sq = fp_kernel.flash_prefill_pallas(q, k, v, window=window, bq=32,
+                                          bk=32, interpret=True)
+    for c0 in range(0, T, C):
+        c1 = min(c0 + C, T)
+        kz = k.at[:, c1:].set(0.0)       # scratch rows not yet streamed
+        vz = v.at[:, c1:].set(0.0)
+        o_ch = fp_kernel.flash_prefill_chunk_pallas(
+            q[:, c0:c1], kz, vz, jnp.asarray([c0], jnp.int32),
+            window=window, bq=8, bk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ch),
+                                   np.asarray(o_sq[:, c0:c1]), atol=1e-5,
+                                   err_msg=f"chunk@{c0}")

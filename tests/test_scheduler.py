@@ -77,6 +77,62 @@ def test_scheduler_occupancy_accounting():
     assert sched.occupancy == pytest.approx(0.5)
 
 
+def test_scheduler_chunked_admission_interleaves_resident_decode():
+    """PREFILLING lifecycle (fake clock): while slot 1 streams its
+    prompt chunks, the resident slot 0 keeps recording tokens — and the
+    admitted request's TTFT clocks at its *real* first token, after the
+    whole chunked prefill."""
+    clock = _FakeClock()
+    sched = Scheduler((16,), n_slots=2, clock=clock)
+    sched.submit(_req(16, max_new=8))
+    sched.submit(_req(16, max_new=2))
+    sched.admit_next(0)
+    sched.record_token(0, 1)                         # slot 0 resident
+
+    req = sched.begin_prefill(1)                     # chunked admission
+    assert req is not None
+    assert sched.prefilling_slots() == [1]
+    assert sched.active_slots() == [0]               # not active yet
+    t_prefill_start = clock.t
+    with pytest.raises(ValueError):
+        sched.record_token(1, 5)                     # no tokens mid-prefill
+    resident_times = []
+    for tok in (2, 3, 4):                            # 3 chunks stream...
+        sched.note_decode_step()
+        sched.record_token(0, tok)                   # ...decode continues
+        resident_times.append(clock.t)
+    sched.finish_prefill(1)
+    assert sched.prefilling_slots() == []
+    assert sched.record_token(1, 9) is None          # first real token
+    for t in (5, 6, 7, 8):
+        sched.record_token(0, t)
+    assert sched.record_token(1, 9) is not None      # max_new=4? no: 2nd
+    res1 = sched.retire(1, "length")
+    res0 = sched.retire(0, "length")
+    # resident tokens were recorded strictly inside the admission window
+    assert all(t > t_prefill_start for t in resident_times)
+    assert res0.token_times.shape == (8,)
+    # TTFT spans the whole chunked prefill (submit -> real first token)
+    assert res1.ttft_s > (resident_times[-1] - t_prefill_start)
+    np.testing.assert_array_equal(res0.tokens, [1, 2, 3, 4, 5, 6, 7, 8])
+
+
+def test_scheduler_fail_head_and_failed_retire():
+    clock = _FakeClock()
+    sched = Scheduler((16,), n_slots=1, clock=clock)
+    sched.submit(_req(16, max_new=4))
+    sched.submit(_req(16, max_new=4))
+    res = sched.fail_head()
+    assert res.finish_reason == "failed" and res.slot == -1
+    assert res.n_tokens == 0 and res.ttft_s == 0.0 and res.total_s > 0
+    assert sched.pending == 1
+    # a PREFILLING slot can also be retired as failed (no tokens yet)
+    sched.begin_prefill(0)
+    res2 = sched.retire(0, "failed")
+    assert res2.finish_reason == "failed" and res2.ttft_s == 0.0
+    assert sched.all_done()
+
+
 # ---------------------------------------------------------------------------
 # Per-slot cache surgery
 # ---------------------------------------------------------------------------
