@@ -314,6 +314,30 @@ def _put_rows(arr: Array, slot: Array, val: Array) -> Array:
     return jax.vmap(one)(arr, slot, val)
 
 
+def _put_rows_masked(arr: Array, slot: Array, val: Array,
+                     mask: Optional[Array]) -> Array:
+    """`_put_rows` with a per-sequence gate: row b keeps its old value
+    where ``mask[b]`` is False. The gate stays O(row) — the old row is
+    gathered and written back — rather than selecting across the whole
+    array (a masked append must not cost full-cache bandwidth)."""
+    if mask is None:
+        return _put_rows(arr, slot, val)
+
+    def one(a, s, v, m):
+        old = jax.lax.dynamic_slice_in_dim(a, s, 1, axis=0)
+        new = jnp.where(m, v[None].astype(a.dtype), old)
+        return jax.lax.dynamic_update_slice_in_dim(a, new, s, axis=0)
+
+    return jax.vmap(one)(arr, slot, val, mask)
+
+
+def _sel_rows(mask: Optional[Array], new: Array, old: Array) -> Array:
+    """Per-sequence select on small [B]-leading metadata leaves."""
+    if mask is None:
+        return new
+    return jnp.where(mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+
+
 # ---------------------------------------------------------------------------
 # Per-slot cache surgery (continuous batching): one sequence enters or
 # leaves batch position `slot_idx` of a live stacked cache without
@@ -390,21 +414,25 @@ def reset_slot(stacked: LayerKV, slot_idx, *, batch_axis: int = 1) -> LayerKV:
 
 def append_token_dense(
     lc: LayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
-    key: Optional[Array] = None,
+    key: Optional[Array] = None, mask: Optional[Array] = None,
 ) -> LayerKV:
-    """k_new/v_new: [B, H, D] (post-RoPE). Fixed-budget eviction append."""
+    """k_new/v_new: [B, H, D] (post-RoPE). Fixed-budget eviction append.
+    mask: optional [B] bool — rows where it is False are left untouched
+    (ragged multi-token appends: speculative drafts, per-row segment
+    tails)."""
     S = lc.k.shape[1]
     cap = jnp.minimum(lc.budget, S)
     full = lc.length >= cap
     victim = select_victim(lc, spec, key)
     slot = jnp.where(full, victim, lc.length)
     return lc._replace(
-        k=_put_rows(lc.k, slot, k_new.astype(lc.k.dtype)),
-        v=_put_rows(lc.v, slot, v_new.astype(lc.v.dtype)),
-        scores=_put_rows(lc.scores, slot, jnp.zeros(lc.scores.shape[:1])),
-        slot_pos=_put_rows(lc.slot_pos, slot, lc.pos),
-        length=jnp.minimum(lc.length + 1, cap),
-        pos=lc.pos + 1,
+        k=_put_rows_masked(lc.k, slot, k_new.astype(lc.k.dtype), mask),
+        v=_put_rows_masked(lc.v, slot, v_new.astype(lc.v.dtype), mask),
+        scores=_put_rows_masked(lc.scores, slot,
+                                jnp.zeros(lc.scores.shape[:1]), mask),
+        slot_pos=_put_rows_masked(lc.slot_pos, slot, lc.pos, mask),
+        length=_sel_rows(mask, jnp.minimum(lc.length + 1, cap), lc.length),
+        pos=_sel_rows(mask, lc.pos + 1, lc.pos),
     )
 
 
@@ -453,7 +481,7 @@ def plan_group_flush(lc, spec: CacheSpec, S: int):
 
 def append_token_quantized(
     lc: LayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
-    key: Optional[Array] = None,
+    key: Optional[Array] = None, mask: Optional[Array] = None,
 ) -> LayerKV:
     """Append to the fp residual ring; when it fills (every `window` steps)
     quantize the ring as one per-channel group (KIVI) and flush it into the
@@ -493,8 +521,12 @@ def append_token_quantized(
     # would stall a full ring until its neighbours catch up (and the next
     # append would clamp out of bounds, corrupting the newest ring slot).
     # Flush exactly the rows whose ring is full; skip the work entirely
-    # when none is (the common wave-lockstep / mid-window case).
+    # when none is (the common wave-lockstep / mid-window case). A
+    # masked-out row must not flush either — its append never happens,
+    # so neither do the append's side effects.
     need = lc.rlen >= W                                   # [B]
+    if mask is not None:
+        need = need & mask
 
     def flush_rows(lc: LayerKV) -> LayerKV:
         flushed = flush(lc)
@@ -505,32 +537,34 @@ def append_token_quantized(
         return lc._replace(**upd)
 
     lc = jax.lax.cond(jnp.any(need), flush_rows, lambda c: c, lc)
-    # ring append at rlen
-    lc = lc._replace(
-        rk=_put_rows(lc.rk, lc.rlen, k_new.astype(lc.rk.dtype)),
-        rv=_put_rows(lc.rv, lc.rlen, v_new.astype(lc.rv.dtype)),
-        r_scores=_put_rows(lc.r_scores, lc.rlen,
-                           jnp.zeros(lc.r_scores.shape[:1])),
-        rlen=lc.rlen + 1,
-        pos=lc.pos + 1,
+    # ring append at rlen (row-gated by mask: untouched rows keep their
+    # ring tail and counters)
+    return lc._replace(
+        rk=_put_rows_masked(lc.rk, lc.rlen, k_new.astype(lc.rk.dtype), mask),
+        rv=_put_rows_masked(lc.rv, lc.rlen, v_new.astype(lc.rv.dtype), mask),
+        r_scores=_put_rows_masked(lc.r_scores, lc.rlen,
+                                  jnp.zeros(lc.r_scores.shape[:1]), mask),
+        rlen=_sel_rows(mask, lc.rlen + 1, lc.rlen),
+        pos=_sel_rows(mask, lc.pos + 1, lc.pos),
     )
-    return lc
 
 
 def append_token(lc, spec: CacheSpec, k_new: Array, v_new: Array,
-                 key: Optional[Array] = None):
+                 key: Optional[Array] = None, mask: Optional[Array] = None):
     if not isinstance(lc, LayerKV):
         # paged store (core/paging.py): same eviction/flush semantics,
         # writes routed through the block table
         from repro.core import paging
-        return paging.append_token_paged(lc, spec, k_new, v_new, key=key)
+        return paging.append_token_paged(lc, spec, k_new, v_new, key=key,
+                                         mask=mask)
     if spec.quantized:
-        return append_token_quantized(lc, spec, k_new, v_new, key)
-    return append_token_dense(lc, spec, k_new, v_new, key)
+        return append_token_quantized(lc, spec, k_new, v_new, key, mask)
+    return append_token_dense(lc, spec, k_new, v_new, key, mask)
 
 
 def append_segment(lc, spec: CacheSpec, k_seg: Array, v_seg: Array,
-                   key: Optional[Array] = None):
+                   key: Optional[Array] = None,
+                   valid_len: Optional[Array] = None):
     """Append `n` tokens in order: k_seg/v_seg [B, n, H, D] (post-RoPE).
 
     The multi-token generalization of `append_token` — one call per
@@ -543,6 +577,11 @@ def append_segment(lc, spec: CacheSpec, k_seg: Array, v_seg: Array,
     `LayerKV` and `paging.PagedLayerKV` ride through `append_token`'s
     dispatch (segment writes scatter through the block table there).
 
+    `valid_len`: optional [B] int32 ragged lengths — row b appends only
+    its first `valid_len[b]` tokens (speculative verify segments differ
+    per slot; inactive slots pass 0). Bit-equal per row to appending
+    that row's prefix alone.
+
     `key` is split once per token (policy noise, e.g. NACL), matching a
     caller that splits its own key per step."""
     n = k_seg.shape[1]
@@ -552,14 +591,65 @@ def append_segment(lc, spec: CacheSpec, k_seg: Array, v_seg: Array,
             else jnp.zeros((n, 0), jnp.uint32))
 
     def body(c, xs):
-        k1, v1, kk = xs
+        k1, v1, kk, t = xs
+        m = (t < valid_len) if valid_len is not None else None
         return append_token(c, spec, k1, v1,
-                            key=kk if key is not None else None), None
+                            key=kk if key is not None else None,
+                            mask=m), None
 
     lc, _ = jax.lax.scan(
         body, lc, (k_seg.transpose(1, 0, 2, 3), v_seg.transpose(1, 0, 2, 3),
-                   keys))
+                   keys, jnp.arange(n)))
     return lc
+
+
+# ---------------------------------------------------------------------------
+# Speculative rollback: un-append the most recent tokens
+# ---------------------------------------------------------------------------
+
+
+def truncate_rows(lc, spec: CacheSpec, n_drop: Array):
+    """Un-append the `n_drop[b]` most recently appended tokens of row b
+    (rejected speculative drafts). n_drop: [B] int32, 0 = keep row as is.
+
+    The rollback contract (enforced by the speculative engine's per-slot
+    depth cap, `serving.speculative`): the appends being undone must not
+    have crossed an eviction or a quantized group-flush boundary —
+
+      * dense stores: the rolled-back appends landed on *fresh* slots
+        (`length < cap` throughout), so rollback is a length/pos
+        decrement plus clearing the dropped rows' metadata (slot_pos ->
+        -1, scores -> 0 — stale score mass left behind would bias the
+        next `select_victim` toward/away from a row that no longer holds
+        that token);
+      * quantized stores: the rolled-back appends live in the fp
+        residual ring (`rlen + n <= window`, no flush fired), so
+        rollback is an rlen/pos decrement — ring rows beyond `rlen` are
+        masked by the validity bias and fully rewritten before the next
+        flush can quantize them, so their stale bytes are unobservable.
+
+    K/V bytes of dropped dense rows are left in place (masked by
+    `slot_pos`/`length` exactly like a `reset_slot`'s zeros would be).
+    Works on both stores: `LayerKV` and `paging.PagedLayerKV` share the
+    metadata fields this touches (pool bytes of dropped paged rows are
+    unreachable the same way; the engine returns no-longer-covered
+    blocks to the free list host-side)."""
+    n_drop = jnp.maximum(n_drop, 0)
+    if spec.quantized:
+        return lc._replace(rlen=lc.rlen - n_drop, pos=lc.pos - n_drop)
+    # leaves may carry leading layer-stacking dims ([..., B] metadata,
+    # [..., B, S] per-slot rows): broadcast against the trailing axes so
+    # one call serves a per-layer piece and a whole stacked cache alike
+    S = lc.scores.shape[-1]
+    idx = jnp.arange(S)
+    new_len = lc.length - n_drop
+    dropped = (idx >= new_len[..., None]) & (idx < lc.length[..., None])
+    return lc._replace(
+        scores=jnp.where(dropped, 0.0, lc.scores),
+        slot_pos=jnp.where(dropped, -1, lc.slot_pos),
+        length=new_len,
+        pos=lc.pos - n_drop,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -569,9 +659,17 @@ def append_segment(lc, spec: CacheSpec, k_seg: Array, v_seg: Array,
 
 def accumulate_scores(
     lc: LayerKV, spec: CacheSpec, attn_mass: Array, key: Optional[Array] = None,
+    gate: Optional[Array] = None,
 ) -> LayerKV:
     """attn_mass: [B, S+W] — this step's attention probability mass per slot
-    (mean over query heads), aligned with `materialize` ordering."""
+    (mean over query heads), aligned with `materialize` ordering.
+
+    gate: optional [B] bool — rows where it is False accumulate nothing
+    (speculative verify defers accumulation until acceptance is known,
+    then applies only the accepted queries' masses; adding an exact 0.0
+    keeps the float association chain identical to a row that never saw
+    the step). Applied *after* any policy transform, so a gated-out row
+    is a true no-op even for keyformer's non-additive scoring."""
     if not spec.track_scores():
         return lc
     S = lc.scores.shape[1]          # main-store length (dense or paged)
@@ -581,6 +679,9 @@ def accumulate_scores(
         main = jax.nn.softmax(
             (jnp.log(jnp.maximum(main, 1e-9)) + g) / spec.keyformer_tau, axis=-1
         )
+    if gate is not None:
+        main = jnp.where(gate[:, None], main, 0.0)
+        resid = jnp.where(gate[:, None], resid, 0.0)
     lc = lc._replace(scores=lc.scores + main)
     if resid.shape[1] > 0:
         lc = lc._replace(r_scores=lc.r_scores + resid)

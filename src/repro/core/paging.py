@@ -225,13 +225,15 @@ def _scatter_rows(pool: Array, rows: Array, vals: Array) -> Array:
 
 def append_token_paged(
     p: PagedLayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
-    key: Optional[Array] = None,
+    key: Optional[Array] = None, mask: Optional[Array] = None,
 ) -> PagedLayerKV:
     """Paged twin of `cache.append_token`: identical eviction / ring-flush
     semantics (shared planning helpers), K/V writes routed through the
-    block table."""
+    block table. `mask` ([B] bool) gates per row like the dense twin:
+    masked rows' pool writes redirect to the drop row, their metadata is
+    merged back."""
     if spec.quantized:
-        return _append_quantized_paged(p, spec, k_new, v_new, key)
+        return _append_quantized_paged(p, spec, k_new, v_new, key, mask)
     S = p.scores.shape[1]
     nb, bl = p.pk.shape[:2]
     cap = jnp.minimum(p.budget, S)
@@ -239,20 +241,23 @@ def append_token_paged(
     victim = kvcache.select_victim(p, spec, key)
     slot = jnp.where(full, victim, p.length)
     rows = _phys_rows(p.block_tbl, slot, bl, nb)
+    if mask is not None:
+        rows = jnp.where(mask, rows, nb * bl)     # dropped by the scatter
     return p._replace(
         pk=_scatter_rows(p.pk, rows, k_new),
         pv=_scatter_rows(p.pv, rows, v_new),
-        scores=kvcache._put_rows(p.scores, slot,
-                                 jnp.zeros(p.scores.shape[:1])),
-        slot_pos=kvcache._put_rows(p.slot_pos, slot, p.pos),
-        length=jnp.minimum(p.length + 1, cap),
-        pos=p.pos + 1,
+        scores=kvcache._put_rows_masked(p.scores, slot,
+                                        jnp.zeros(p.scores.shape[:1]), mask),
+        slot_pos=kvcache._put_rows_masked(p.slot_pos, slot, p.pos, mask),
+        length=kvcache._sel_rows(mask, jnp.minimum(p.length + 1, cap),
+                                 p.length),
+        pos=kvcache._sel_rows(mask, p.pos + 1, p.pos),
     )
 
 
 def _append_quantized_paged(
     p: PagedLayerKV, spec: CacheSpec, k_new: Array, v_new: Array,
-    key: Optional[Array] = None,
+    key: Optional[Array] = None, mask: Optional[Array] = None,
 ) -> PagedLayerKV:
     W, G = spec.window, spec.group
     assert W == G and W > 0
@@ -261,6 +266,8 @@ def _append_quantized_paged(
     assert bl == G, "quantized pools flush one block per group"
     n_groups = S // G
     need = p.rlen >= W                                    # [B]
+    if mask is not None:
+        need = need & mask      # a masked row's append (and flush) never runs
 
     def flush_rows(p: PagedLayerKV) -> PagedLayerKV:
         gslot, cap_groups, kq, vq, new_pos = kvcache.plan_group_flush(
@@ -302,12 +309,15 @@ def _append_quantized_paged(
 
     p = jax.lax.cond(jnp.any(need), flush_rows, lambda c: c, p)
     return p._replace(
-        rk=kvcache._put_rows(p.rk, p.rlen, k_new.astype(p.rk.dtype)),
-        rv=kvcache._put_rows(p.rv, p.rlen, v_new.astype(p.rv.dtype)),
-        r_scores=kvcache._put_rows(p.r_scores, p.rlen,
-                                   jnp.zeros(p.r_scores.shape[:1])),
-        rlen=p.rlen + 1,
-        pos=p.pos + 1,
+        rk=kvcache._put_rows_masked(p.rk, p.rlen,
+                                    k_new.astype(p.rk.dtype), mask),
+        rv=kvcache._put_rows_masked(p.rv, p.rlen,
+                                    v_new.astype(p.rv.dtype), mask),
+        r_scores=kvcache._put_rows_masked(p.r_scores, p.rlen,
+                                          jnp.zeros(p.r_scores.shape[:1]),
+                                          mask),
+        rlen=kvcache._sel_rows(mask, p.rlen + 1, p.rlen),
+        pos=kvcache._sel_rows(mask, p.pos + 1, p.pos),
     )
 
 
@@ -465,6 +475,51 @@ def request_blocks(spec: CacheSpec, S: int, prompt_len: int, max_new: int,
         G = spec.group
         rows = -(-rows // G) * G + G
     return blocks_for_len(min(S, rows), block_len)
+
+
+# ---------------------------------------------------------------------------
+# Lazy decode-block growth (ROADMAP follow-up, shipped with speculative
+# decoding): a slot's table starts covering only its *prompt* rows; the
+# engine grants further blocks as `pos` crosses block boundaries, and a
+# speculative rollback that drops below a boundary returns the block to
+# the free list. These two ops are the device half of that protocol —
+# the allocator and the row-coverage arithmetic stay host-side (the
+# engine's cache mirror knows every append/truncate it caused, so no
+# device sync is needed to decide a grant).
+# ---------------------------------------------------------------------------
+
+
+def write_block_table(stacked: PagedLayerKV, slot_idx, start, ids: Array, *,
+                      batch_axis: int = 1) -> PagedLayerKV:
+    """Write `ids` ([k] int32 pool block ids) into table row `slot_idx`
+    at entry `start` (both traced: one compile per grant *size*, reused
+    across slots and offsets). Layer-replicated tables get the same ids
+    in every copy, preserving the one-id-space-per-allocation invariant
+    of `insert_request_paged`."""
+    tbl = stacked.block_tbl
+    n_max = tbl.shape[-1]
+    row = jax.lax.dynamic_index_in_dim(tbl, slot_idx, axis=batch_axis,
+                                       keepdims=True)      # [..., 1, n_max]
+    src = jnp.broadcast_to(ids.astype(tbl.dtype),
+                           (*row.shape[:-1], ids.shape[0]))
+    row = jax.lax.dynamic_update_slice_in_dim(row, src, start, axis=-1)
+    return stacked._replace(
+        block_tbl=kvcache._scatter_batch(tbl, row, slot_idx, batch_axis))
+
+
+def clear_block_table_from(stacked: PagedLayerKV, slot_idx, start, *,
+                           batch_axis: int = 1) -> PagedLayerKV:
+    """Unmap table entries >= `start` of row `slot_idx` (speculative
+    rollback released those blocks host-side; the table must stop
+    routing this slot's rows into them before the free list can re-grant
+    the ids to another slot)."""
+    tbl = stacked.block_tbl
+    n_max = tbl.shape[-1]
+    row = jax.lax.dynamic_index_in_dim(tbl, slot_idx, axis=batch_axis,
+                                       keepdims=True)
+    row = jnp.where(jnp.arange(n_max) >= start, -1, row)
+    return stacked._replace(
+        block_tbl=kvcache._scatter_batch(tbl, row, slot_idx, batch_axis))
 
 
 # ---------------------------------------------------------------------------

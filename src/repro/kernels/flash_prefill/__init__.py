@@ -1,4 +1,5 @@
 from repro.kernels.flash_prefill.ops import (  # noqa: F401
     flash_attention,
     flash_attention_chunk,
+    flash_verify,
 )

@@ -117,6 +117,96 @@ def _chunk_kernel(off_ref, q_ref, k_ref, v_ref, out_ref, m_scr, l_scr,
                          ).astype(out_ref.dtype)
 
 
+def _verify_kernel(q_ref, k_ref, v_ref, kvp_ref, bias_ref, qp_ref, out_ref,
+                   m_scr, l_scr, acc_scr, *, bq: int, bk: int, window: int,
+                   scale: float):
+    """Speculative-verify variant of the chunk kernel: the query block is
+    one speculated segment (last committed token + drafts, already
+    appended to the cache), the key axis is the *materialized cache view*
+    [main store | residual ring] — rows live at arbitrary absolute
+    positions (`kvp_ref`) with a validity bias (`bias_ref`), unlike the
+    prefill kernels' implicit arange. Causality is therefore a gather of
+    explicit positions: key row s is visible to query row t iff
+    ``kv_pos[s] <= q_pos[t]`` (and within the sliding window), which
+    masks both empty slots (bias) and the segment's own future drafts
+    (position test) — the same mask `nn.attention.verify_attention`
+    builds, run as one online-softmax pass per query block."""
+    ik = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    qp = qp_ref[0]                                 # [bq] int32
+    kvp = kvp_ref[0]                               # [bk] int32
+    bias = bias_ref[0]                             # [bk] f32
+    s = (q @ k.T) * scale + bias[None, :]          # [bq, bk]
+    ok = kvp[None, :] <= qp[:, None]
+    if window > 0:
+        ok = jnp.logical_and(ok, kvp[None, :] > qp[:, None] - window)
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        out_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def flash_verify_pallas(q, k, v, kv_pos, bias, q_pos, *, window: int = 0,
+                        bk: int = 512, interpret: bool = False):
+    """q: [B, L, Hq, D] (one speculated segment, L small — a single query
+    block); k, v: [B, Tk, Hkv, D] materialized cache view; kv_pos: [B, Tk]
+    int32 absolute positions (-1 = empty); bias: [B, Tk] f32 additive
+    validity; q_pos: [B, L] int32 (pad rows use a large negative position
+    so every key is masked). Returns out [B, L, Hq, D]."""
+    B, L, Hq, D = q.shape
+    Tk = k.shape[1]
+    Hkv = k.shape[2]
+    Gq = Hq // Hkv
+    bk = min(bk, Tk)
+    assert Tk % bk == 0, (Tk, bk)
+    qh = q.transpose(0, 2, 1, 3)                   # [B, Hq, L, D]
+    kh = k.transpose(0, 2, 1, 3)                   # [B, Hkv, Tk, D]
+    vh = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, bq=L, bk=bk, window=window,
+                          scale=1.0 / math.sqrt(D)),
+        grid=(B, Hq, Tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h // Gq, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h // Gq, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, L), lambda b, h, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, L, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((L, 1), jnp.float32),
+            pltpu.VMEM((L, 1), jnp.float32),
+            pltpu.VMEM((L, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, kv_pos.astype(jnp.int32), bias.astype(jnp.float32),
+      q_pos.astype(jnp.int32))
+    return out.transpose(0, 2, 1, 3)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
                                              "interpret"))
 def flash_prefill_chunk_pallas(q, k, v, q_offset, *, window: int = 0,

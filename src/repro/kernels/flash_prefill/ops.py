@@ -38,4 +38,28 @@ def flash_attention_chunk(q, k, v, *, q_offset, window: int = 0,
         interpret=interpret)
 
 
+def flash_verify(q, k, v, kv_pos, bias, q_pos, *, window: int = 0,
+                 bk: int = 512, interpret: Optional[bool] = None):
+    """Speculative-verify attention: q is one speculated segment
+    [B, L, Hq, D] (already appended to the cache), k/v the materialized
+    cache view [B, Tk, Hkv, D] with explicit absolute positions `kv_pos`
+    [B, Tk] and additive validity `bias` [B, Tk]; q_pos [B, L]. The
+    segment is padded up to a sublane multiple with an impossible query
+    position (every key masked; padded rows are sliced off)."""
+    import jax.numpy as jnp
+    interpret = resolve_interpret(interpret)
+    L, Tk = q.shape[1], k.shape[1]
+    pad = (-L) % 8
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)),
+                        constant_values=-(2 ** 30))
+    out = kernel.flash_verify_pallas(q, k, v, kv_pos, bias, q_pos,
+                                     window=window,
+                                     bk=pick_block(Tk, 1, bk),
+                                     interpret=interpret)
+    return out[:, :L]
+
+
 flash_attention_ref = ref.flash_prefill_ref
+flash_verify_ref = ref.flash_verify_ref

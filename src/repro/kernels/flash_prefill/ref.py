@@ -9,6 +9,24 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def flash_verify_ref(q, k, v, kv_pos, bias, q_pos, *, window: int = 0):
+    """Oracle for flash_verify: explicit kv positions + validity bias
+    (the cache view has no arange structure), causal by position."""
+    B, L, Hq, D = q.shape
+    Hkv = k.shape[2]
+    Gq = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, L, Hkv, Gq, D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(D) + bias[:, None, None, None, :]
+    ok = kv_pos[:, None, :] <= q_pos[:, :, None]          # [B, L, Tk]
+    if window > 0:
+        ok = ok & (kv_pos[:, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(B, L, Hq, D).astype(q.dtype)
+
+
 def flash_prefill_ref(q, k, v, *, window: int = 0):
     B, T, Hq, D = q.shape
     Hkv = k.shape[2]

@@ -65,6 +65,34 @@ def main() -> None:
     ap.add_argument("--chunk-len", type=int, default=64,
                     help="prompt tokens per prefill segment (snapped "
                          "down to the mass-accumulation group)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding (--continuous only): "
+                         "the same weights draft against a cheap cache "
+                         "view, one rectangular verify commits accepted "
+                         "tokens and rolls rejects back; greedy streams "
+                         "are bit-identical to non-speculative decode")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="max draft tokens per verify step (per-slot "
+                         "depth is capped to the cache's rollback "
+                         "headroom)")
+    ap.add_argument("--draft-policy", default="window:64",
+                    help="drafter cache view: window:N (sliding-window "
+                         "attention over an uncompressed store), "
+                         "kivi2[:budget[:window]] / kivi4 / int8 "
+                         "(quantized ring), or same (target clone — "
+                         "acceptance ceiling)")
+    ap.add_argument("--block-growth", choices=("eager", "lazy"),
+                    default="eager",
+                    help="paged decode-block reservation: eager reserves "
+                         "a request's full budgeted length at admission; "
+                         "lazy grants blocks as pos crosses block "
+                         "boundaries (higher seqs/GB; a starved slot "
+                         "retires 'oom')")
+    ap.add_argument("--admission-order", choices=("fifo", "shortest-prompt"),
+                    default="fifo",
+                    help="queue order for admissions: shortest-prompt "
+                         "lets short prompts jump long ones when "
+                         "resident latency budgets are tight")
     args = ap.parse_args()
     if args.paged and not args.continuous:
         ap.error("--paged requires --continuous (the wave path decodes "
@@ -72,6 +100,11 @@ def main() -> None:
     if args.chunked_prefill and not args.continuous:
         ap.error("--chunked-prefill requires --continuous (wave prefills "
                  "have no resident decode to stall)")
+    if args.speculative and not args.continuous:
+        ap.error("--speculative requires --continuous (the draft/verify "
+                 "loop lives in the continuous engine)")
+    if args.block_growth == "lazy" and not args.paged:
+        ap.error("--block-growth lazy requires --paged")
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg = get_config(args.arch)
@@ -90,7 +123,11 @@ def main() -> None:
                      block_len=args.block_len,
                      pool_blocks=args.pool_blocks or None,
                      chunked_prefill=args.chunked_prefill,
-                     chunk_len=args.chunk_len)
+                     chunk_len=args.chunk_len,
+                     speculative=args.speculative, gamma=args.gamma,
+                     draft_policy=args.draft_policy,
+                     block_growth=args.block_growth,
+                     admission_order=args.admission_order)
         eos = args.eos_id if args.eos_id >= 0 else None
         reqs = [
             Request(
@@ -115,6 +152,8 @@ def main() -> None:
               f"decode_tok/s={res.decode_tokens_per_s:.1f} "
               f"occupancy={res.occupancy:.2f} "
               f"ttft_mean_s={res.ttft_mean_s:.3f}")
+        if res.spec is not None:
+            print(res.spec.describe())
         print(f"compression_ratio={res.compression_ratio:.1f}x "
               f"(logical {res.cache_logical_bytes / 2**20:.1f} MiB vs "
               f"full {res.full_cache_bytes / 2**20:.1f} MiB; resident "

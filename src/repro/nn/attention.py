@@ -308,3 +308,95 @@ def decode_attention(
         q_positions=q_pos[:, None], return_mass=True,
     )
     return out, mass
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify: a rectangular segment of queries over the cache
+# ---------------------------------------------------------------------------
+#
+# The draft/verify loop (serving/speculative.py) appends the whole
+# speculated segment — the last committed token plus the drafts — via
+# `cache.append_segment`, then scores every segment query in ONE pass
+# over the cache instead of one decode step per token. Exactness
+# argument (the spec-on ≡ spec-off token-equality contract):
+#
+#   * the speculative engine caps the segment so no eviction and no
+#     quantized group flush fires for the *draft* rows (the committed
+#     first token may evict/flush — it is never rolled back), so the
+#     cache layout after `append_segment` equals the layout sequential
+#     decode would see at every sub-step, with the future drafts' rows
+#     additionally present;
+#   * those future rows are masked per query row by the causal
+#     position test below — a masked slot contributes an exact 0.0 to
+#     the softmax (max-subtracted exp underflow), so each query row's
+#     output and per-key mass are bit-identical to the single-token
+#     `decode_attention` it replaces (row-stability of the shared
+#     `_attend_block`, the same property the chunked-prefill contract
+#     rests on).
+
+
+def verify_attention(
+    q: Array, lc: LayerKV, spec: CacheSpec, *, q_pos: Array,
+    window: int = 0, dtype=jnp.bfloat16,
+    use_kernels: Optional[bool] = None, interpret: Optional[bool] = None,
+):
+    """q: [B, L, Hq, D] rotated at absolute positions `q_pos` [B, L];
+    the segment's K/V are already appended (append-first convention,
+    rows beyond a slot's ragged segment length simply carry stale
+    positions the causal test masks).
+
+    Returns (out [B, L, Hq, D], row_mass [B, L, S+W]) — per-query-row
+    attention mass aligned with `cache.materialize` ordering, NOT summed
+    over rows: the caller accumulates only the accepted rows' masses
+    once the draft acceptance length is known.
+    """
+    B, L, Hq, D = q.shape
+    S = lc.scores.shape[1]
+    W = lc.rk.shape[1]
+    ring_pos = (lc.pos[:, None] - lc.rlen[:, None] + jnp.arange(W)[None])
+    # Causal-test positions. Main-store rows carry their true absolute
+    # position in `slot_pos`. Ring rows differ by store: a *quantized*
+    # ring is the live tail (it holds the segment's own draft rows —
+    # its `pos - rlen + arange` labels are true positions and the causal
+    # test must apply), while a *dense* ring is frozen at prefill (it
+    # holds prefix tokens whose labels drift as `pos` advances — decode
+    # runs causal=False over it, so every ring row must stay visible:
+    # an impossible-low label keeps the test vacuously true).
+    ring_causal = (ring_pos.astype(jnp.int32) if spec.quantized
+                   else jnp.full((B, W), -(2 ** 30), jnp.int32))
+    causal_pos = (jnp.concatenate([lc.slot_pos, ring_causal], axis=1)
+                  if W else lc.slot_pos)
+    bias = kvcache.validity_bias(lc)                       # [B, S+W]
+
+    if (resolve_use_kernels(use_kernels) and not spec.track_scores()
+            and (window == 0 or spec.quantized)):
+        # same dispatch rule as flash prefill: policies that never read
+        # the mass statistic take the Pallas segment×cache kernel over
+        # the materialized view; mass is reported as zeros there. (A
+        # sliding-window model over a dense frozen ring needs two
+        # position sets — that combination stays on the oracle.)
+        from repro.kernels.flash_prefill import ops as fp_ops
+        k, v = kvcache.materialize_kv(lc, spec, dtype)
+        out = fp_ops.flash_verify(q, k, v, causal_pos, bias, q_pos,
+                                  window=window, interpret=interpret)
+        return out.astype(dtype), jnp.zeros((B, L, S + W), jnp.float32)
+
+    # additive per-row bias: validity + causal-by-absolute-position
+    # (+ sliding window, which uses decode_attention's drifting ring
+    # labels so the two paths mask identically). Adding an exact 0.0
+    # where a key is visible keeps the last row's bias bit-identical to
+    # `decode_attention`'s.
+    ok = causal_pos[:, None, :] <= q_pos[:, :, None]       # [B, L, S+W]
+    if window > 0:
+        win_pos = (jnp.concatenate(
+            [lc.slot_pos, ring_pos.astype(jnp.int32)], axis=1)
+            if W else lc.slot_pos)
+        ok &= win_pos[:, None, :] > (q_pos[:, :, None] - window)
+    full_bias = bias[:, None, :] + jnp.where(ok, 0.0, NEG_INF)
+
+    k, v = kvcache.materialize_kv(lc, spec, dtype)
+    Hkv = k.shape[2]
+    qg = q.reshape(B, L, Hkv, Hq // Hkv, D)
+    out, row_mass = _attend_block(qg, k, v, full_bias[:, None, None],
+                                  1.0 / math.sqrt(D))
+    return out.reshape(B, L, Hq, D), row_mass

@@ -224,24 +224,68 @@ def _use_flash_prefill_chunk(cfg, spec: CacheSpec) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Speculative verify: one multi-token segment against the cache
+# ---------------------------------------------------------------------------
+
+
+def block_verify(p: dict, x: Array, cfg, spec: CacheSpec, lc,
+                 valid_len: Array, *, key: Optional[Array] = None):
+    """One attention layer's step of a speculative verify (attn blocks
+    only — `nn.model.verify_step` gates other archs).
+
+    x: [B, L, d_model] — the speculated segment (last committed token +
+    drafts, row b ragged at `valid_len[b]`, padded rows inert). The
+    segment's K/V are appended first (`cache.append_segment`, bit-equal
+    to L sequential `append_token`s per row), then every query row
+    attends over the cache in one rectangular pass
+    (`attn.verify_attention`) — bit-identical per row to the L
+    sequential `block_decode` attends it replaces. Score accumulation is
+    *deferred*: the per-row masses are returned so `verify_step` can
+    apply exactly the accepted rows' masses once acceptance is known.
+
+    Returns (x, appended cache piece, row_mass [B, L, S+W])."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    lc_pos0 = lc.pos
+    B, Lseg, _ = x.shape
+    positions = lc_pos0[:, None] + jnp.arange(Lseg)[None]     # [B, L]
+    q, k_new, v_new = attn.qkv(p["attn"], h, cfg, positions)
+    lc = kvcache.append_segment(lc, spec, k_new, v_new, key=key,
+                                valid_len=valid_len)
+    o, row_mass = attn.verify_attention(
+        q, lc, spec, q_pos=positions, window=cfg.sliding_window,
+        dtype=cfg.dtype, use_kernels=getattr(cfg, "use_kernels", None))
+    x = x + L.linear(p["attn"]["wo"], o.reshape(B, Lseg, -1))
+    x, _ = _ffn(p, x, cfg)
+    return x, lc, row_mass
+
+
+# ---------------------------------------------------------------------------
 # Decode: one token against the cache
 # ---------------------------------------------------------------------------
 
 
 def block_decode(p: dict, x: Array, cfg, kind: str, spec: CacheSpec,
-                 cache_piece, *, key: Optional[Array] = None, memory_kv=None):
-    """x: [B, 1, d_model]. Returns (x, new cache piece)."""
+                 cache_piece, *, key: Optional[Array] = None, memory_kv=None,
+                 append_mask: Optional[Array] = None):
+    """x: [B, 1, d_model]. Returns (x, new cache piece).
+
+    append_mask: optional [B] bool — rows where it is False leave the
+    cache untouched (their attention output is still computed, and
+    discarded by the caller). Used by the speculative drafter, whose
+    per-slot draft depths are ragged."""
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind == "attn":
         lc: LayerKV = cache_piece
         pos = lc.pos[:, None]                                  # [B, 1]
         q, k_new, v_new = attn.qkv(p["attn"], h, cfg, pos)
         # append-first: the new token attends to itself through the cache
-        lc = kvcache.append_token(lc, spec, k_new[:, 0], v_new[:, 0], key=key)
+        lc = kvcache.append_token(lc, spec, k_new[:, 0], v_new[:, 0], key=key,
+                                  mask=append_mask)
         o, mass = attn.decode_attention(
             q, lc, spec, window=cfg.sliding_window, dtype=cfg.dtype,
             q_pos=pos[:, 0], use_kernels=getattr(cfg, "use_kernels", None))
-        lc = kvcache.accumulate_scores(lc, spec, mass, key=key)
+        lc = kvcache.accumulate_scores(lc, spec, mass, key=key,
+                                       gate=append_mask)
         B = x.shape[0]
         x = x + L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
         new_piece = lc

@@ -371,11 +371,19 @@ def prefill_finalize(cfg, st: PrefillState, spec: CacheSpec, *,
 
 
 def decode_step(params, cfg, cache: ModelCache, token: Array,
-                spec: CacheSpec, *, key: Optional[Array] = None):
-    """token: [B, 1] int32. Returns (logits [B, V] f32, new ModelCache)."""
+                spec: CacheSpec, *, key: Optional[Array] = None,
+                append_mask: Optional[Array] = None):
+    """token: [B, 1] int32. Returns (logits [B, V] f32, new ModelCache).
+
+    append_mask: optional [B] bool — rows where it is False leave the
+    cache untouched (ragged speculative drafting; attention-only archs,
+    SSM state cannot be row-gated against its own step)."""
     x = L.embed(params["embed"], token)
     sb, n_sb, kinds = sb_layout(cfg)
     aps, sps = attn_positions(cfg), ssm_positions(cfg)
+    if append_mask is not None and ssm_positions(cfg):
+        raise ValueError("append_mask is attention-only (SSM state "
+                         "advances unconditionally)")
     if key is None:
         key = jax.random.key(0)
     keys = jax.random.split(key, n_sb * max(len(aps), 1)).reshape(
@@ -395,7 +403,8 @@ def decode_step(params, cfg, cache: ModelCache, token: Array,
                 piece = jax.tree.map(lambda t: t[j], a_sl)
                 x, piece = B.block_decode(p_sb[f"sub{i}"], x, cfg, "attn",
                                           spec, piece, key=ks[j],
-                                          memory_kv=mkv)
+                                          memory_kv=mkv,
+                                          append_mask=append_mask)
                 attn_pieces.append(piece)
             else:
                 j = sps.index(i)
@@ -417,6 +426,114 @@ def decode_step(params, cfg, cache: ModelCache, token: Array,
     logits = _logits(params, cfg, x)[:, 0]
     return logits, ModelCache(attn_c, ssm_c, cache.cross_k, cache.cross_v,
                               cache.cross_bias)
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify: score a drafted segment in one forward, commit the
+# accepted prefix, roll the rest back
+# ---------------------------------------------------------------------------
+#
+# One decode step per token is weight-bandwidth-bound: every step moves
+# all parameters for one token per slot. Self-speculative decoding
+# drafts gamma tokens against a *cheap cache view* of the same weights
+# (serving/speculative.py), then this function scores the whole segment
+# — last committed token + drafts — in ONE forward over the real
+# budgeted cache: the segment's K/V are appended (`append_segment`,
+# bit-equal to sequential appends), every row attends rectangularly
+# (`verify_attention`, bit-identical per row to sequential decode), and
+# greedy acceptance reduces rejection sampling to match-and-truncate.
+# Rejected rows are un-appended (`cache.truncate_rows`) and only the
+# accepted queries' attention masses are accumulated — in sequential
+# order with exact-zero padding, so the score state (H2O et al.) is
+# bit-identical to the sequential decode it replaces.
+#
+# Attention-only decoder archs (same gate as chunked prefill): SSM
+# state cannot be rolled back row-wise, and per-batch MoE capacity
+# couples segment tokens.
+
+
+def _check_speculable(cfg) -> None:
+    try:
+        _check_chunkable(cfg)
+    except ValueError as e:
+        raise ValueError(f"speculative decoding: {e}") from None
+
+
+def verify_step(params, cfg, cache: ModelCache, tokens: Array,
+                valid_len: Array, spec: CacheSpec, *,
+                key: Optional[Array] = None):
+    """tokens: [B, L] int32 — per row: [last committed token, draft_1 ..
+    draft_{gamma_b}, padding]; valid_len: [B] int32 segment lengths
+    (1 + gamma_b; 0 for slots that must not step at all).
+
+    Returns (y [B, L] int32, accepted [B] int32, new ModelCache):
+    `y[b, t]` is the greedy target token after processing row b's tokens
+    0..t; `accepted[b]` counts the leading drafts that matched (so
+    tokens `y[b, 0..accepted[b]]` are committed — accepted drafts plus
+    the bonus/correction token). The returned cache has exactly the
+    committed rows appended: acceptance, score accumulation, and ragged
+    rollback all happen inside this one step."""
+    _check_speculable(cfg)
+    x = L.embed(params["embed"], tokens)
+    Lseg = tokens.shape[1]
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps = attn_positions(cfg)
+    assert all(k == "attn" for k, _ in kinds), "gated by _check_speculable"
+    if key is None:
+        key = jax.random.key(0)
+    nA = max(len(aps), 1)
+    keys = jax.random.split(key, n_sb * nA * 2).reshape(n_sb, nA, 2)
+
+    def body(x, xs):
+        p_sb, a_sl, ks = xs
+        pieces, masses = [], []
+        for i in range(sb):
+            j = aps.index(i)
+            piece = jax.tree.map(lambda t: t[j], a_sl)
+            x, piece, rm = B.block_verify(p_sb[f"sub{i}"], x, cfg, spec,
+                                          piece, valid_len, key=ks[j, 0])
+            pieces.append(piece)
+            masses.append(rm)
+        a = jax.tree.map(lambda *xs: jnp.stack(xs), *pieces)
+        return x, (a, jnp.stack(masses))
+
+    x, (attn_c, masses) = jax.lax.scan(
+        body, x, (params["blocks"], cache.attn, keys))
+    logits = _logits(params, cfg, x)                       # [B, L, V]
+    y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # longest accepted draft prefix: draft_i (= tokens[:, i]) must equal
+    # the target's y[:, i-1] for every i up to the cut
+    if Lseg > 1:
+        match = (tokens[:, 1:] == y[:, :-1])
+        valid_draft = jnp.arange(Lseg - 1)[None] < (valid_len[:, None] - 1)
+        accepted = jnp.cumprod((match & valid_draft).astype(jnp.int32),
+                               axis=1).sum(axis=1)
+    else:
+        accepted = jnp.zeros(tokens.shape[0], jnp.int32)
+    n_drop = jnp.maximum(valid_len - 1 - accepted, 0)
+
+    # pass 2 (cheap, no attention): accumulate exactly the accepted
+    # queries' masses in sequential order, then un-append the rejects
+    def commit(carry, xs):
+        a_sl, m_sl, ks = xs
+        pieces = []
+        for j in range(len(aps)):
+            lc = jax.tree.map(lambda t: t[j], a_sl)
+            mj = m_sl[j]                                   # [B, L, S+W]
+
+            def acc_one(lc, t):
+                gate = (t <= accepted) & (t < valid_len)
+                return kvcache.accumulate_scores(
+                    lc, spec, mj[:, t], key=ks[j, 1], gate=gate), None
+
+            lc, _ = jax.lax.scan(acc_one, lc, jnp.arange(Lseg))
+            pieces.append(kvcache.truncate_rows(lc, spec, n_drop))
+        return carry, jax.tree.map(lambda *xs: jnp.stack(xs), *pieces)
+
+    _, attn_c = jax.lax.scan(commit, 0, (attn_c, masses, keys))
+    return y, accepted, ModelCache(attn_c, cache.ssm, cache.cross_k,
+                                   cache.cross_v, cache.cross_bias)
 
 
 # ---------------------------------------------------------------------------

@@ -8,3 +8,9 @@ from repro.serving.scheduler import (  # noqa: F401
     RequestResult,
     Scheduler,
 )
+from repro.serving.speculative import (  # noqa: F401
+    CacheMirror,
+    DraftPolicy,
+    SpecStats,
+    resolve_draft_policy,
+)

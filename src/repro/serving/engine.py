@@ -57,6 +57,7 @@ from repro.core.policy import CompressionPolicy
 from repro.nn import model as M
 from repro.nn.attention import MASS_GROUP
 from repro.serving import sampler as sampler_lib
+from repro.serving import speculative as spec_lib
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.utils import tree_bytes
 
@@ -94,6 +95,7 @@ class ContinuousGenerationResult:
     pool_blocks: int = 0          # paged runs only: reserved pool size,
     pool_block_bytes: int = 0     # bytes one block pins across layers,
     pool_peak_blocks: int = 0     # high-water allocated blocks
+    spec: Optional[spec_lib.SpecStats] = None  # speculative runs only
 
     def tokens_for(self, uid: int) -> np.ndarray:
         for r in self.results:
@@ -143,7 +145,11 @@ class Engine:
                  use_kernels: Optional[bool] = None,
                  paged: bool = False, block_len: int = 16,
                  pool_blocks: Optional[int] = None,
-                 chunked_prefill: bool = False, chunk_len: int = 64):
+                 chunked_prefill: bool = False, chunk_len: int = 64,
+                 block_growth: str = "eager",
+                 admission_order: str = "fifo",
+                 speculative: bool = False, gamma: int = 4,
+                 draft_policy: str = "window:64"):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
         if use_kernels is not None:
@@ -186,6 +192,21 @@ class Engine:
             int(pool_blocks) if (paged and pool_blocks)
             else slots * self.n_max_blocks if paged else 0)
         self.block_allocator: Optional[paging_lib.BlockAllocator] = None
+
+        # --- lazy decode-block growth (paged + continuous only) ---------
+        # Admission reserves only prompt coverage; decode blocks are
+        # granted as `pos` crosses block boundaries (a speculative
+        # rollback below a boundary returns blocks to the free list).
+        # A slot whose growth the pool cannot cover retires "oom" —
+        # admission control only guarantees prompt coverage, so an
+        # over-committed pool surfaces as per-request oom, never as a
+        # corrupted batch.
+        if block_growth not in ("eager", "lazy"):
+            raise ValueError(f"unknown block_growth {block_growth!r}")
+        if block_growth == "lazy" and not paged:
+            raise ValueError("block_growth='lazy' requires paged=True")
+        self.lazy_blocks = block_growth == "lazy"
+        self.admission_order = admission_order
 
         # --- chunked prefill (continuous batching only) -----------------
         # Long-prompt admissions stream in `chunk_len`-token segments
@@ -288,9 +309,89 @@ class Engine:
                 lambda st, lb2, k: M.prefill_finalize(
                     cfg, st, self.spec, layer_budgets=lb2, key=k))
 
+        if self.paged and self.lazy_blocks:
+            # device half of lazy growth/rollback: write freshly granted
+            # ids into a slot's table row / unmap released entries
+            self._grow_tbl = jax.jit(
+                lambda c, slot, j0, ids: M.ModelCache(
+                    paging_lib.write_block_table(c.attn, slot, j0, ids,
+                                                 batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+            self._clear_tbl = jax.jit(
+                lambda c, slot, j0: M.ModelCache(
+                    paging_lib.clear_block_table_from(c.attn, slot, j0,
+                                                      batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+
+        # --- speculative decoding (continuous only) ---------------------
+        # Draft/verify loop in serving/speculative.py: a second cache
+        # over the same weights drafts against a cheap view; the verify
+        # step scores the whole segment against the real cache in one
+        # rectangular forward, committing via append_segment and rolling
+        # rejects back via truncate_rows.
+        self.speculative = bool(speculative)
+        self.gamma = int(gamma)
+        if self.speculative:
+            if gamma < 1:
+                raise ValueError(f"gamma must be >= 1, got {gamma}")
+            if sampler is not sampler_lib.greedy:
+                raise ValueError(
+                    "speculative decoding requires the greedy sampler "
+                    "(acceptance is exact match-and-truncate under argmax)")
+            M._check_speculable(cfg)
+            self.draft = spec_lib.resolve_draft_policy(
+                draft_policy, cfg, self.spec, prompt_len, max_new)
+            dS = self.draft.spec.main_store_len(prompt_len + max_new)
+            self.draft_layer_budgets = np.minimum(
+                budgets_lib.ALLOCATORS["uniform"](
+                    n_attn, self.draft.spec.budget or dS,
+                    multiple=(self.draft.spec.group
+                              if self.draft.spec.quantized else 1)),
+                dS)
+            dcfg, dspec = self.draft.cfg, self.draft.spec
+            self._verify = jax.jit(
+                lambda p, c, toks, vl, k: M.verify_step(
+                    p, cfg, c, toks, vl, self.spec, key=k),
+                donate_argnums=(1,) if dn else ())
+            self._draft_prefill = jax.jit(
+                lambda p, b, lb2, k: M.prefill(p, dcfg, b, dspec,
+                                               layer_budgets=lb2, key=k))
+
+            def _dstep(p, dc, tok, mask, k):
+                logits, dc = M.decode_step(p, dcfg, dc, tok, dspec, key=k,
+                                           append_mask=mask)
+                return jnp.argmax(logits, -1).astype(jnp.int32), dc
+
+            self._draft_decode = jax.jit(
+                _dstep, donate_argnums=(1,) if dn else ())
+            self._insert_draft = jax.jit(
+                lambda dc, pc, slot: M.ModelCache(
+                    kvcache.insert_request(dc.attn, slot, pc.attn,
+                                           batch_axis=2),
+                    dc.ssm, dc.cross_k, dc.cross_v, dc.cross_bias),
+                donate_argnums=(0,) if dn else ())
+            self._reset_draft = jax.jit(
+                lambda dc, slot: M.ModelCache(
+                    kvcache.reset_slot(dc.attn, slot, batch_axis=2),
+                    dc.ssm, dc.cross_k, dc.cross_v, dc.cross_bias),
+                donate_argnums=(0,) if dn else ())
+            self._truncate_draft = jax.jit(
+                lambda dc, m: M.ModelCache(
+                    kvcache.truncate_rows(dc.attn, dspec, m),
+                    dc.ssm, dc.cross_k, dc.cross_v, dc.cross_bias),
+                donate_argnums=(0,) if dn else ())
+
     # ------------------------------------------------------------------
     def _request_blocks(self, req: Request) -> int:
-        """Pool blocks that cover one request's budgeted length."""
+        """Pool blocks an admission must reserve. Eager growth covers
+        the request's whole budgeted length (prompt + decode headroom +
+        quantization slack); lazy growth covers only the prompt — decode
+        blocks are granted as `pos` advances."""
+        if self.lazy_blocks:
+            return paging_lib.request_blocks_prefix(
+                self.spec, self._S_phys, len(req.tokens), self.block_len)
         return paging_lib.request_blocks(
             self.spec, self._S_phys, len(req.tokens), req.max_new,
             self.block_len)
@@ -314,6 +415,10 @@ class Engine:
                 "the wave path decodes straight off the prefill cache "
                 "(dense by construction); build a dense engine for "
                 "generate(), paged applies to generate_continuous()")
+        if self.speculative:
+            raise ValueError(
+                "speculative decoding lives in the continuous engine "
+                "(per-slot draft state); use generate_continuous()")
         n, L = prompts.shape
         assert L == self.prompt_len, (L, self.prompt_len)
         outs = np.zeros((n, self.max_new), np.int32)
@@ -386,6 +491,159 @@ class Engine:
         )
 
     # ------------------------------------------------------------------
+    def _continuous_result(self, sched, cache, *, prefill_s: float,
+                           decode_s: float, decode_tokens: int,
+                           spec_stats=None) -> "ContinuousGenerationResult":
+        """Post-run accounting shared by the plain and speculative
+        continuous loops (bytes, ratios, latency aggregates) — one copy
+        so the spec-vs-plain comparisons the benchmark asserts on can
+        never drift apart."""
+        if self.paged:
+            # real pool usage, not the reserved worst case: bytes of the
+            # blocks the run actually pinned at its high-water mark,
+            # plus the dense metadata/ring leaves
+            per_block = paging_lib.bytes_per_block(cache.attn)
+            meta = tree_bytes(cache) - paging_lib.pool_bytes(cache.attn)
+            peak = self.block_allocator.peak_used
+            phys = meta + peak * per_block
+            pool_stats = dict(pool_blocks=self.pool_blocks,
+                              pool_block_bytes=per_block,
+                              pool_peak_blocks=peak)
+        else:
+            phys = tree_bytes(cache)
+            pool_stats = {}
+        logical = self._logical_bytes_per_seq() * self.slots
+        full = (self.cfg.kv_bytes_per_token() *
+                (self.prompt_len + self.max_new) * self.slots)
+        results = sorted(sched.results, key=lambda r: r.uid)
+        ttfts = [r.ttft_s for r in results if r.finish_reason != "failed"]
+        return ContinuousGenerationResult(
+            results=results,
+            prefill_seconds=prefill_s,
+            decode_seconds=decode_s,
+            decode_steps=sched.decode_steps,
+            decode_tokens=decode_tokens,
+            decode_tokens_per_s=decode_tokens / max(decode_s, 1e-9),
+            occupancy=sched.occupancy,
+            ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
+            cache_physical_bytes=int(phys),
+            cache_logical_bytes=float(logical),
+            full_cache_bytes=float(full),
+            compression_ratio=float(full / max(logical, 1.0)),
+            policy_name=self.policy.name,
+            spec=spec_stats,
+            **pool_stats,
+        )
+
+    # ------------------------------------------------------------------
+    # Chunked admission (shared by the plain continuous loop and the
+    # speculative loop): at most one admission in flight, advanced one
+    # bounded step — a prompt segment, the compress, or the insert —
+    # per decode step, so a long prompt never stalls resident decode.
+    # ------------------------------------------------------------------
+    def _start_chunked_admission(self, sched) -> Optional[_ChunkedAdmission]:
+        """Begin a chunked admission into the first free slot; heads
+        that can never fit the pool fail immediately."""
+        while sched.pending:
+            free = sched.free_slots()
+            if not free:
+                return None
+            req = sched.head_request()
+            total = self._request_blocks(req) if self.paged else 0
+            if self.paged and total > self.pool_blocks:
+                sched.fail_head()
+                continue
+            slot = free[0]
+            sched.begin_prefill(slot)
+            self.key, k1 = jax.random.split(self.key)
+            C = self.chunk_len
+            starts = list(range(0, len(req.tokens), C))
+            return _ChunkedAdmission(
+                slot=slot,
+                st=M.init_prefill_state(self.cfg, len(req.tokens)),
+                segs=[req.tokens[s:s + C] for s in starts],
+                starts=starts, key=k1, total_blocks=total)
+        return None
+
+    def _advance_chunked_admission(self, adm: _ChunkedAdmission, sched,
+                                   cache, lb, *, run_all: bool):
+        """Advance the in-flight admission by one interleave step: a
+        prompt segment, the finalize (compress), or the insert + first-
+        token sample. Finalize and insert are separate steps — each
+        costs work proportional to the prompt/cache, so lumping them
+        (or a segment) together would itself become the resident stall
+        chunked prefill removes. Returns (cache, adm-or-None, first,
+        seconds): `first` is (slot, first_token_device) once the slot
+        goes ACTIVE. `run_all` drains everything back-to-back — used
+        when no resident slot is decoding, so there is nothing to
+        stall."""
+        t0 = time.perf_counter()
+        first = None
+        while adm is not None:
+            i = adm.next_i
+            if i == len(adm.segs):        # compress the scratch
+                adm.pc = self._finalize(adm.st, lb, adm.key)
+                adm.next_i += 1
+                if run_all:
+                    continue
+                break
+            if i == len(adm.segs) + 1:    # insert + first token
+                # the full grant must be in place before the insert
+                # scatters (decode headroom + quantization slack under
+                # eager growth; prompt coverage under lazy)
+                if self.paged and adm.total_blocks > adm.granted:
+                    if not sched.grant_blocks(
+                            adm.slot, adm.total_blocks - adm.granted):
+                        if not sched.active_slots():
+                            # can't happen: total <= pool_blocks and
+                            # nothing else holds blocks — guard so a
+                            # bookkeeping bug can't spin forever
+                            raise RuntimeError(
+                                "chunked admission stalled with no "
+                                "active slots (allocator invariant "
+                                "violated)")
+                        break  # stall until a retire frees blocks
+                    adm.granted = adm.total_blocks
+                tok = self.sampler(adm.last_logits, adm.key)
+                slot = adm.slot
+                if self.paged:
+                    ids = np.full(self.n_max_blocks, -1, np.int32)
+                    got = sched.slot_blocks(slot)
+                    ids[:len(got)] = got
+                    cache = self._insert(cache, adm.pc, jnp.int32(slot),
+                                         jnp.asarray(ids))
+                else:
+                    cache = self._insert(cache, adm.pc, jnp.int32(slot))
+                sched.finish_prefill(slot)
+                first = (slot, tok)
+                adm = None
+                break
+            if self.paged:
+                # chunk-wise grants: pin only the blocks the rows
+                # streamed so far need
+                c1 = adm.starts[i] + len(adm.segs[i])
+                target = min(
+                    adm.total_blocks, paging_lib.request_blocks_prefix(
+                        self.spec, self._S_phys, c1, self.block_len))
+                if target > adm.granted:
+                    if not sched.grant_blocks(adm.slot,
+                                              target - adm.granted):
+                        if not sched.active_slots():
+                            raise RuntimeError(
+                                "chunked admission stalled with no "
+                                "active slots (allocator invariant "
+                                "violated)")
+                        break  # stall until a retire frees blocks
+                    adm.granted = target
+            adm.last_logits, adm.st = self._chunk_step(
+                self.params, adm.st, jnp.asarray(adm.segs[i][None]),
+                jnp.int32(adm.starts[i]))
+            adm.next_i += 1
+            if not run_all:
+                break
+        return cache, adm, first, time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
     # Continuous batching
     # ------------------------------------------------------------------
     def generate_continuous(
@@ -422,15 +680,22 @@ class Engine:
                 raise ValueError(
                     f"chunked prefill needs MASS_GROUP({MASS_GROUP})-"
                     f"aligned prompt buckets, got {bad}")
+        if self.speculative:
+            # draft/verify loop (serving/speculative.py): synchronous
+            # rounds — drafting needs each round's committed tokens
+            return spec_lib.generate_continuous_spec(self, requests,
+                                                     buckets=buckets)
         if self.paged:
             # fresh free list per run (the cache is rebuilt below too);
             # kept on self for post-run inspection (peak usage)
             self.block_allocator = paging_lib.BlockAllocator(self.pool_blocks)
             sched = Scheduler(buckets or self.buckets, self.slots,
                               allocator=self.block_allocator,
-                              block_need=self._request_blocks)
+                              block_need=self._request_blocks,
+                              admission_order=self.admission_order)
         else:
-            sched = Scheduler(buckets or self.buckets, self.slots)
+            sched = Scheduler(buckets or self.buckets, self.slots,
+                              admission_order=self.admission_order)
         for r in requests:
             if not isinstance(r, Request):
                 r = Request(tokens=r, max_new=self.max_new)
@@ -452,6 +717,12 @@ class Engine:
         # slots known to hold the empty-cache state (the init above):
         # admission refusals reset a slot at most once, not per retry
         clean_slots = set(range(self.slots))
+        # lazy block growth: host mirror of per-slot row usage (append/
+        # flush timing depends only on counts, so no device sync needed
+        # to decide a grant)
+        lazy_mirror = (spec_lib.CacheMirror(
+            self.spec, self.layer_budgets, self._S_phys, self.slots)
+            if (self.paged and self.lazy_blocks) else None)
 
         def admit_into(slot_idx: int) -> bool:
             """Fill a free slot from the queue: bucketed batch-1 prefill,
@@ -499,6 +770,8 @@ class Engine:
                 else:
                     cache = self._insert(cache, pc, jnp.int32(slot_idx))
                 clean_slots.discard(slot_idx)
+                if lazy_mirror is not None:
+                    lazy_mirror.admit(slot_idx, len(req.tokens))
                 tok_i = int(jax.device_get(tok)[0])
                 prefill_s += time.perf_counter() - t0
                 next_tok[slot_idx] = tok_i
@@ -507,119 +780,27 @@ class Engine:
                     return True
                 sched.retire(slot_idx, reason)   # 1-token request; refill
 
-        # --- chunked admission (tentpole: long prompts must not stall
-        # resident decode). At most one admission is in flight; the loop
-        # below runs at most one prompt segment of it per decode step.
-        # The scratch (M.PrefillState) is disjoint from the live cache,
-        # so resident slots' rows never see a partial prompt — the
-        # finalize inserts the same compressed cache a monolithic
-        # admission would (bit-identical greedy streams).
+        # --- chunked admission (long prompts must not stall resident
+        # decode): shared machinery on the engine
+        # (`_start_chunked_admission` / `_advance_chunked_admission`,
+        # also driven by the speculative loop); thin wrappers route the
+        # loop's state through it. The scratch (M.PrefillState) is
+        # disjoint from the live cache, so resident slots' rows never
+        # see a partial prompt — the finalize inserts the same
+        # compressed cache a monolithic admission would (bit-identical
+        # greedy streams).
         adm: Optional[_ChunkedAdmission] = None
 
-        def start_admission() -> Optional[_ChunkedAdmission]:
-            """Begin a chunked admission into the first free slot; heads
-            that can never fit the pool fail immediately (as above)."""
-            while sched.pending:
-                free = sched.free_slots()
-                if not free:
-                    return None
-                req = sched.head_request()
-                total = self._request_blocks(req) if self.paged else 0
-                if self.paged and total > self.pool_blocks:
-                    sched.fail_head()
-                    continue
-                slot = free[0]
-                sched.begin_prefill(slot)
-                self.key, k1 = jax.random.split(self.key)
-                C = self.chunk_len
-                starts = list(range(0, len(req.tokens), C))
-                return _ChunkedAdmission(
-                    slot=slot,
-                    st=M.init_prefill_state(self.cfg, len(req.tokens)),
-                    segs=[req.tokens[s:s + C] for s in starts],
-                    starts=starts, key=k1, total_blocks=total)
-            return None
-
         def advance_admission(run_all: bool):
-            """Advance the in-flight admission by one interleave step: a
-            prompt segment, the finalize (compress), or the insert +
-            first-token sample. Finalize and insert are separate steps —
-            each costs work proportional to the prompt/cache, so lumping
-            them (or a segment) together would itself become the
-            resident stall the tentpole removes. Returns
-            (slot, first_token_device) once the slot goes ACTIVE — the
-            token stays on device; the loop fetches and records it
-            alongside the next pending decode tokens (same double-buffer
-            discipline). `run_all` drains everything back-to-back — used
-            when no resident slot is decoding, so there is nothing to
-            stall."""
             nonlocal cache, adm, prefill_s
-            t0 = time.perf_counter()
-            first = None
-            while adm is not None:
-                i = adm.next_i
-                if i == len(adm.segs):        # compress the scratch
-                    adm.pc = self._finalize(adm.st, lb, adm.key)
-                    adm.next_i += 1
-                    if run_all:
-                        continue
-                    break
-                if i == len(adm.segs) + 1:    # insert + first token
-                    # the full grant must be in place before the insert
-                    # scatters (decode headroom + quantization slack)
-                    if self.paged and adm.total_blocks > adm.granted:
-                        if not sched.grant_blocks(
-                                adm.slot, adm.total_blocks - adm.granted):
-                            if not sched.active_slots():
-                                # can't happen: total <= pool_blocks and
-                                # nothing else holds blocks — guard so a
-                                # bookkeeping bug can't spin forever
-                                raise RuntimeError(
-                                    "chunked admission stalled with no "
-                                    "active slots (allocator invariant "
-                                    "violated)")
-                            break  # stall until a retire frees blocks
-                        adm.granted = adm.total_blocks
-                    tok = self.sampler(adm.last_logits, adm.key)
-                    slot = adm.slot
-                    if self.paged:
-                        ids = np.full(self.n_max_blocks, -1, np.int32)
-                        got = sched.slot_blocks(slot)
-                        ids[:len(got)] = got
-                        cache = self._insert(cache, adm.pc, jnp.int32(slot),
-                                             jnp.asarray(ids))
-                    else:
-                        cache = self._insert(cache, adm.pc, jnp.int32(slot))
-                    clean_slots.discard(slot)
-                    sched.finish_prefill(slot)
-                    first = (slot, tok)
-                    adm = None
-                    break
-                if self.paged:
-                    # chunk-wise grants: pin only the blocks the rows
-                    # streamed so far need (first step toward the
-                    # ROADMAP's lazy block growth)
-                    c1 = adm.starts[i] + len(adm.segs[i])
-                    target = min(
-                        adm.total_blocks, paging_lib.request_blocks_prefix(
-                            self.spec, self._S_phys, c1, self.block_len))
-                    if target > adm.granted:
-                        if not sched.grant_blocks(adm.slot,
-                                                  target - adm.granted):
-                            if not sched.active_slots():
-                                raise RuntimeError(
-                                    "chunked admission stalled with no "
-                                    "active slots (allocator invariant "
-                                    "violated)")
-                            break  # stall until a retire frees blocks
-                        adm.granted = target
-                adm.last_logits, adm.st = self._chunk_step(
-                    self.params, adm.st, jnp.asarray(adm.segs[i][None]),
-                    jnp.int32(adm.starts[i]))
-                adm.next_i += 1
-                if not run_all:
-                    break
-            prefill_s += time.perf_counter() - t0
+            cache, adm, first, dt = self._advance_chunked_admission(
+                adm, sched, cache, lb, run_all=run_all)
+            prefill_s += dt
+            if first is not None:
+                clean_slots.discard(first[0])
+                if lazy_mirror is not None:
+                    lazy_mirror.admit(
+                        first[0], len(sched.slot_request(first[0]).tokens))
             return first
 
         if not self.chunked_prefill:
@@ -648,8 +829,58 @@ class Engine:
         prefill_at_loop = prefill_s
         while True:
             if self.chunked_prefill and adm is None:
-                adm = start_admission()
+                adm = self._start_chunked_admission(sched)
             active = sched.active_slots()
+            if lazy_mirror is not None and active:
+                # lazy growth: every slot joining this dispatch must have
+                # table coverage for the row the dispatch appends. A slot
+                # the pool cannot grow retires "oom" (its pending token
+                # is recorded first) — the lazy admission rule only
+                # reserved prompt coverage. Freed blocks may admit queued
+                # work immediately; refilled slots enter the same
+                # worklist so their first append is covered too.
+                worklist = list(active)
+                while worklist:
+                    s = worklist.pop(0)
+                    rows = lazy_mirror.rows_after_feeds(s, 1)
+                    need = paging_lib.request_blocks_prefix(
+                        self.spec, self._S_phys, rows, self.block_len)
+                    have = len(sched.slot_blocks(s))
+                    if need <= have:
+                        continue
+                    if sched.grant_blocks(s, need - have):
+                        ids = sched.slot_blocks(s)[have:]
+                        cache = self._grow_tbl(
+                            cache, jnp.int32(s), jnp.int32(have),
+                            jnp.asarray(ids, jnp.int32))
+                        continue
+                    # record any committed-but-unfetched token for the
+                    # slot before retiring it: a decode token pipelining
+                    # in `pending`, or a chunk-admitted first token
+                    # still riding `first_pending`
+                    reason = None
+                    if pending is not None and s in pending[1]:
+                        ptok, pvalid = pending
+                        decode_tokens += 1
+                        reason = sched.record_token(
+                            s, int(np.asarray(ptok)[s]))
+                        pvalid.remove(s)
+                    elif first_pending is not None and first_pending[0] == s:
+                        reason = sched.record_token(
+                            s, int(jax.device_get(first_pending[1])[0]))
+                        first_pending = None
+                    sched.retire(s, reason or "oom")
+                    cache = self._reset(cache, jnp.int32(s))
+                    clean_slots.add(s)
+                    lazy_mirror.reset(s)
+                    active.remove(s)
+                    if sched.pending and not self.chunked_prefill:
+                        for i in sched.free_slots():
+                            if not sched.pending or not admit_into(i):
+                                break
+                            tok_in = tok_in.at[i].set(int(next_tok[i]))
+                            active.append(i)
+                            worklist.append(i)
             new_pending = None
             if active:
                 self.key, k2 = jax.random.split(self.key)
@@ -658,6 +889,9 @@ class Engine:
                 sched.note_decode_step()
                 new_pending = (tok_dev, list(active))
                 tok_in = tok_dev                # feed N+1 from N, no sync
+                if lazy_mirror is not None:
+                    for s in active:
+                        lazy_mirror.append(s, 1)
             if first_pending is not None:
                 # fetch last iteration's first token (its compute has
                 # drained behind this iteration's dispatch by now)
@@ -727,39 +961,6 @@ class Engine:
             pending = new_pending
         decode_s = (time.perf_counter() - loop_t0) - (prefill_s -
                                                       prefill_at_loop)
-
-        if self.paged:
-            # real pool usage, not the reserved worst case: bytes of the
-            # blocks the run actually pinned at its high-water mark, plus
-            # the dense metadata/ring leaves
-            per_block = paging_lib.bytes_per_block(cache.attn)
-            meta = tree_bytes(cache) - paging_lib.pool_bytes(cache.attn)
-            peak = self.block_allocator.peak_used
-            phys = meta + peak * per_block
-            pool_stats = dict(pool_blocks=self.pool_blocks,
-                              pool_block_bytes=per_block,
-                              pool_peak_blocks=peak)
-        else:
-            phys = tree_bytes(cache)
-            pool_stats = {}
-        logical = self._logical_bytes_per_seq() * self.slots
-        full = (self.cfg.kv_bytes_per_token() *
-                (self.prompt_len + self.max_new) * self.slots)
-        results = sorted(sched.results, key=lambda r: r.uid)
-        ttfts = [r.ttft_s for r in results if r.finish_reason != "failed"]
-        return ContinuousGenerationResult(
-            results=results,
-            prefill_seconds=prefill_s,
-            decode_seconds=decode_s,
-            decode_steps=sched.decode_steps,
-            decode_tokens=decode_tokens,
-            decode_tokens_per_s=decode_tokens / max(decode_s, 1e-9),
-            occupancy=sched.occupancy,
-            ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
-            cache_physical_bytes=int(phys),
-            cache_logical_bytes=float(logical),
-            full_cache_bytes=float(full),
-            compression_ratio=float(full / max(logical, 1.0)),
-            policy_name=self.policy.name,
-            **pool_stats,
-        )
+        return self._continuous_result(
+            sched, cache, prefill_s=prefill_s, decode_s=decode_s,
+            decode_tokens=decode_tokens)

@@ -120,7 +120,8 @@ class Scheduler:
     def __init__(self, buckets: Sequence[int], n_slots: int, *,
                  clock: Callable[[], float] = time.perf_counter,
                  allocator=None,
-                 block_need: Optional[Callable[[Request], int]] = None):
+                 block_need: Optional[Callable[[Request], int]] = None,
+                 admission_order: str = "fifo"):
         buckets = tuple(sorted({int(b) for b in buckets}))
         if not buckets or buckets[0] <= 0:
             raise ValueError(f"need positive prompt buckets, got {buckets}")
@@ -128,16 +129,36 @@ class Scheduler:
             raise ValueError(f"need >= 1 slot, got {n_slots}")
         if (allocator is None) != (block_need is None):
             raise ValueError("allocator and block_need come together")
+        if admission_order not in ("fifo", "shortest-prompt"):
+            raise ValueError(f"unknown admission_order {admission_order!r}")
         self.buckets = buckets
         self.n_slots = n_slots
         self.allocator = allocator
         self._block_need = block_need
         self._clock = clock
+        self.admission_order = admission_order
         self._queue: Deque[Tuple[Request, float]] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
         self.results: List[RequestResult] = []
         self._decode_steps = 0
         self._active_slot_steps = 0
+
+    def _head_idx(self) -> int:
+        """Queue index the next admission takes. FIFO: the front.
+        shortest-prompt: the shortest queued prompt (ties -> FIFO), so a
+        short request can jump a long one when resident latency budgets
+        are tight — long prompts still drain because every admission
+        re-evaluates, and an emptied short tail leaves the long head."""
+        if self.admission_order == "fifo" or len(self._queue) <= 1:
+            return 0
+        return min(range(len(self._queue)),
+                   key=lambda i: (len(self._queue[i][0].tokens), i))
+
+    def _pop_head(self) -> Tuple[Request, float]:
+        i = self._head_idx()
+        item = self._queue[i]
+        del self._queue[i]
+        return item
 
     # ---- queue -----------------------------------------------------------
     def bucket_for(self, prompt_len: int) -> int:
@@ -156,8 +177,10 @@ class Scheduler:
         return len(self._queue)
 
     def head_request(self) -> Optional[Request]:
-        """The next request FIFO would admit (None when queue is empty)."""
-        return self._queue[0][0] if self._queue else None
+        """The next request admission would take (None when queue is
+        empty) — the FIFO front, or the shortest queued prompt under
+        `admission_order="shortest-prompt"`."""
+        return self._queue[self._head_idx()][0] if self._queue else None
 
     # ---- slots -----------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -190,12 +213,12 @@ class Scheduler:
             return None
         blocks: List[int] = []
         if self.allocator is not None:
-            need = self._block_need(self._queue[0][0])
+            need = self._block_need(self._queue[self._head_idx()][0])
             got = self.allocator.alloc(need)
             if got is None:
                 return None            # pool exhausted: wait for a retire
             blocks = got
-        req, t_submit = self._queue.popleft()
+        req, t_submit = self._pop_head()
         self._slots[slot_idx] = _SlotState(
             req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
             blocks=blocks)
@@ -219,19 +242,21 @@ class Scheduler:
             raise ValueError(f"slot {slot_idx} is occupied")
         if not self._queue:
             return None
-        req, t_submit = self._queue.popleft()
+        req, t_submit = self._pop_head()
         self._slots[slot_idx] = _SlotState(
             req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
             prefilling=True)
         return req
 
     def grant_blocks(self, slot_idx: int, n: int) -> bool:
-        """Grant `n` more pool blocks to a PREFILLING slot (chunk-wise
-        admission pacing). False when the allocator can't cover them yet
-        — the admission stalls until a retire frees blocks."""
+        """Grant `n` more pool blocks to an occupied slot — chunk-wise
+        admission pacing for a PREFILLING slot, or lazy decode-block
+        growth for an ACTIVE one (`pos` crossed a block boundary). False
+        when the allocator can't cover them yet — the admission stalls /
+        the engine handles the starved decode."""
         st = self._slots[slot_idx]
-        if st is None or not st.prefilling:
-            raise ValueError(f"slot {slot_idx} is not prefilling")
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
         if self.allocator is None or n <= 0:
             return True
         got = self.allocator.alloc(n)
@@ -239,6 +264,25 @@ class Scheduler:
             return False
         st.blocks.extend(got)
         return True
+
+    def release_blocks(self, slot_idx: int, n: int) -> List[int]:
+        """Return the slot's `n` most recently granted blocks to the
+        free list (speculative rollback dropped below a block boundary).
+        Grant order is table order (`insert` then growth appends), so
+        popping from the tail releases exactly the no-longer-covered
+        table entries; the engine unmaps them device-side
+        (`paging.clear_block_table_from`) before the ids can be
+        re-granted. Returns the freed ids."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        if self.allocator is None or n <= 0:
+            return []
+        assert n <= len(st.blocks), (n, len(st.blocks))
+        freed = st.blocks[len(st.blocks) - n:]
+        del st.blocks[len(st.blocks) - n:]
+        self.allocator.free(freed)
+        return freed
 
     def finish_prefill(self, slot_idx: int) -> None:
         """PREFILLING -> ACTIVE: the admission's cache is inserted and
@@ -302,7 +346,7 @@ class Scheduler:
         next queued request moves up to the head."""
         if not self._queue:
             raise ValueError("queue is empty")
-        req, t_submit = self._queue.popleft()
+        req, t_submit = self._pop_head()
         now = self._clock()
         res = RequestResult(
             uid=req.uid,

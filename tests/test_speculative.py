@@ -1,0 +1,504 @@
+"""Speculative decoding: greedy stream equality, rollback mechanics, and
+the satellites that ride along (lazy block growth, admission order).
+
+The contract (serving/speculative.py): with greedy sampling, speculative
+decode produces token streams *bit-identical* to non-speculative decode
+across eviction policies (full/h2o/kivi2) and both stores (dense +
+paged) — rejection sampling reduces to match-and-truncate under argmax,
+and every verify sub-step reproduces the decode step it replaces
+exactly. Fast representatives run in tier-1; the full cross product
+runs under `-m slow` (CI `speculative` job).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as C
+from repro.core.cache import CacheSpec
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, Request, Scheduler
+from repro.serving.speculative import CacheMirror, resolve_draft_policy
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, L, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, L)).astype(np.int32)
+
+
+def _run(cfg, params, pname, *, L=64, new=16, n=5, slots=2, eos_at=None,
+         **kw):
+    pol = presets(budget=32, window=8)[pname]
+    eng = Engine(cfg, params, pol, prompt_len=L, max_new=new, slots=slots,
+                 block_len=8, **kw)
+    prompts = _prompts(cfg, n, L)
+    reqs = [Request(tokens=prompts[i], max_new=new,
+                    eos_id=(eos_at if i == 1 else None)) for i in range(n)]
+    return eng.generate_continuous(reqs)
+
+
+def _assert_equal_streams(res_a, res_b, label):
+    assert len(res_a.results) == len(res_b.results)
+    for a, b in zip(res_a.results, res_b.results):
+        np.testing.assert_array_equal(
+            a.tokens, b.tokens,
+            err_msg=f"{label}: speculative diverged from plain decode")
+        assert a.finish_reason == b.finish_reason
+
+
+# Fast covering cases: the uncompressed store (deep speculation, "same"
+# ceiling drafter), a quantized ring (flush-bounded bursts, honest
+# window drafter), and h2o (depth cap 0 at budget: every step must
+# degrade to an exact plain step). The full policy × store × drafter
+# grid runs under slow.
+FAST_GRID = [
+    ("full", False, "same"),
+    ("kivi2", False, "window:32"),
+    ("h2o", True, "same"),
+]
+FULL_GRID = [(p, paged, dp)
+             for p in ("full", "h2o", "kivi2")
+             for paged in (False, True)
+             for dp in ("same", "window:32", "kivi2:32:8")] + [
+             # the hybrid exercises quantized ring rollback AND the
+             # deferred h2o score accumulation in one spec
+             ("h2o+kivi2", False, "window:32"),
+             ("h2o+kivi2", True, "same")]
+
+
+@pytest.mark.parametrize("pname,paged,draft", FAST_GRID, ids=str)
+def test_spec_stream_equality(small_model, pname, paged, draft):
+    cfg, params = small_model
+    base = _run(cfg, params, pname, paged=paged)
+    spec = _run(cfg, params, pname, paged=paged, speculative=True,
+                gamma=3, draft_policy=draft)
+    _assert_equal_streams(base, spec, f"{pname}/paged={paged}/{draft}")
+    assert spec.spec is not None
+    if pname == "h2o":
+        # dense compressed at budget: rollback headroom is 0, every
+        # step is a plain single-token verify
+        assert spec.spec.verify_steps == 0 and spec.spec.plain_steps > 0
+    else:
+        assert spec.spec.verify_steps > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pname,paged,draft", FULL_GRID, ids=str)
+def test_spec_stream_equality_full_grid(small_model, pname, paged, draft):
+    cfg, params = small_model
+    base = _run(cfg, params, pname, paged=paged)
+    spec = _run(cfg, params, pname, paged=paged, speculative=True,
+                gamma=3, draft_policy=draft)
+    _assert_equal_streams(base, spec, f"{pname}/paged={paged}/{draft}")
+
+
+def test_spec_with_early_exit(small_model):
+    """EOS mid-commit cuts the stream at the same token as plain decode
+    (later committed-but-beyond-EOS tokens are discarded, the slot is
+    recycled)."""
+    cfg, params = small_model
+    probe = _run(cfg, params, "kivi2")
+    eos = int(probe.results[1].tokens[3])
+    base = _run(cfg, params, "kivi2", eos_at=eos)
+    spec = _run(cfg, params, "kivi2", eos_at=eos, speculative=True,
+                gamma=3, draft_policy="same")
+    _assert_equal_streams(base, spec, "kivi2/eos")
+    assert spec.results[1].finish_reason == "eos"
+
+
+def test_spec_chunked_prefill_interleave(small_model):
+    """Speculation + chunked admissions: one admission step interleaves
+    per verify round; streams still match plain monolithic decode."""
+    cfg, params = small_model
+    base = _run(cfg, params, "kivi2")
+    spec = _run(cfg, params, "kivi2", speculative=True, gamma=3,
+                draft_policy="same", chunked_prefill=True, chunk_len=16)
+    _assert_equal_streams(base, spec, "kivi2/chunked+spec")
+
+
+def test_spec_acceptance_sanity(small_model):
+    """gamma=1 still commits >= 1 token per verify step, and the 'same'
+    drafter (target clone) is the acceptance ceiling: 1.0."""
+    cfg, params = small_model
+    spec = _run(cfg, params, "full", speculative=True, gamma=1,
+                draft_policy="same")
+    st = spec.spec
+    assert st.verify_steps > 0
+    assert st.committed_per_verify_step >= 1.0
+    assert st.acceptance_rate == 1.0
+
+
+def test_spec_kernel_path(small_model):
+    """use_kernels=True routes the verify attention through the Pallas
+    segment×cache kernel (interpret mode on CPU); streams still match
+    the kernel-path plain decode, and speculation still commits
+    multi-token steps."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["kivi2"]
+    prompts = _prompts(cfg, 3, 32, seed=2)
+    outs = []
+    for spec_on in (False, True):
+        eng = Engine(cfg, params, pol, prompt_len=32, max_new=6, slots=2,
+                     use_kernels=True, speculative=spec_on, gamma=2,
+                     draft_policy="same")
+        outs.append(eng.generate_continuous(
+            [Request(tokens=p, max_new=6) for p in prompts]))
+    _assert_equal_streams(outs[0], outs[1], "kivi2/kernels")
+    assert outs[1].spec.verify_steps > 0
+
+
+def test_spec_requires_greedy(small_model):
+    cfg, params = small_model
+    from repro.serving import sampler as sampler_lib
+    with pytest.raises(ValueError, match="greedy"):
+        Engine(cfg, params, presets(budget=32, window=8)["full"],
+               prompt_len=32, max_new=4, speculative=True,
+               sampler=sampler_lib.temperature(0.8))
+
+
+# ---------------------------------------------------------------------------
+# Rollback mechanics (cache level)
+# ---------------------------------------------------------------------------
+
+
+def _mk_layer(spec, B=2, S_p=32, H=2, D=16, seed=0):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((B, S_p, H, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S_p, H, D)), jnp.bfloat16)
+    mass = jnp.asarray(rng.random((B, S_p)), jnp.float32)
+    return C.compress_prompt(spec, k, v, mass)
+
+
+def _observable_equal(lc_a, lc_b, spec):
+    """Bit-equality of everything attention can observe: the
+    materialized K/V masked by the validity bias, plus all per-slot
+    metadata. (Dropped rows' stale store bytes are deliberately NOT
+    compared — they are masked, and rewritten before any flush can
+    quantize them.)"""
+    ka, va, ba = C.materialize(lc_a, spec)
+    kb, vb, bb = C.materialize(lc_b, spec)
+    np.testing.assert_array_equal(np.asarray(ba), np.asarray(bb))
+    valid = (np.asarray(ba) == 0.0)[:, :, None, None]
+    np.testing.assert_array_equal(np.asarray(ka) * valid,
+                                  np.asarray(kb) * valid)
+    np.testing.assert_array_equal(np.asarray(va) * valid,
+                                  np.asarray(vb) * valid)
+    for f in ("scores", "slot_pos", "length", "rlen", "pos"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(lc_a, f)), np.asarray(getattr(lc_b, f)),
+            err_msg=f"{f} differs")
+    return True
+
+
+def test_truncate_dense_restores_metadata():
+    """Dense rollback: un-appended rows' metadata returns bit-exactly to
+    the pre-append state (slot_pos -1, scores 0, length/pos decremented);
+    the keep-prefix rows are untouched."""
+    spec = CacheSpec(budget=64, policy="h2o", window=0, sinks=2,
+                     recent_protect=4)
+    lc0 = _mk_layer(spec)
+    rng = np.random.default_rng(3)
+    seg = jnp.asarray(rng.standard_normal((2, 4, 2, 16)), jnp.bfloat16)
+    lc = C.append_segment(lc0, spec, seg, seg)
+    lc = C.truncate_rows(lc, spec, jnp.asarray([4, 4], jnp.int32))
+    for f in ("scores", "slot_pos", "length", "rlen", "pos"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(lc, f)), np.asarray(getattr(lc0, f)),
+            err_msg=f"{f} not restored")
+    # k/v bytes of dropped rows may be stale; they are masked — future
+    # appends / victim selection must behave as if never written
+    lc_a = C.append_segment(lc, spec, seg[:, :2], seg[:, :2])
+    lc_b = C.append_segment(lc0, spec, seg[:, :2], seg[:, :2])
+    assert _observable_equal(lc_a, lc_b, spec)
+
+
+def test_truncate_clears_score_mass_for_victim_selection():
+    """The satellite bugfix: rolled-back rows must leave NO trace in the
+    eviction state. Give the speculated rows a tiny score (the argmin if
+    they stayed evictable) — after rollback, select_victim must pick the
+    same slot as a cache that never speculated, and the truncated rows'
+    score mass must be cleared."""
+    spec = CacheSpec(budget=64, policy="h2o", window=0, sinks=2,
+                     recent_protect=2)
+    lc0 = _mk_layer(spec)
+    # lift the base scores so any stale speculated row would win argmin
+    lc0 = lc0._replace(scores=lc0.scores + 10.0)
+    rng = np.random.default_rng(4)
+    seg = jnp.asarray(rng.standard_normal((2, 3, 2, 16)), jnp.bfloat16)
+    lc = C.append_segment(lc0, spec, seg, seg)
+    # a whisper of mass on the speculated rows (slots 32..34): if
+    # rollback left them looking occupied, they would be the victim
+    mass = np.zeros((2, 64), np.float32)
+    mass[:, 32:35] = 1e-6
+    lc = C.accumulate_scores(lc, spec, jnp.asarray(mass))
+    lc = C.truncate_rows(lc, spec, jnp.asarray([3, 3], jnp.int32))
+    v_spec = np.asarray(C.select_victim(lc, spec, None))
+    v_base = np.asarray(C.select_victim(lc0, spec, None))
+    np.testing.assert_array_equal(v_spec, v_base)
+    assert float(np.asarray(lc.scores)[:, 32:35].sum()) == 0.0
+    assert (np.asarray(lc.slot_pos)[:, 32:35] == -1).all()
+
+
+def test_truncate_ring_boundary_bit_parity():
+    """Quantized rollback inside the residual ring: append a partial
+    segment, roll it back, and the *observable* cache (materialized
+    view + validity bias + subsequent appends across the next flush
+    boundary) is bit-identical to never having speculated."""
+    spec = CacheSpec(budget=32, window=8, bits=2, group=8,
+                     policy="streaming", sinks=2)
+    lc0 = _mk_layer(spec)
+    # drain the full prefill ring first (one committed append flushes)
+    rng = np.random.default_rng(5)
+    one = jnp.asarray(rng.standard_normal((2, 2, 16)), jnp.bfloat16)
+    lc0 = C.append_token(lc0, spec, one, one)
+    assert int(np.asarray(lc0.rlen)[0]) == 1
+    seg = jnp.asarray(rng.standard_normal((2, 5, 2, 16)), jnp.bfloat16)
+    lc = C.append_segment(lc0, spec, seg, seg,
+                          valid_len=jnp.asarray([5, 3], jnp.int32))
+    lc = C.truncate_rows(lc, spec, jnp.asarray([5, 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lc.rlen), np.asarray(lc0.rlen))
+    np.testing.assert_array_equal(np.asarray(lc.pos), np.asarray(lc0.pos))
+    np.testing.assert_array_equal(np.asarray(C.validity_bias(lc)),
+                                  np.asarray(C.validity_bias(lc0)))
+    # append across the next flush boundary from both states: the
+    # quantized store must come out bit-identical (stale ring bytes are
+    # fully rewritten before any flush can quantize them)
+    seg2 = jnp.asarray(rng.standard_normal((2, 9, 2, 16)), jnp.bfloat16)
+    lc_a = C.append_segment(lc, spec, seg2, seg2)
+    lc_b = C.append_segment(lc0, spec, seg2, seg2)
+    assert _observable_equal(lc_a, lc_b, spec)
+
+
+def test_masked_append_rows_untouched():
+    """A masked row's append must have NO side effects — including the
+    ring flush its unmasked neighbour fires."""
+    spec = CacheSpec(budget=32, window=8, bits=2, group=8,
+                     policy="streaming", sinks=2)
+    lc0 = _mk_layer(spec)          # both rows: rlen == 8 (full ring)
+    one = jnp.asarray(np.random.default_rng(6).standard_normal((2, 2, 16)),
+                      jnp.bfloat16)
+    lc = C.append_token(lc0, spec, one, one,
+                        mask=jnp.asarray([True, False]))
+    assert int(np.asarray(lc.rlen)[0]) == 1      # flushed + appended
+    assert int(np.asarray(lc.rlen)[1]) == 8      # untouched
+    for f in C.LayerKV._fields:
+        a = np.asarray(getattr(lc, f))
+        b = np.asarray(getattr(lc0, f))
+        if f == "budget":
+            continue
+        np.testing.assert_array_equal(a[1], b[1],
+                                      err_msg=f"masked row {f} changed")
+
+
+# ---------------------------------------------------------------------------
+# Host cache mirror
+# ---------------------------------------------------------------------------
+
+
+def test_cache_mirror_tracks_device_state(small_model):
+    """The mirror's length/rlen/pos must track the real cache exactly
+    through admission, appends (across flush boundaries), truncates."""
+    spec = CacheSpec(budget=32, window=8, bits=2, group=8,
+                     policy="streaming", sinks=2)
+    mir = CacheMirror(spec, np.asarray([32]), 32, n_slots=1)
+    lc = _mk_layer(spec, B=1)
+    mir.admit(0, 32)
+    rng = np.random.default_rng(7)
+    for n_app, n_trunc in [(1, 0), (5, 2), (8, 0), (3, 3), (9, 1)]:
+        seg = jnp.asarray(rng.standard_normal((1, n_app, 2, 16)),
+                          jnp.bfloat16)
+        lc = C.append_segment(lc, spec, seg, seg)
+        mir.append(0, n_app)
+        lc = C.truncate_rows(lc, spec, jnp.asarray([n_trunc], jnp.int32))
+        mir.truncate(0, n_trunc)
+        assert int(np.asarray(lc.rlen)[0]) == mir.rlen[0]
+        assert int(np.asarray(lc.length)[0]) == mir.length[0, 0]
+        assert int(np.asarray(lc.pos)[0]) == mir.pos[0]
+
+
+def test_draft_policy_resolution(small_model):
+    cfg, _ = small_model
+    base = presets(budget=64, window=16)["h2o"].spec
+    d = resolve_draft_policy("window:48", cfg, base, 128, 32)
+    assert d.cfg.sliding_window == 48
+    assert d.spec.budget == 160 and d.spec.bits == 16
+    d2 = resolve_draft_policy("kivi2:40:8", cfg, base, 128, 32)
+    assert d2.spec.bits == 2 and d2.spec.budget == 40 and \
+        d2.spec.window == 8
+    d3 = resolve_draft_policy("same", cfg, base, 128, 32)
+    assert d3.spec == base
+    with pytest.raises(ValueError):
+        resolve_draft_policy("medusa", cfg, base, 128, 32)
+
+
+# ---------------------------------------------------------------------------
+# Lazy decode-block growth + rollback block release
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_growth_stream_equality(small_model):
+    """Lazy growth must not change token streams (ample pool)."""
+    cfg, params = small_model
+    eager = _run(cfg, params, "full", paged=True)
+    lazy = _run(cfg, params, "full", paged=True, block_growth="lazy")
+    _assert_equal_streams(eager, lazy, "full/lazy-growth")
+
+
+def test_lazy_growth_coresidency_win(small_model):
+    """The seqs/GB satellite claim: on a pool that eager admission can
+    only serve serially (each admission reserves prompt + max_new),
+    lazy growth co-resides both requests — same bytes, higher
+    occupancy — because early-terminating requests never claim their
+    decode headroom. Streams stay identical either way."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    prompts = _prompts(cfg, 2, 32)
+
+    def run(growth, eos):
+        eng = Engine(cfg, params, pol, prompt_len=32, max_new=32, slots=2,
+                     paged=True, block_len=8, pool_blocks=10,
+                     block_growth=growth)
+        return eng.generate_continuous(
+            [Request(tokens=p, max_new=32, eos_id=e)
+             for p, e in zip(prompts, eos)])
+
+    # pick each request's own 3rd token as its EOS: both runs terminate
+    # early at the same point
+    probe = run("eager", [None, None])
+    eos = [int(r.tokens[2]) for r in probe.results]
+    eager = run("eager", eos)
+    lazy = run("lazy", eos)
+    _assert_equal_streams(eager, lazy, "full/lazy-coresidency")
+    assert all(r.finish_reason == "eos" for r in lazy.results)
+    # eager: 8 blocks/request on a 10-block pool -> strictly serial;
+    # lazy: ~5 blocks each at end of life -> fully co-resident
+    assert eager.occupancy <= 0.5 + 1e-9
+    assert lazy.occupancy > eager.occupancy
+
+
+def test_lazy_growth_spec_block_release(small_model):
+    """Speculative rollback under lazy growth returns no-longer-covered
+    blocks to the free list (the allocator ends the run fully drained)
+    and still matches plain streams."""
+    cfg, params = small_model
+    base = _run(cfg, params, "full", paged=True)
+    pol = presets(budget=32, window=8)["full"]
+    eng = Engine(cfg, params, pol, prompt_len=64, max_new=16, slots=2,
+                 paged=True, block_len=8, block_growth="lazy",
+                 speculative=True, gamma=3, draft_policy="window:16")
+    prompts = _prompts(cfg, 5, 64)
+    spec = eng.generate_continuous(
+        [Request(tokens=p, max_new=16) for p in prompts])
+    _assert_equal_streams(base, spec, "full/lazy+spec")
+    assert spec.pool_peak_blocks > 0
+    # every retire (and rollback release) returned its blocks
+    assert eng.block_allocator.used == 0
+
+
+def test_release_blocks_frees_tail():
+    from repro.core.paging import BlockAllocator
+    alloc = BlockAllocator(8)
+    sched = Scheduler((4,), 1, allocator=alloc, block_need=lambda r: 3)
+    req = Request(tokens=np.zeros(4, np.int32), max_new=4)
+    sched.submit(req)
+    assert sched.admit_next(0) is req
+    ids0 = sched.slot_blocks(0)
+    assert sched.grant_blocks(0, 2)
+    grown = sched.slot_blocks(0)
+    freed = sched.release_blocks(0, 2)
+    assert freed == grown[3:]
+    assert sched.slot_blocks(0) == ids0
+    assert alloc.used == 3
+    sched.retire(0, "length")
+    assert alloc.used == 0
+
+
+def test_lazy_growth_oom_with_chunked_first_token(small_model):
+    """Regression: a chunk-admitted slot whose first token is still
+    in flight when growth starves must record that token and retire
+    'oom' — not crash the run on an empty-slot record. Pool == exact
+    prompt coverage, so the very first decode append starves."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    eng = Engine(cfg, params, pol, prompt_len=64, max_new=8, slots=1,
+                 paged=True, block_len=8, pool_blocks=8,
+                 block_growth="lazy", chunked_prefill=True, chunk_len=16)
+    res = eng.generate_continuous(
+        [Request(tokens=_prompts(cfg, 1, 64)[0], max_new=8)])
+    r = res.results[0]
+    assert r.finish_reason == "oom"
+    assert r.n_tokens == 1          # the in-flight first token survived
+
+
+def test_lazy_growth_oom_retires_cleanly(small_model):
+    """A pool that can admit (prompt coverage) but not sustain decode
+    growth retires starved slots with 'oom' instead of corrupting
+    neighbours; completed requests keep their results."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    # prompt 64 needs 8 blocks of 8; decode headroom would need more.
+    # Pool of 9: admission fits, growth starves.
+    eng = Engine(cfg, params, pol, prompt_len=64, max_new=24, slots=2,
+                 paged=True, block_len=8, pool_blocks=9,
+                 block_growth="lazy")
+    prompts = _prompts(cfg, 2, 64)
+    res = eng.generate_continuous(
+        [Request(tokens=p, max_new=24) for p in prompts])
+    reasons = {r.finish_reason for r in res.results}
+    assert "oom" in reasons
+    for r in res.results:
+        if r.finish_reason == "oom":
+            assert r.n_tokens >= 1      # emitted work is preserved
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: admission order
+# ---------------------------------------------------------------------------
+
+
+def test_shortest_prompt_admission_order():
+    sched = Scheduler((8, 32), 1, admission_order="shortest-prompt")
+    long1 = Request(tokens=np.zeros(32, np.int32), max_new=4)
+    short = Request(tokens=np.zeros(8, np.int32), max_new=4)
+    long2 = Request(tokens=np.ones(32, np.int32), max_new=4)
+    for r in (long1, short, long2):
+        sched.submit(r)
+    assert sched.head_request() is short
+    assert sched.admit_next(0) is short
+    sched.retire(0, "length")
+    # FIFO among equal lengths
+    assert sched.admit_next(0) is long1
+    sched.retire(0, "length")
+    assert sched.admit_next(0) is long2
+
+
+def test_shortest_prompt_end_to_end(small_model):
+    """A short prompt submitted behind two long ones is served first
+    under shortest-prompt (and not under FIFO)."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    prompts_l = _prompts(cfg, 3, 64)
+    prompt_s = _prompts(cfg, 1, 32, seed=9)[0]
+    reqs = lambda: ([Request(tokens=p, max_new=6) for p in prompts_l]
+                    + [Request(tokens=prompt_s, max_new=6)])
+    out = {}
+    for order in ("fifo", "shortest-prompt"):
+        eng = Engine(cfg, params, pol, prompt_len=64, max_new=6, slots=1,
+                     buckets=(32, 64), admission_order=order)
+        res = eng.generate_continuous(reqs())
+        short_uid = res.results[-1].uid
+        # rank of the short request in admission (t_first) order
+        order_by_first = sorted(res.results,
+                                key=lambda r: r.token_times[0])
+        out[order] = [r.uid for r in order_by_first].index(short_uid)
+    assert out["shortest-prompt"] == 0
+    assert out["fifo"] == 3
