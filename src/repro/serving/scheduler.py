@@ -265,6 +265,16 @@ class Scheduler:
         st.blocks.extend(got)
         return True
 
+    def release(self, slot_idx: int, ids: Sequence[int]) -> None:
+        """Single choke point: every block returned to the allocator —
+        retire, speculative rollback (`release_blocks`), engine-side
+        un-mapping — funnels through here, so ownership changes have one
+        auditable seam. `slot_idx` is the releasing slot (or -1 when the
+        blocks no longer belong to any slot)."""
+        if self.allocator is None or not ids:
+            return
+        self.allocator.free(ids)
+
     def release_blocks(self, slot_idx: int, n: int) -> List[int]:
         """Return the slot's `n` most recently granted blocks to the
         free list (speculative rollback dropped below a block boundary).
@@ -281,7 +291,7 @@ class Scheduler:
         assert n <= len(st.blocks), (n, len(st.blocks))
         freed = st.blocks[len(st.blocks) - n:]
         del st.blocks[len(st.blocks) - n:]
-        self.allocator.free(freed)
+        self.release(slot_idx, freed)
         return freed
 
     def finish_prefill(self, slot_idx: int) -> None:
@@ -319,8 +329,7 @@ class Scheduler:
         if st is None:
             raise ValueError(f"slot {slot_idx} is empty")
         self._slots[slot_idx] = None
-        if self.allocator is not None and st.blocks:
-            self.allocator.free(st.blocks)     # freed capacity is reusable
+        self.release(slot_idx, st.blocks)      # freed capacity is reusable
         now = self._clock()
         res = RequestResult(
             uid=st.req.uid,
