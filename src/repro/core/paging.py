@@ -328,7 +328,8 @@ def _append_quantized_paged(
 
 def insert_request_paged(stacked: PagedLayerKV, slot_idx,
                          prefilled: kvcache.LayerKV, block_ids: Array, *,
-                         batch_axis: int = 1) -> PagedLayerKV:
+                         batch_axis: int = 1, n_skip=0,
+                         pool_write: bool = True) -> PagedLayerKV:
     """Scatter one request's prefilled *dense* `LayerKV` (batch 1 at
     `batch_axis`; prefill always builds the dense view) into batch slot
     `slot_idx` of a live paged cache whose blocks `block_ids` ([n_max]
@@ -340,7 +341,15 @@ def insert_request_paged(stacked: PagedLayerKV, slot_idx,
     request admitted below the physical store length) are dropped — they
     are headroom padding beyond the request's budgeted length, never
     valid. Pool axes sit at `batch_axis` (layer dims lead both pool and
-    metadata leaves)."""
+    metadata leaves).
+
+    `n_skip` (traced scalar) drops pool writes for the first `n_skip`
+    table positions — those blocks were adopted read-only from the
+    prefix index and already hold identical rows; rewriting them would
+    race other slots mapping the same ids. `pool_write=False` (static)
+    skips the K/V scatters entirely — the prefill-direct path already
+    streamed the rows into the pool segment-by-segment. Metadata and the
+    table row are always written."""
     upd = {
         f: kvcache._scatter_batch(getattr(stacked, f), getattr(prefilled, f),
                                   slot_idx, batch_axis)
@@ -358,11 +367,13 @@ def insert_request_paged(stacked: PagedLayerKV, slot_idx,
     def rows_for(r: int) -> Array:
         """Flat pool rows for the request's logical rows, r rows/block."""
         base = block_ids[:, None] * r + jnp.arange(r)[None]
-        return jnp.where(block_ids[:, None] < 0, nb * r, base).reshape(-1)
+        skip = (block_ids[:, None] < 0) | \
+            (jnp.arange(block_ids.shape[0])[:, None] < n_skip)
+        return jnp.where(skip, nb * r, base).reshape(-1)
 
     def scat(pool: Array, val: Array) -> Array:
         r = pool.shape[batch_axis + 1]
-        if r == 0:
+        if r == 0 or not pool_write:
             return pool
         flat = pool.reshape(*pool.shape[:batch_axis], nb * r,
                             *pool.shape[batch_axis + 2:])
@@ -380,6 +391,44 @@ def insert_request_paged(stacked: PagedLayerKV, slot_idx,
         pv_zero=scat(stacked.pv_zero, prefilled.v_zero),
     )
     return stacked._replace(**upd)
+
+
+def copy_pool_blocks(stacked: PagedLayerKV, src_ids: Array, dst_ids: Array,
+                     *, batch_axis: int = 1) -> PagedLayerKV:
+    """Copy whole pool blocks `src_ids` -> `dst_ids` ([k] int32, every
+    layer at once) — the device half of copy-on-write: the engine
+    allocates fresh ids, copies the shared blocks' rows, then rewrites
+    the diverging slot's table entries to the copies."""
+    upd = {}
+    for f in POOL_FIELDS:
+        pool = getattr(stacked, f)
+        if pool.shape[batch_axis + 1] == 0:
+            continue
+        src = jnp.take(pool, src_ids, axis=batch_axis)
+        idx = (slice(None),) * batch_axis + (dst_ids,)
+        upd[f] = pool.at[idx].set(src, mode="drop")
+    return stacked._replace(**upd)
+
+
+def write_prefill_rows(stacked: PagedLayerKV, rows: Array, k_seg: Array,
+                       v_seg: Array, *, batch_axis: int = 1) -> PagedLayerKV:
+    """Prefill-direct segment write (dense, non-quantized pools): scatter
+    one streamed chunk's K/V rows ([..., 1, C, H, D], batch collapsed at
+    `batch_axis`) straight into flat pool rows `rows` ([C] int32,
+    host-computed as ``ids[t // bl] * bl + t % bl``), skipping the
+    scratch -> compress -> scatter hop for policies that keep every
+    row. One compile per segment length, like `prefill_chunk`."""
+    def scat(pool: Array, val: Array) -> Array:
+        nb, r = pool.shape[batch_axis], pool.shape[batch_axis + 1]
+        flat = pool.reshape(*pool.shape[:batch_axis], nb * r,
+                            *pool.shape[batch_axis + 2:])
+        v = jax.lax.index_in_dim(val, 0, batch_axis, keepdims=False)
+        idx = (slice(None),) * batch_axis + (rows,)
+        flat = flat.at[idx].set(v.astype(pool.dtype), mode="drop")
+        return flat.reshape(pool.shape)
+
+    return stacked._replace(pk=scat(stacked.pk, k_seg),
+                            pv=scat(stacked.pv, v_seg))
 
 
 def reset_slot_paged(stacked: PagedLayerKV, slot_idx, *,
@@ -405,16 +454,24 @@ def reset_slot_paged(stacked: PagedLayerKV, slot_idx, *,
 
 
 class BlockAllocator:
-    """Free-list over the shared block-id space. One id reserves the same
-    row of every layer's pools. `alloc` is all-or-nothing: a request that
-    doesn't fit leaves the pool untouched (admission refusal)."""
+    """Refcounted free-list over the shared block-id space. One id
+    reserves the same row of every layer's pools. `alloc` is
+    all-or-nothing: a request that doesn't fit leaves the pool untouched
+    (admission refusal).
+
+    Ownership is a *reference count*, not exclusive: `alloc` hands out
+    blocks at refcount 1, `incref` lets a second holder (another slot's
+    table, the prefix index) map the same block read-only, and `free`
+    drops one reference — the id returns to the free list only at zero.
+    Dropping a reference that was never taken raises (double-decref is a
+    lifecycle bug, not a no-op)."""
 
     def __init__(self, n_blocks: int):
         if n_blocks < 1:
             raise ValueError(f"need >= 1 block, got {n_blocks}")
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
-        self._held: set[int] = set()
+        self._refs: dict[int, int] = {}
         self.peak_used = 0
 
     @property
@@ -431,16 +488,30 @@ class BlockAllocator:
         if n > len(self._free):
             return None
         ids = [self._free.pop() for _ in range(n)]
-        self._held.update(ids)
+        for i in ids:
+            self._refs[i] = 1
         self.peak_used = max(self.peak_used, self.used)
         return ids
 
-    def free(self, ids: List[int]) -> None:
+    def refcount(self, block_id: int) -> int:
+        return self._refs.get(block_id, 0)
+
+    def incref(self, ids: List[int]) -> None:
         for i in ids:
-            if i not in self._held:
+            if i not in self._refs:
                 raise ValueError(f"block {i} is not allocated")
-            self._held.discard(i)
-            self._free.append(i)
+            self._refs[i] += 1
+
+    def free(self, ids: List[int]) -> None:
+        """Drop one reference per id; a block returns to the free list
+        only when its last reference is dropped."""
+        for i in ids:
+            if i not in self._refs:
+                raise ValueError(f"block {i} is not allocated")
+            self._refs[i] -= 1
+            if self._refs[i] == 0:
+                del self._refs[i]
+                self._free.append(i)
 
 
 def blocks_for_len(n_rows: int, block_len: int) -> int:
@@ -541,13 +612,14 @@ def bytes_per_block(p: PagedLayerKV) -> int:
 
 def mapped_blocks(p: PagedLayerKV) -> int:
     """Distinct pool blocks currently mapped by any slot (host sync).
-    Tables are replicated per layer; count one copy. Slots never share
-    blocks, so mapped entries == allocated blocks."""
+    Tables are replicated per layer; count one copy. Prefix sharing maps
+    one physical block into several slots' tables, so count *distinct*
+    ids — physical bytes, not table entries."""
     import numpy as np
     tbl = np.asarray(p.block_tbl)
     n_max = tbl.shape[-1]
     tbl2 = tbl.reshape(-1, tbl.shape[-2], n_max)[0]       # one layer copy
-    return int((tbl2 >= 0).sum())
+    return int(np.unique(tbl2[tbl2 >= 0]).size)
 
 
 def paged_physical_bytes(p: PagedLayerKV) -> int:

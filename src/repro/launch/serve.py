@@ -88,6 +88,22 @@ def main() -> None:
                          "lazy grants blocks as pos crosses block "
                          "boundaries (higher seqs/GB; a starved slot "
                          "retires 'oom')")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="cross-request prefix cache (--continuous --paged "
+                         "only): a radix index over the pool maps repeated "
+                         "prompt prefixes read-only into new slots, which "
+                         "prefill only their suffix; copy-on-write "
+                         "un-shares on divergence, streams unchanged")
+    ap.add_argument("--near-hit", type=float, default=0.0,
+                    help="near-hit threshold in (0, 1] for "
+                         "--prefix-sharing with the full policy: a prompt "
+                         "overlapping a recent one by at least this "
+                         "fraction (but with a short exact prefix) routes "
+                         "through CacheBlend selective recompute instead "
+                         "of a full prefill (approximate; 0 disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every synthetic request the same leading N "
+                         "tokens (exercises --prefix-sharing warm hits)")
     ap.add_argument("--admission-order", choices=("fifo", "shortest-prompt"),
                     default="fifo",
                     help="queue order for admissions: shortest-prompt "
@@ -105,6 +121,15 @@ def main() -> None:
                  "loop lives in the continuous engine)")
     if args.block_growth == "lazy" and not args.paged:
         ap.error("--block-growth lazy requires --paged")
+    if args.prefix_sharing and not (args.continuous and args.paged):
+        ap.error("--prefix-sharing requires --continuous --paged (the "
+                 "radix index maps pool blocks into block tables)")
+    if args.near_hit and not args.prefix_sharing:
+        ap.error("--near-hit requires --prefix-sharing")
+    if args.prefix_sharing and args.speculative:
+        ap.error("--prefix-sharing and --speculative are mutually "
+                 "exclusive (draft-cache restore does not track shared "
+                 "blocks)")
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg = get_config(args.arch)
@@ -127,12 +152,21 @@ def main() -> None:
                      speculative=args.speculative, gamma=args.gamma,
                      draft_policy=args.draft_policy,
                      block_growth=args.block_growth,
-                     admission_order=args.admission_order)
+                     admission_order=args.admission_order,
+                     prefix_sharing=args.prefix_sharing,
+                     near_hit=args.near_hit)
         eos = args.eos_id if args.eos_id >= 0 else None
+        shared = rng.integers(0, cfg.vocab_size,
+                              size=max(args.shared_prefix, 0))
+
+        def prompt(L):
+            tail = rng.integers(0, cfg.vocab_size,
+                                size=max(L - len(shared), 0))
+            return np.concatenate([shared[:L], tail])
+
         reqs = [
             Request(
-                tokens=rng.integers(0, cfg.vocab_size,
-                                    size=buckets[i % len(buckets)]),
+                tokens=prompt(buckets[i % len(buckets)]),
                 max_new=int(rng.integers(max(1, args.max_new // 2),
                                          args.max_new + 1)),
                 eos_id=eos,
@@ -164,6 +198,14 @@ def main() -> None:
                   f"block_len={eng.block_len}; reserved "
                   f"{res.pool_blocks * res.pool_block_bytes / 2**20:.1f} "
                   f"MiB)")
+        if res.prefix is not None:
+            p = res.prefix
+            print(f"prefix cache: {p['warm_hits']} warm / {p['cold']} cold "
+                  f"/ {p['near_hits']} near-hit admissions; "
+                  f"{p['ingested_blocks']} blocks indexed, "
+                  f"{p['index_blocks']} resident, "
+                  f"{p['evicted_blocks']} evicted, "
+                  f"{p['cow_copies']} copy-on-write copies")
         return
 
     prompts = rng.integers(0, cfg.vocab_size,

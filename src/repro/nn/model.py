@@ -365,6 +365,73 @@ def prefill_finalize(cfg, st: PrefillState, spec: CacheSpec, *,
     return ModelCache(attn_c, None, None, None, None)
 
 
+def prefill_finalize_meta(cfg, st: PrefillState, spec: CacheSpec, *,
+                          layer_budgets: Optional[Array] = None
+                          ) -> ModelCache:
+    """Metadata-only finalize for the paged prefill-direct path: when the
+    policy keeps every prompt row verbatim (no quantization, no window,
+    budget covers the prompt — `compress_prompt`'s no-selection branch)
+    the engine streams each chunk's K/V rows straight into the pool
+    (`paging.write_prefill_rows`), so finalize only needs the dense
+    *metadata* that branch would produce. K/V leaves are zero-width: the
+    insert runs with ``pool_write=False`` and never reads them."""
+    sb, n_sb, kinds = sb_layout(cfg)
+    aps = attn_positions(cfg)
+    nA = max(len(aps), 1)
+    T = st.mass.shape[-1]
+    S = spec.main_store_len(T)
+    if not (S >= T and not spec.quantized and spec.window == 0):
+        raise ValueError("prefill-direct needs the verbatim prompt branch "
+                         "(budget >= prompt, fp, no window)")
+    if layer_budgets is None:
+        layer_budgets = jnp.full((n_sb, nA), S, jnp.int32)
+    else:
+        layer_budgets = jnp.asarray(layer_budgets, jnp.int32).reshape(
+            n_sb, nA)
+    H, D = cfg.num_kv_heads, cfg.head_dim
+    pad = S - T
+    bshape = (n_sb, nA, 1)                    # layer-stacked, batch 1
+    pos_rows = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                (*bshape, T))
+    pad_last = ((0, 0),) * 3 + ((0, pad),)
+    attn_c = LayerKV(
+        k=jnp.zeros((*bshape, 0, H, D), cfg.dtype),
+        v=jnp.zeros((*bshape, 0, H, D), cfg.dtype),
+        k_scale=jnp.zeros((*bshape, 0, H, D), jnp.float32),
+        k_zero=jnp.zeros((*bshape, 0, H, D), jnp.float32),
+        v_scale=jnp.zeros((*bshape, 0, H), jnp.float32),
+        v_zero=jnp.zeros((*bshape, 0, H), jnp.float32),
+        rk=jnp.zeros((*bshape, 0, H, D), cfg.dtype),
+        rv=jnp.zeros((*bshape, 0, H, D), cfg.dtype),
+        r_scores=jnp.zeros((*bshape, 0), jnp.float32),
+        scores=jnp.pad(st.mass.astype(jnp.float32), pad_last),
+        slot_pos=jnp.pad(pos_rows, pad_last, constant_values=-1),
+        length=jnp.full(bshape, T, jnp.int32),
+        rlen=jnp.zeros(bshape, jnp.int32),
+        pos=jnp.full(bshape, T, jnp.int32),
+        budget=layer_budgets,
+    )
+    return ModelCache(attn_c, None, None, None, None)
+
+
+def prefill_from_kv(cfg, spec: CacheSpec, ks: Array, vs: Array, *,
+                    layer_budgets: Optional[Array] = None,
+                    key: Optional[Array] = None) -> ModelCache:
+    """Build an insert-compatible prefill cache from externally computed
+    per-layer K/V ``[L, B, S, H, D]`` (CacheBlend's blended prompt KV).
+    Attention mass is zeroed — only legal for policies whose selection
+    ignores it (the engine gates near-hits to policy "none"). Uniform
+    decoder archs only (sb == 1), like `cacheblend`."""
+    sb, n_sb, kinds = sb_layout(cfg)
+    if sb != 1 or len(attn_positions(cfg)) != 1:
+        raise ValueError("prefill_from_kv assumes uniform attention layers")
+    st = PrefillState(
+        k=ks[:, None].astype(cfg.dtype), v=vs[:, None].astype(cfg.dtype),
+        mass=jnp.zeros((n_sb, 1, *ks.shape[1:3]), jnp.float32))
+    return prefill_finalize(cfg, st, spec, layer_budgets=layer_budgets,
+                            key=key)
+
+
 # ---------------------------------------------------------------------------
 # Decode: one token
 # ---------------------------------------------------------------------------

@@ -41,6 +41,8 @@ latency / slot occupancy.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence, Union
@@ -56,6 +58,8 @@ from repro.core.cache import CacheSpec, cache_logical_bytes_per_layer
 from repro.core.policy import CompressionPolicy
 from repro.nn import model as M
 from repro.nn.attention import MASS_GROUP
+from repro.serving import cacheblend as cacheblend_lib
+from repro.serving import prefix as prefix_lib
 from repro.serving import sampler as sampler_lib
 from repro.serving import speculative as spec_lib
 from repro.serving.scheduler import Request, RequestResult, Scheduler
@@ -96,6 +100,9 @@ class ContinuousGenerationResult:
     pool_block_bytes: int = 0     # bytes one block pins across layers,
     pool_peak_blocks: int = 0     # high-water allocated blocks
     spec: Optional[spec_lib.SpecStats] = None  # speculative runs only
+    prefix: Optional[dict] = None  # prefix-sharing runs only: warm/cold
+                                   # hits + prefill seconds, CoW copies,
+                                   # near-hits, index churn
 
     def tokens_for(self, uid: int) -> np.ndarray:
         for r in self.results:
@@ -134,6 +141,11 @@ class _ChunkedAdmission:
     next_i: int = 0
     last_logits: Any = None        # device logits of the last segment run
     pc: Any = None                 # finalized batch-1 cache awaiting insert
+    restore_m: int = 0             # prefix rows restored from the index
+    n_adopt: int = 0               # pool blocks adopted read-only
+    direct: bool = False           # prefill-direct: segments write the pool
+    blend: bool = False            # near-hit CacheBlend admission
+    secs: float = 0.0              # accumulated prefill seconds
 
 
 class Engine:
@@ -149,7 +161,8 @@ class Engine:
                  block_growth: str = "eager",
                  admission_order: str = "fifo",
                  speculative: bool = False, gamma: int = 4,
-                 draft_policy: str = "window:64"):
+                 draft_policy: str = "window:64",
+                 prefix_sharing: bool = False, near_hit: float = 0.0):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
         if use_kernels is not None:
@@ -216,8 +229,37 @@ class Engine:
         # so chunked and monolithic admissions fold attention mass in
         # the same association chain (bit-identical greedy streams).
         self.chunked_prefill = bool(chunked_prefill)
+
+        # --- cross-request prefix sharing (paged + continuous only) -----
+        # A radix index over the pool (serving/prefix.py) lets admissions
+        # that share a prompt prefix map the same physical blocks read-
+        # only (refcounted) and prefill only their suffix; a shared block
+        # is un-shared copy-on-write the moment its slot would mutate it.
+        # Sharing reuses the chunked-prefill machinery (suffix streaming
+        # is a chunked prefill starting at a nonzero offset), so every
+        # admission under sharing goes through it — streams stay
+        # bit-identical per the chunked == monolithic contract.
+        self.prefix_sharing = bool(prefix_sharing)
+        self.near_hit = float(near_hit)
+        if self.prefix_sharing:
+            if not paged:
+                raise ValueError("prefix_sharing requires paged=True")
+            if speculative:
+                raise ValueError(
+                    "prefix_sharing + speculative is unsupported (the "
+                    "draft cache holds no block tables to share)")
+        if self.near_hit:
+            if not self.prefix_sharing:
+                raise ValueError("near_hit requires prefix_sharing=True")
+            if not 0.0 < self.near_hit <= 1.0:
+                raise ValueError(
+                    f"near_hit is a recompute fraction in (0, 1], "
+                    f"got {self.near_hit}")
+        self._share_state: Optional[dict] = None  # live only during a
+                                                  # sharing-enabled run
+
         self.chunk_len = 0
-        if self.chunked_prefill:
+        if self.chunked_prefill or self.prefix_sharing:
             M._check_chunkable(cfg)
             self.chunk_len = max(MASS_GROUP,
                                  int(chunk_len) - int(chunk_len) % MASS_GROUP)
@@ -266,11 +308,16 @@ class Engine:
             return M.ModelCache(attn, ssm, cache.cross_k, cache.cross_v,
                                 cache.cross_bias)
 
-        def _insert_paged(cache: M.ModelCache, pc: M.ModelCache, slot, ids):
+        def _insert_paged(cache: M.ModelCache, pc: M.ModelCache, slot, ids,
+                          n_skip, *, pool_write: bool = True):
             # prefill always builds the dense batch-1 view; the insert
-            # scatters its rows into the slot's freshly granted blocks
+            # scatters its rows into the slot's freshly granted blocks.
+            # `n_skip` leading table entries are adopted shared-prefix
+            # blocks: the table maps them, the pool write skips them
+            # (their rows are already resident and referenced elsewhere)
             attn = (paging_lib.insert_request_paged(
-                        cache.attn, slot, pc.attn, ids, batch_axis=2)
+                        cache.attn, slot, pc.attn, ids, batch_axis=2,
+                        n_skip=n_skip, pool_write=pool_write)
                     if cache.attn is not None else None)
             ssm = (kvcache.insert_request_tree(cache.ssm, slot, pc.ssm,
                                               batch_axis=2)
@@ -298,7 +345,7 @@ class Engine:
             self._insert = jax.jit(_insert, donate_argnums=(0,) if dn else ())
         self._reset = jax.jit(_reset, donate_argnums=(0,) if dn else ())
 
-        if self.chunked_prefill:
+        if self.chunked_prefill or self.prefix_sharing:
             # one compile per segment *length* (the offset is traced):
             # <= 2 shapes per bucket (chunk_len + a ragged tail)
             self._chunk_step = jax.jit(
@@ -309,7 +356,36 @@ class Engine:
                 lambda st, lb2, k: M.prefill_finalize(
                     cfg, st, self.spec, layer_budgets=lb2, key=k))
 
-        if self.paged and self.lazy_blocks:
+        if self.paged and (self.chunked_prefill or self.prefix_sharing):
+            # prefill-direct (no-selection policies keep every prompt row
+            # verbatim): each chunk's K/V rows stream straight into the
+            # slot's granted pool blocks as they are computed, and the
+            # insert writes metadata only — no end-of-prefill bulk scatter
+            self._write_rows = jax.jit(
+                lambda c, rows, ks, vs: M.ModelCache(
+                    paging_lib.write_prefill_rows(c.attn, rows, ks, vs,
+                                                  batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+            self._insert_meta = jax.jit(
+                functools.partial(_insert_paged, pool_write=False),
+                donate_argnums=(0,) if dn else ())
+            self._finalize_meta = jax.jit(
+                lambda st, lb2: M.prefill_finalize_meta(
+                    cfg, st, self.spec, layer_budgets=lb2))
+
+        if self.paged and self.prefix_sharing:
+            # copy-on-write un-share: duplicate the rows of the adopted
+            # blocks into the slot's fresh exclusive blocks (the table
+            # rewrite itself reuses `_grow_tbl` at offset 0)
+            self._copy_blocks = jax.jit(
+                lambda c, src, dst: M.ModelCache(
+                    paging_lib.copy_pool_blocks(c.attn, src, dst,
+                                                batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+
+        if self.paged and (self.lazy_blocks or self.prefix_sharing):
             # device half of lazy growth/rollback: write freshly granted
             # ids into a slot's table row / unmap released entries
             self._grow_tbl = jax.jit(
@@ -395,6 +471,58 @@ class Engine:
         return paging_lib.request_blocks(
             self.spec, self._S_phys, len(req.tokens), req.max_new,
             self.block_len)
+
+    # ------------------------------------------------------------------
+    # Prefix sharing: eligibility + host-side copy-on-write trigger
+    # ------------------------------------------------------------------
+    def _share_retained(self, bucket: int) -> int:
+        """Leading prompt rows of a `bucket`-length admission whose final
+        cache rows are *blockwise deterministic and position-ordered* —
+        the shareable prefix. Position order is what lets pool block b be
+        mapped verbatim by any request whose tokens agree on rows
+        [b*block_len, (b+1)*block_len). Returns 0 when this spec cannot
+        share: score-carrying eviction (h2o/nacl/keyformer) orders rows
+        data-dependently, and a budget too small to retain the whole
+        pre-window prompt drops rows mid-prefix."""
+        spec = self.spec
+        if spec.policy not in ("none", "streaming") or spec.track_scores():
+            return 0
+        min_lb = int(np.min(self.layer_budgets))
+        if spec.window == 0:
+            # verbatim prefill branch: every prompt row kept in place
+            if spec.quantized:
+                return 0
+            ok = spec.main_store_len(bucket) >= bucket and min_lb >= bucket
+            return bucket if ok else 0
+        # streaming selection: rows [0, bucket-window) land position-
+        # ordered in the main store when the store covers them all
+        # (earliest-index top-k tie-break; see tests/test_prefix.py)
+        n_main = bucket - spec.window
+        if n_main <= 0 or spec.main_store_len(bucket) < n_main:
+            return 0
+        cap = ((min_lb // spec.group) * spec.group if spec.quantized
+               else min_lb)
+        return n_main if cap >= n_main else 0
+
+    def _verbatim_ok(self, bucket: int) -> bool:
+        """True when prefill keeps every prompt row verbatim (no
+        selection, no quantization, no ring) — the prefill-direct case:
+        chunk K/V rows can stream straight into pool blocks and the
+        insert writes metadata only (`prefill_finalize_meta`)."""
+        s = self.spec
+        return (not s.quantized and s.window == 0
+                and s.main_store_len(bucket) >= bucket)
+
+    def _cow_due(self, mirror, slot: int) -> bool:
+        """Host-side trigger: could this slot's next append mutate rows
+        below its adopted shared prefix? Appends and non-evicting ring
+        flushes only ever write at/above the slot's own length — past
+        the adopted coverage by construction — so the only mutation that
+        can reach a shared block is an evict-at-cap flush. Quantized
+        rings flush nothing until the ring is full."""
+        if self.spec.quantized and int(mirror.rlen[slot]) < self.spec.window:
+            return False
+        return bool(np.any(mirror.length[slot] >= mirror.cap_rows))
 
     # ------------------------------------------------------------------
     def _logical_bytes_per_seq(self) -> float:
@@ -517,6 +645,10 @@ class Engine:
                 (self.prompt_len + self.max_new) * self.slots)
         results = sorted(sched.results, key=lambda r: r.uid)
         ttfts = [r.ttft_s for r in results if r.finish_reason != "failed"]
+        prefix_stats = None
+        if self._share_state is not None:
+            prefix_stats = dict(self._share_state["stats"])
+            prefix_stats["index_blocks"] = len(self._share_state["index"])
         return ContinuousGenerationResult(
             results=results,
             prefill_seconds=prefill_s,
@@ -532,6 +664,7 @@ class Engine:
             compression_ratio=float(full / max(logical, 1.0)),
             policy_name=self.policy.name,
             spec=spec_stats,
+            prefix=prefix_stats,
             **pool_stats,
         )
 
@@ -543,7 +676,12 @@ class Engine:
     # ------------------------------------------------------------------
     def _start_chunked_admission(self, sched) -> Optional[_ChunkedAdmission]:
         """Begin a chunked admission into the first free slot; heads
-        that can never fit the pool fail immediately."""
+        that can never fit the pool fail immediately. Under prefix
+        sharing the admission first consults the radix index: an exact
+        block-aligned prefix hit adopts the matched pool blocks read-only
+        and streams only the suffix; a near-hit (same template, edited
+        middle) routes through CacheBlend's selective recompute."""
+        share = self._share_state
         while sched.pending:
             free = sched.free_slots()
             if not free:
@@ -554,16 +692,138 @@ class Engine:
                 sched.fail_head()
                 continue
             slot = free[0]
-            sched.begin_prefill(slot)
             self.key, k1 = jax.random.split(self.key)
+            L = len(req.tokens)
             C = self.chunk_len
-            starts = list(range(0, len(req.tokens), C))
-            return _ChunkedAdmission(
-                slot=slot,
-                st=M.init_prefill_state(self.cfg, len(req.tokens)),
+            m = 0
+            adopt_ids: List[int] = []
+            pieces: List[tuple] = []
+            if share is not None and self._share_retained(L):
+                ids, pcs = share["index"].match(req.tokens)
+                m_exact = len(ids) * self.block_len
+                if (share["near_ok"] and m_exact * 2 < L
+                        and share["index"].near_overlap(req.tokens) >= 0.8):
+                    adm = self._start_blend_admission(
+                        sched, slot, req, total, k1, m_exact)
+                    if adm is not None:
+                        return adm
+                # restore length: full matched blocks, snapped down to the
+                # resume alignment (chunked prefill folds attention mass
+                # per MASS_GROUP), capped so >= 1 suffix token remains to
+                # produce the first-token logits
+                m = min(m_exact, L - 1)
+                m -= m % share["align"]
+                if m > 0:
+                    retained = self._share_retained(L)
+                    n_adopt = min(m // self.block_len,
+                                  retained // self.block_len)
+                    adopt_ids = ids[:n_adopt]
+                    pieces = pcs[:m // self.block_len]
+            sched.begin_prefill(slot)
+            if adopt_ids:
+                sched.adopt_blocks(slot, adopt_ids)
+            if m > 0:
+                st = self._restore_scratch(L, m, pieces)
+                starts = list(range(m, L, C))
+            else:
+                st = M.init_prefill_state(self.cfg, L)
+                starts = list(range(0, L, C))
+            adm = _ChunkedAdmission(
+                slot=slot, st=st,
                 segs=[req.tokens[s:s + C] for s in starts],
-                starts=starts, key=k1, total_blocks=total)
+                starts=starts, key=k1, total_blocks=total,
+                granted=len(adopt_ids), restore_m=m,
+                n_adopt=len(adopt_ids))
+            adm.direct = self.paged and self._verbatim_ok(L)
+            return adm
         return None
+
+    def _start_blend_admission(self, sched, slot, req, total, k1,
+                               m_exact: int):
+        """Near-hit admission: CacheBlend recomputes only the high-
+        KV-deviation tokens past the exact prefix and reuses the rest
+        from a full forward's cheap substitute (serving/cacheblend.py),
+        then the K/V tensors are compressed into a regular batch-1 cache
+        (`prefill_from_kv`). Approximate for recompute_frac < 1, so the
+        result is never ingested into the index. Returns None when the
+        exact prefix is too short to anchor the blend."""
+        if m_exact < self.block_len:
+            return None
+        t0 = time.perf_counter()
+        logits, (ks, vs), _ = cacheblend_lib.blend_prefill(
+            self.params, self.cfg, jnp.asarray(req.tokens[None]),
+            [0, m_exact], recompute_frac=self.near_hit)
+        pc = M.prefill_from_kv(
+            self.cfg, self.spec, ks, vs,
+            layer_budgets=jnp.asarray(self.layer_budgets), key=k1)
+        sched.begin_prefill(slot)
+        adm = _ChunkedAdmission(
+            slot=slot, st=None, segs=[], starts=[], key=k1,
+            total_blocks=total, next_i=1, last_logits=logits, pc=pc,
+            blend=True)
+        adm.secs = time.perf_counter() - t0
+        self._share_state["stats"]["near_hits"] += 1
+        return adm
+
+    def _restore_scratch(self, L: int, m: int, pieces) -> M.PrefillState:
+        """Rebuild a prefill scratch whose first `m` rows are the indexed
+        prefix's host pieces — block b of K/V rows + attention mass —
+        so `prefill_chunk` can resume at offset m with only the suffix.
+        Bit-identical to streaming the whole prompt: rows [0, m) of the
+        ingesting run's final scratch are exactly what this prompt's own
+        chunks would have produced (within-segment causality + the
+        canonical mass fold make scratch rows segmentation-invariant)."""
+        empty = M.init_prefill_state(self.cfg, L)
+        k = np.zeros(empty.k.shape, np.asarray(pieces[0][0]).dtype)
+        v = np.zeros_like(k)
+        mass = np.zeros(empty.mass.shape, np.float32)
+        bl = self.block_len
+        for b, (pk, pv, pm) in enumerate(pieces):
+            k[..., b * bl:(b + 1) * bl, :, :] = pk
+            v[..., b * bl:(b + 1) * bl, :, :] = pv
+            mass[..., b * bl:(b + 1) * bl] = pm
+        return M.PrefillState(jnp.asarray(k), jnp.asarray(v),
+                              jnp.asarray(mass))
+
+    def _note_inserted(self, sched, adm: _ChunkedAdmission, share) -> None:
+        """Post-insert sharing bookkeeping: ingest the admission's
+        retained full blocks into the radix index (exact admissions only
+        — a blend cache is approximate), remember the prompt for
+        near-hit detection, admit the host row mirror, and record which
+        leading blocks this slot maps read-only (the CoW watch set)."""
+        slot = adm.slot
+        req = sched.slot_request(slot)
+        L = len(req.tokens)
+        n_ing = 0
+        if not adm.blend:
+            n_ing = self._share_retained(L) // self.block_len
+            if n_ing > 0:
+                bl = self.block_len
+                # host copies of the final scratch rows, block-sliced:
+                # the index outlives the (donated) device scratch
+                k = np.asarray(adm.st.k)
+                v = np.asarray(adm.st.v)
+                ms = np.asarray(adm.st.mass)
+                pieces = [(k[..., b * bl:(b + 1) * bl, :, :],
+                           v[..., b * bl:(b + 1) * bl, :, :],
+                           ms[..., b * bl:(b + 1) * bl])
+                          for b in range(n_ing)]
+                share["stats"]["ingested_blocks"] += share["index"].ingest(
+                    req.tokens, sched.slot_blocks(slot)[:n_ing], pieces,
+                    self.block_allocator)
+        share["index"].note_prompt(req.tokens)
+        share["mirror"].admit(slot, L)
+        # CoW watch set: every leading block the index now references —
+        # adopted blocks AND the slot's own freshly ingested ones (the
+        # index holds a ref either way, so an evict flush into them
+        # would corrupt the cached prefix for every later adopter)
+        n_watch = max(adm.n_adopt, n_ing)
+        if n_watch > 0:
+            share["upto"][slot] = n_watch
+        if adm.n_adopt > 0:
+            share["stats"]["warm_hits"] += 1
+        elif not adm.blend:
+            share["stats"]["cold"] += 1
 
     def _advance_chunked_admission(self, adm: _ChunkedAdmission, sched,
                                    cache, lb, *, run_all: bool):
@@ -579,10 +839,12 @@ class Engine:
         stall."""
         t0 = time.perf_counter()
         first = None
+        cur = adm
         while adm is not None:
             i = adm.next_i
             if i == len(adm.segs):        # compress the scratch
-                adm.pc = self._finalize(adm.st, lb, adm.key)
+                adm.pc = (self._finalize_meta(adm.st, lb) if adm.direct
+                          else self._finalize(adm.st, lb, adm.key))
                 adm.next_i += 1
                 if run_all:
                     continue
@@ -610,10 +872,14 @@ class Engine:
                     ids = np.full(self.n_max_blocks, -1, np.int32)
                     got = sched.slot_blocks(slot)
                     ids[:len(got)] = got
-                    cache = self._insert(cache, adm.pc, jnp.int32(slot),
-                                         jnp.asarray(ids))
+                    ins = self._insert_meta if adm.direct else self._insert
+                    cache = ins(cache, adm.pc, jnp.int32(slot),
+                                jnp.asarray(ids), jnp.int32(adm.n_adopt))
                 else:
                     cache = self._insert(cache, adm.pc, jnp.int32(slot))
+                share = self._share_state
+                if share is not None:
+                    self._note_inserted(sched, adm, share)
                 sched.finish_prefill(slot)
                 first = (slot, tok)
                 adm = None
@@ -638,10 +904,33 @@ class Engine:
             adm.last_logits, adm.st = self._chunk_step(
                 self.params, adm.st, jnp.asarray(adm.segs[i][None]),
                 jnp.int32(adm.starts[i]))
+            if adm.direct:
+                # prefill-direct: this segment's exact K/V rows go
+                # straight into the slot's granted blocks (metadata-only
+                # insert later); restored prefix rows are already
+                # resident, so only the suffix ever hits the pool
+                c0a = adm.starts[i]
+                c1a = c0a + len(adm.segs[i])
+                got = sched.slot_blocks(adm.slot)
+                bl = self.block_len
+                rows = np.asarray(
+                    [got[t // bl] * bl + t % bl for t in range(c0a, c1a)],
+                    np.int32)
+                cache = self._write_rows(
+                    cache, jnp.asarray(rows),
+                    adm.st.k[:, :, :, c0a:c1a], adm.st.v[:, :, :, c0a:c1a])
             adm.next_i += 1
             if not run_all:
                 break
-        return cache, adm, first, time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if cur is not None:
+            cur.secs += dt
+            if first is not None and self._share_state is not None:
+                stats = self._share_state["stats"]
+                warm = cur.restore_m > 0 or cur.blend
+                stats["warm_prefill_s" if warm else
+                      "cold_prefill_s"].append(cur.secs)
+        return cache, adm, first, dt
 
     # ------------------------------------------------------------------
     # Continuous batching
@@ -674,7 +963,7 @@ class Engine:
             raise ValueError(
                 f"bucket {max(int(b) for b in buckets)} exceeds engine "
                 f"prompt_len {self.prompt_len}")
-        if buckets and self.chunked_prefill:
+        if buckets and (self.chunked_prefill or self.prefix_sharing):
             bad = [int(b) for b in buckets if int(b) % MASS_GROUP]
             if bad:
                 raise ValueError(
@@ -704,6 +993,43 @@ class Engine:
                     f"request max_new {r.max_new} exceeds engine headroom "
                     f"{self.max_new}")
             sched.submit(r)
+
+        # sharing routes every admission through the chunked machinery
+        # (a warm hit is a chunked prefill resumed at the match offset);
+        # the chunked == monolithic bit-identity contract keeps streams
+        # unchanged for runs that never hit the index
+        use_adm = self.chunked_prefill or (self.paged and self.prefix_sharing)
+        self._share_state = None
+        if self.paged and self.prefix_sharing:
+            index = prefix_lib.PrefixIndex(
+                self.block_len,
+                align=math.lcm(self.block_len, MASS_GROUP))
+            self._share_state = dict(
+                index=index,
+                mirror=spec_lib.CacheMirror(
+                    self.spec, self.layer_budgets, self._S_phys,
+                    self.slots),
+                upto={},            # slot -> leading blocks mapped shared
+                align=math.lcm(self.block_len, MASS_GROUP),
+                near_ok=(self.near_hit > 0
+                         and self.spec.policy == "none"
+                         and M.sb_layout(self.cfg)[0] == 1),
+                stats=dict(warm_hits=0, cold=0, near_hits=0, cow_copies=0,
+                           ingested_blocks=0, evicted_blocks=0,
+                           warm_prefill_s=[], cold_prefill_s=[]),
+            )
+
+            def _reclaim(shortfall: int) -> None:
+                freed = index.evict(shortfall, self.block_allocator)
+                self._share_state["stats"]["evicted_blocks"] += len(freed)
+                sched.release(-1, freed)
+
+            sched.reclaim = _reclaim
+
+        def share_retire(slot_idx: int) -> None:
+            if self._share_state is not None:
+                self._share_state["upto"].pop(slot_idx, None)
+                self._share_state["mirror"].reset(slot_idx)
 
         cache = M.init_cache(
             self.cfg, self.spec, self.slots, self.prompt_len + self.max_new,
@@ -766,7 +1092,7 @@ class Engine:
                     got = sched.slot_blocks(slot_idx)
                     ids[:len(got)] = got
                     cache = self._insert(cache, pc, jnp.int32(slot_idx),
-                                         jnp.asarray(ids))
+                                         jnp.asarray(ids), jnp.int32(0))
                 else:
                     cache = self._insert(cache, pc, jnp.int32(slot_idx))
                 clean_slots.discard(slot_idx)
@@ -803,7 +1129,7 @@ class Engine:
                         first[0], len(sched.slot_request(first[0]).tokens))
             return first
 
-        if not self.chunked_prefill:
+        if not use_adm:
             for i in range(self.slots):
                 admit_into(i)
 
@@ -828,7 +1154,7 @@ class Engine:
         loop_t0 = time.perf_counter()
         prefill_at_loop = prefill_s
         while True:
-            if self.chunked_prefill and adm is None:
+            if use_adm and adm is None:
                 adm = self._start_chunked_admission(sched)
             active = sched.active_slots()
             if lazy_mirror is not None and active:
@@ -870,17 +1196,84 @@ class Engine:
                             s, int(jax.device_get(first_pending[1])[0]))
                         first_pending = None
                     sched.retire(s, reason or "oom")
+                    share_retire(s)
                     cache = self._reset(cache, jnp.int32(s))
                     clean_slots.add(s)
                     lazy_mirror.reset(s)
                     active.remove(s)
-                    if sched.pending and not self.chunked_prefill:
+                    if sched.pending and not use_adm:
                         for i in sched.free_slots():
                             if not sched.pending or not admit_into(i):
                                 break
                             tok_in = tok_in.at[i].set(int(next_tok[i]))
                             active.append(i)
                             worklist.append(i)
+            share = self._share_state
+            if share is not None and active:
+                # copy-on-write: a slot whose next append could flush an
+                # eviction into its adopted (shared, read-only) prefix
+                # blocks un-shares them first — fresh exclusive blocks,
+                # device-side row copy, table rewrite. Conservative: all
+                # leading shared blocks swap at once (eviction targets
+                # are data-dependent; the host only tracks row counts).
+                for s in [s for s in list(active) if share["upto"].get(s)]:
+                    if not self._cow_due(share["mirror"], s):
+                        continue
+                    n_watch = share["upto"][s]
+                    res = sched.cow_swap(s, n_watch)
+                    if res is None:
+                        # pool can't cover the full un-share. A copy is
+                        # only *required* for blocks another resident
+                        # slot maps (refcount >= 3: slot + index +
+                        # other); blocks the index alone shares are
+                        # disowned instead — the prompt cache pays, the
+                        # slot becomes their sole owner in place.
+                        # Refcounts fall monotonically with trie depth
+                        # (a slot mapping block d maps every ancestor),
+                        # so the must-copy set is a prefix.
+                        ids_w = sched.slot_blocks(s)[:n_watch]
+                        rc = self.block_allocator.refcount
+                        n_copy = 0
+                        while (n_copy < n_watch
+                               and rc(ids_w[n_copy]) >= 3):
+                            n_copy += 1
+                        dropped = share["index"].disown(ids_w[n_copy:])
+                        share["stats"]["evicted_blocks"] += len(dropped)
+                        sched.release(-1, dropped)
+                        res = (([], []) if n_copy == 0
+                               else sched.cow_swap(s, n_copy))
+                    if res is not None:
+                        old, new = res
+                        if new:
+                            cache = self._copy_blocks(
+                                cache, jnp.asarray(old, jnp.int32),
+                                jnp.asarray(new, jnp.int32))
+                            cache = self._grow_tbl(
+                                cache, jnp.int32(s), jnp.int32(0),
+                                jnp.asarray(new, jnp.int32))
+                            share["stats"]["cow_copies"] += 1
+                        share["upto"].pop(s)
+                        continue
+                    # pool can't cover the un-share: retire "oom" (same
+                    # pending-token bookkeeping as the lazy starve path)
+                    reason = None
+                    if pending is not None and s in pending[1]:
+                        ptok, pvalid = pending
+                        decode_tokens += 1
+                        reason = sched.record_token(
+                            s, int(np.asarray(ptok)[s]))
+                        pvalid.remove(s)
+                    elif first_pending is not None and first_pending[0] == s:
+                        reason = sched.record_token(
+                            s, int(jax.device_get(first_pending[1])[0]))
+                        first_pending = None
+                    sched.retire(s, reason or "oom")
+                    share_retire(s)
+                    cache = self._reset(cache, jnp.int32(s))
+                    clean_slots.add(s)
+                    if lazy_mirror is not None:
+                        lazy_mirror.reset(s)
+                    active.remove(s)
             new_pending = None
             if active:
                 self.key, k2 = jax.random.split(self.key)
@@ -892,6 +1285,9 @@ class Engine:
                 if lazy_mirror is not None:
                     for s in active:
                         lazy_mirror.append(s, 1)
+                if share is not None:
+                    for s in active:
+                        share["mirror"].append(s, 1)
             if first_pending is not None:
                 # fetch last iteration's first token (its compute has
                 # drained behind this iteration's dispatch by now)
@@ -901,6 +1297,7 @@ class Engine:
                 reason = sched.record_token(slot0, tok_i)
                 if reason is not None:
                     sched.retire(slot0, reason)      # 1-token request
+                    share_retire(slot0)
                     if new_pending is not None and slot0 in new_pending[1]:
                         new_pending[1].remove(slot0)
                     cache = self._reset(cache, jnp.int32(slot0))
@@ -911,7 +1308,7 @@ class Engine:
             # step; with nothing decoding there is nothing to stall, so
             # the remaining steps stream through back-to-back
             first = (advance_admission(run_all=not active)
-                     if self.chunked_prefill else None)
+                     if use_adm else None)
             if first is not None:
                 # the slot joins the next dispatch with its first token —
                 # device-to-device; the host fetch + record are deferred
@@ -932,10 +1329,11 @@ class Engine:
                     reason = sched.record_token(i, toks[i])
                     if reason is not None:
                         sched.retire(i, reason)
+                        share_retire(i)
                         retired_any = True
                         if new_pending is not None and i in new_pending[1]:
                             new_pending[1].remove(i)
-                        if self.chunked_prefill:
+                        if use_adm:
                             # admissions restart at the top of the loop;
                             # clear the slot now so its garbage appends
                             # can't route through a stale block table
@@ -945,7 +1343,7 @@ class Engine:
                         elif admit_into(i):
                             admitted.append(i)
                 if (self.paged and retired_any and sched.pending
-                        and not self.chunked_prefill):
+                        and not use_adm):
                     # a retire frees *blocks*, not just its own slot: a
                     # different slot that was refused admission while the
                     # pool was exhausted may fit now. Admission is FIFO,

@@ -137,6 +137,10 @@ class Scheduler:
         self._block_need = block_need
         self._clock = clock
         self.admission_order = admission_order
+        # optional pressure valve: called with the block shortfall when an
+        # allocation fails, expected to drop lingering references (prefix-
+        # index LRU eviction) so a retry can succeed
+        self.reclaim: Optional[Callable[[int], None]] = None
         self._queue: Deque[Tuple[Request, float]] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
         self.results: List[RequestResult] = []
@@ -214,7 +218,7 @@ class Scheduler:
         blocks: List[int] = []
         if self.allocator is not None:
             need = self._block_need(self._queue[self._head_idx()][0])
-            got = self.allocator.alloc(need)
+            got = self._alloc(need)
             if got is None:
                 return None            # pool exhausted: wait for a retire
             blocks = got
@@ -259,11 +263,55 @@ class Scheduler:
             raise ValueError(f"slot {slot_idx} is empty")
         if self.allocator is None or n <= 0:
             return True
-        got = self.allocator.alloc(n)
+        got = self._alloc(n)
         if got is None:
             return False
         st.blocks.extend(got)
         return True
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate with one reclaim retry: under pool pressure, ask the
+        `reclaim` hook to drop lingering prefix-index references before
+        giving up — resident requests always outrank the prompt cache."""
+        got = self.allocator.alloc(n)
+        if got is None and self.reclaim is not None:
+            self.reclaim(n - self.allocator.available)
+            got = self.allocator.alloc(n)
+        return got
+
+    def adopt_blocks(self, slot_idx: int, ids: Sequence[int]) -> None:
+        """Map already-allocated blocks (a matched prefix from the index)
+        into an occupied slot read-only: takes a reference per id and
+        appends them to the slot's grant list. Called right after
+        `begin_prefill`, before any suffix grant, so table order stays
+        [shared prefix | owned suffix]."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        if not ids:
+            return
+        assert not st.blocks, "adopt before any suffix grant"
+        self.allocator.incref(ids)
+        st.blocks.extend(ids)
+
+    def cow_swap(self, slot_idx: int, n: int
+                 ) -> Optional[Tuple[List[int], List[int]]]:
+        """Copy-on-write: replace the slot's first `n` blocks (shared,
+        adopted read-only) with freshly allocated exclusive ids, dropping
+        this slot's references to the old ones (the index keeps its own).
+        Returns (old_ids, new_ids) for the device-side row copy + table
+        rewrite, or None when the pool can't cover the copies."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        assert 0 < n <= len(st.blocks), (n, len(st.blocks))
+        new = self._alloc(n)
+        if new is None:
+            return None
+        old = st.blocks[:n]
+        st.blocks[:n] = new
+        self.release(slot_idx, old)
+        return old, new
 
     def release(self, slot_idx: int, ids: Sequence[int]) -> None:
         """Single choke point: every block returned to the allocator —

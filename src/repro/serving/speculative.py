@@ -375,7 +375,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                 got = sched.slot_blocks(slot)
                 ids[:len(got)] = got
                 cache = eng._insert(cache, pc, jnp.int32(slot),
-                                    jnp.asarray(ids))
+                                    jnp.asarray(ids), jnp.int32(0))
             else:
                 cache = eng._insert(cache, pc, jnp.int32(slot))
             clean.discard(slot)

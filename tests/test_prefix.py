@@ -1,0 +1,462 @@
+"""Cross-request prefix caching over the paged pool: refcounted
+allocator invariants, the radix index, copy-on-write un-sharing, and the
+serving contract — greedy token streams with sharing ON are bit-identical
+to sharing OFF (full + kivi2, monolithic + chunked admission, dense
+oracle + Pallas kernel paths), with warm hits actually exercised.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as C
+from repro.core import paging as P
+from repro.core.cache import CacheSpec
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, Request
+from repro.serving.prefix import PrefixIndex
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_lifecycle():
+    a = P.BlockAllocator(4)
+    ids = a.alloc(2)
+    assert all(a.refcount(i) == 1 for i in ids)
+    a.incref(ids)                       # second owner (the prefix index)
+    assert all(a.refcount(i) == 2 for i in ids)
+    a.free(ids)                         # first owner drops: still held
+    assert all(a.refcount(i) == 1 for i in ids)
+    assert a.available == 2             # not recycled yet
+    a.free(ids)                         # last owner drops: recycled
+    assert a.available == 4
+    assert all(a.refcount(i) == 0 for i in ids)
+
+
+def test_refcount_free_past_zero_raises():
+    a = P.BlockAllocator(2)
+    ids = a.alloc(1)
+    a.free(ids)
+    with pytest.raises(ValueError):
+        a.free(ids)
+
+
+def test_refcount_incref_unallocated_raises():
+    a = P.BlockAllocator(2)
+    with pytest.raises(ValueError):
+        a.incref([0])
+
+
+def test_exhaustion_with_lingering_refs():
+    """Blocks held only by the index (refcount 1 after their slot
+    retired) still occupy the pool — allocation must fail until they are
+    explicitly released."""
+    a = P.BlockAllocator(4)
+    ids = a.alloc(4)
+    a.incref(ids)                       # index reference
+    a.free(ids)                         # slot retires
+    assert a.available == 0             # lingering, not free
+    assert a.alloc(1) is None
+    a.free(ids[:2])                     # index evicts two
+    assert a.alloc(2) is not None
+    assert a.alloc(1) is None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: adopt / cow_swap / reclaim through the release seam
+# ---------------------------------------------------------------------------
+
+
+def _mini_sched(pool=8, need=4):
+    alloc = P.BlockAllocator(pool)
+    sched = Scheduler((8,), 2, allocator=alloc, block_need=lambda r: need)
+    return alloc, sched
+
+
+def test_adopt_and_cow_swap():
+    alloc, sched = _mini_sched()
+    index_ids = alloc.alloc(2)          # "the index's" blocks
+    sched.submit(Request(tokens=np.zeros(8, np.int32), max_new=4))
+    sched.begin_prefill(0)
+    sched.adopt_blocks(0, index_ids)    # read-only mapping: +1 ref each
+    assert all(alloc.refcount(i) == 2 for i in index_ids)
+    assert sched.grant_blocks(0, 2)     # owned suffix
+    old, new = sched.cow_swap(0, 2)
+    assert old == index_ids
+    assert all(alloc.refcount(i) == 1 for i in old)    # index keeps its ref
+    assert sched.slot_blocks(0)[:2] == new             # table order kept
+    sched.finish_prefill(0)
+    sched.record_token(0, 1)
+    sched.retire(0, "length")
+    # retire releases only the slot's 4 exclusive blocks
+    assert all(alloc.refcount(i) == 1 for i in index_ids)
+    assert alloc.available == 6
+
+
+def test_cow_swap_refuses_when_pool_exhausted():
+    alloc, sched = _mini_sched(pool=4)
+    index_ids = alloc.alloc(2)
+    sched.submit(Request(tokens=np.zeros(8, np.int32), max_new=4))
+    sched.begin_prefill(0)
+    sched.adopt_blocks(0, index_ids)
+    assert sched.grant_blocks(0, 2)     # pool now empty
+    assert sched.cow_swap(0, 2) is None
+    assert sched.slot_blocks(0)[:2] == index_ids       # untouched
+
+
+def test_reclaim_hook_retries_allocation():
+    alloc, sched = _mini_sched(pool=4, need=2)
+    lingering = alloc.alloc(3)          # index-only blocks fill the pool
+    shortfalls = []
+
+    def reclaim(n):
+        shortfalls.append(n)
+        alloc.free(lingering[:2])
+
+    sched.reclaim = reclaim
+    sched.submit(Request(tokens=np.zeros(8, np.int32), max_new=4))
+    assert sched.admit_next(0) is not None
+    assert shortfalls == [1]
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex (host radix trie)
+# ---------------------------------------------------------------------------
+
+
+def _toks(*blocks):
+    return np.concatenate([np.full(4, b, np.int32) for b in blocks])
+
+
+def test_index_match_ingest_evict():
+    a = P.BlockAllocator(16)
+    idx = PrefixIndex(4)
+    t1 = _toks(1, 2, 3)
+    ids1 = a.alloc(3)
+    assert idx.ingest(t1, ids1, [("p", b) for b in range(3)], a) == 3
+    assert all(a.refcount(i) == 2 for i in ids1)
+    # longest-prefix match, block granularity
+    got, pieces = idx.match(_toks(1, 2, 9))
+    assert got == ids1[:2] and pieces[1] == ("p", 1)
+    assert idx.match(_toks(9, 9, 9))[0] == []
+    # first writer wins: re-ingesting the shared path adds only the fork
+    t2 = _toks(1, 2, 7)
+    ids2 = a.alloc(3)
+    assert idx.ingest(t2, ids2, [("q", b) for b in range(3)], a) == 1
+    assert a.refcount(ids2[0]) == 1     # its own copy stayed slot-only
+    # slots retire: every indexed block lingers at refcount 1
+    a.free(ids1)
+    a.free(ids2)
+    assert len(idx) == 4
+    # eviction is LRU + leaf-only: the un-indexed blocks free instantly,
+    # path interiors only after their children go
+    freed = idx.evict(10, a)
+    assert len(freed) == 4 and len(idx) == 0
+    a.free(freed)                       # caller drops the index's refs
+    assert a.available == 16
+
+
+def test_index_evict_skips_blocks_mapped_by_slots():
+    a = P.BlockAllocator(8)
+    idx = PrefixIndex(4)
+    ids = a.alloc(2)
+    idx.ingest(_toks(1, 2), ids, [None, None], a)
+    # a resident slot still maps both blocks (refcount 2): nothing to drop
+    assert idx.evict(2, a) == []
+    a.free(ids)                         # slot retires
+    assert sorted(idx.evict(2, a)) == sorted(ids)
+
+
+def test_index_disown_cascades_to_unreachable_children():
+    a = P.BlockAllocator(8)
+    idx = PrefixIndex(4)
+    ids = a.alloc(3)
+    idx.ingest(_toks(1, 2, 3), ids, [None] * 3, a)
+    dropped = idx.disown(ids[1:2])      # middle node: child 2 unreachable
+    assert sorted(dropped) == sorted(ids[1:])
+    assert len(idx) == 1
+    assert idx.match(_toks(1, 2, 3))[0] == ids[:1]
+
+
+def test_index_near_overlap():
+    idx = PrefixIndex(4, max_recent=2)
+    base = np.arange(16, dtype=np.int32)
+    idx.note_prompt(base)
+    edited = base.copy()
+    edited[5] = 99
+    assert idx.near_overlap(edited) == pytest.approx(15 / 16)
+    assert idx.near_overlap(np.arange(8, dtype=np.int32)) == 0.0
+    idx.note_prompt(base)               # dedup: still one entry
+    assert len(idx._recent) == 1
+
+
+# ---------------------------------------------------------------------------
+# Paged device ops: multi-mapped blocks, metadata-only insert, block copy
+# ---------------------------------------------------------------------------
+
+
+def test_shared_blocks_gather_identically_and_copy_preserves():
+    """Two slots whose tables map the *same* physical blocks materialize
+    identical rows (`pool_write=False` insert maps without writing);
+    `copy_pool_blocks` then clones the rows so a table rewrite to the
+    copies gathers the same bits."""
+    spec = CacheSpec(budget=16, window=0, policy="streaming", bits=16,
+                     group=8, recent_protect=8)
+    B, H, D, max_len, bl = 2, 2, 8, 16, 8
+    S = spec.main_store_len(max_len)
+    n_max = S // bl
+    pg = P.stacked_paged_kv(spec, 1, B, max_len, H, D,
+                            n_blocks=2 * n_max + 2, block_len=bl)
+    one = C.init_layer_kv(spec, 1, max_len, H, D)
+    kk = jax.random.normal(jax.random.key(0), (1, S, H, D), jnp.float32)
+    one = one._replace(
+        k=kk.astype(one.k.dtype), v=(kk * 2).astype(one.v.dtype),
+        scores=jnp.abs(kk[..., 0, 0]), slot_pos=jnp.arange(S)[None],
+        length=jnp.full((1,), S, jnp.int32), pos=jnp.full((1,), S, jnp.int32))
+    pre = jax.tree.map(lambda x: x[None].copy(), one)
+    pre = pre._replace(budget=pg.budget)
+    ids = jnp.arange(n_max, dtype=jnp.int32)
+    pg = P.insert_request_paged(pg, jnp.int32(0), pre, ids, batch_axis=1)
+    # slot 1 maps the SAME blocks, pool untouched (metadata-only insert)
+    before = np.asarray(pg.pk)
+    pg = P.insert_request_paged(pg, jnp.int32(1), pre, ids, batch_axis=1,
+                                pool_write=False)
+    np.testing.assert_array_equal(before, np.asarray(pg.pk))
+    g = P.gather_dense(jax.tree.map(lambda t: t[0], pg), spec)
+    np.testing.assert_array_equal(np.asarray(g.k)[0], np.asarray(g.k)[1])
+    np.testing.assert_array_equal(np.asarray(g.v)[0], np.asarray(g.v)[1])
+    # copy-on-write: clone rows into fresh blocks, repoint slot 1
+    dst = jnp.arange(n_max, dtype=jnp.int32) + n_max
+    pg2 = P.copy_pool_blocks(pg, ids, dst, batch_axis=1)
+    pg2 = P.write_block_table(pg2, jnp.int32(1), jnp.int32(0), dst,
+                              batch_axis=1)
+    g2 = P.gather_dense(jax.tree.map(lambda t: t[0], pg2), spec)
+    np.testing.assert_array_equal(np.asarray(g.k)[1], np.asarray(g2.k)[1])
+    np.testing.assert_array_equal(np.asarray(g.v)[1], np.asarray(g2.v)[1])
+
+
+def test_insert_n_skip_leaves_leading_blocks_untouched():
+    spec = CacheSpec(budget=16, window=0, policy="streaming", bits=16,
+                     group=8, recent_protect=8)
+    B, H, D, max_len, bl = 1, 2, 8, 16, 8
+    S = spec.main_store_len(max_len)
+    n_max = S // bl
+    pg = P.stacked_paged_kv(spec, 1, B, max_len, H, D,
+                            n_blocks=n_max, block_len=bl)
+    one = C.init_layer_kv(spec, 1, max_len, H, D)
+    kk = jax.random.normal(jax.random.key(1), (1, S, H, D), jnp.float32)
+    one = one._replace(k=kk.astype(one.k.dtype),
+                       v=(kk * 2).astype(one.v.dtype),
+                       slot_pos=jnp.arange(S)[None],
+                       length=jnp.full((1,), S, jnp.int32),
+                       pos=jnp.full((1,), S, jnp.int32))
+    pre = jax.tree.map(lambda x: x[None].copy(), one)
+    pre = pre._replace(budget=pg.budget)
+    ids = jnp.arange(n_max, dtype=jnp.int32)
+    before = np.asarray(pg.pk).copy()
+    pg2 = P.insert_request_paged(pg, jnp.int32(0), pre, ids, batch_axis=1,
+                                 n_skip=1)
+    after = np.asarray(pg2.pk)
+    np.testing.assert_array_equal(before[:, 0], after[:, 0])   # skipped
+    assert (after[:, 1] != before[:, 1]).any()                 # written
+    assert (np.asarray(pg2.block_tbl)[:, 0, :n_max] ==
+            np.asarray(ids)).all()                             # still mapped
+
+
+# ---------------------------------------------------------------------------
+# Serving contract: sharing ON == sharing OFF, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _templated_prompts(cfg, n, L, seed=1, shared_frac=0.5):
+    rng = np.random.default_rng(seed)
+    m = int(L * shared_frac)
+    shared = rng.integers(0, cfg.vocab_size, size=m).astype(np.int32)
+    return [np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, size=L - m).astype(np.int32)]) for _ in range(n)]
+
+
+def _run(cfg, params, pname, *, share, chunked=False, near=0.0, L=64,
+         new=16, slots=2, prompts=None, use_kernels=None, pool_blocks=None,
+         block_growth="eager"):
+    pol = presets(budget=64, window=8)[pname]
+    eng = Engine(cfg, params, pol, prompt_len=L, max_new=new, slots=slots,
+                 paged=True, block_len=8, chunked_prefill=chunked,
+                 chunk_len=16, prefix_sharing=share,
+                 near_hit=near if share else 0.0, use_kernels=use_kernels,
+                 pool_blocks=pool_blocks, block_growth=block_growth)
+    reqs = [Request(tokens=p, max_new=new) for p in prompts]
+    return eng.generate_continuous(reqs)
+
+
+def _assert_equal(res_off, res_on, label):
+    assert len(res_off.results) == len(res_on.results)
+    for a, b in zip(res_off.results, res_on.results):
+        np.testing.assert_array_equal(
+            a.tokens, b.tokens,
+            err_msg=f"{label}: sharing changed the token stream")
+        assert a.finish_reason == b.finish_reason
+
+
+# fast covering cases: verbatim dense policy on monolithic admission,
+# quantized streaming policy through the chunked machinery (CoW fires)
+FAST_GRID = [("full", False), ("kivi2", True)]
+FULL_GRID = [(p, c) for p in ("full", "kivi2") for c in (False, True)]
+
+
+@pytest.mark.parametrize("pname,chunked", FAST_GRID,
+                         ids=lambda v: str(v))
+def test_sharing_streams_identical(small_model, pname, chunked):
+    cfg, params = small_model
+    prompts = _templated_prompts(cfg, 6, 64)
+    off = _run(cfg, params, pname, share=False, chunked=chunked,
+               prompts=prompts)
+    on = _run(cfg, params, pname, share=True, chunked=chunked,
+              prompts=prompts)
+    _assert_equal(off, on, f"{pname}/chunked={chunked}")
+    assert on.prefix["warm_hits"] >= 3          # sharing actually engaged
+    assert on.prefix["ingested_blocks"] > 0
+    if pname == "kivi2":
+        # evict-at-cap flushes force un-sharing mid-decode
+        assert on.prefix["cow_copies"] >= 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pname,chunked", FULL_GRID, ids=lambda v: str(v))
+def test_sharing_streams_identical_full_grid(small_model, pname, chunked):
+    cfg, params = small_model
+    prompts = _templated_prompts(cfg, 6, 64)
+    off = _run(cfg, params, pname, share=False, chunked=chunked,
+               prompts=prompts)
+    on = _run(cfg, params, pname, share=True, chunked=chunked,
+              prompts=prompts)
+    _assert_equal(off, on, f"{pname}/chunked={chunked}")
+    assert on.prefix["warm_hits"] >= 3
+
+
+@pytest.mark.slow
+def test_sharing_streams_identical_kernel_path(small_model):
+    """Pallas decode/prefill kernels (interpret mode on CPU) over shared
+    block tables: multi-mapped blocks read identically through the fused
+    path too."""
+    cfg, params = small_model
+    prompts = _templated_prompts(cfg, 4, 64)
+    off = _run(cfg, params, "full", share=False, prompts=prompts,
+               use_kernels=True, new=8)
+    on = _run(cfg, params, "full", share=True, prompts=prompts,
+              use_kernels=True, new=8)
+    _assert_equal(off, on, "kernel path")
+    assert on.prefix["warm_hits"] >= 2
+
+
+def test_sharing_under_pool_pressure(small_model):
+    """A pool sized for the resident slots alone forces lingering index
+    blocks out via the reclaim hook; streams still match sharing-off on
+    the same pool."""
+    cfg, params = small_model
+    prompts = _templated_prompts(cfg, 6, 64)
+    pool = 2 * ((64 + 16) // 8)         # exactly two full grants
+    off = _run(cfg, params, "full", share=False, prompts=prompts,
+               pool_blocks=pool)
+    on = _run(cfg, params, "full", share=True, prompts=prompts,
+              pool_blocks=pool)
+    _assert_equal(off, on, "pool pressure")
+    assert on.prefix["evicted_blocks"] > 0
+    assert on.prefix["warm_hits"] >= 1
+
+
+def test_sharing_with_lazy_growth(small_model):
+    cfg, params = small_model
+    prompts = _templated_prompts(cfg, 5, 64)
+    off = _run(cfg, params, "full", share=False, prompts=prompts,
+               block_growth="lazy")
+    on = _run(cfg, params, "full", share=True, prompts=prompts,
+              block_growth="lazy")
+    _assert_equal(off, on, "lazy growth")
+    assert on.prefix["warm_hits"] >= 1
+
+
+def test_score_policy_refuses_sharing(small_model):
+    """Score-carrying eviction (h2o) orders rows data-dependently: the
+    index never matches or ingests, and streams are untouched."""
+    cfg, params = small_model
+    prompts = _templated_prompts(cfg, 4, 64)
+    off = _run(cfg, params, "h2o", share=False, prompts=prompts, new=8)
+    on = _run(cfg, params, "h2o", share=True, prompts=prompts, new=8)
+    _assert_equal(off, on, "h2o refuses")
+    assert on.prefix["warm_hits"] == 0
+    assert on.prefix["ingested_blocks"] == 0
+
+
+def test_direct_insert_parity(small_model):
+    """Prefill-direct (verbatim policy, chunked): segment rows stream
+    straight into pool blocks + metadata-only insert == the monolithic
+    dense-scatter insert, bit for bit."""
+    cfg, params = small_model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+               for _ in range(4)]
+    mono = _run(cfg, params, "full", share=False, chunked=False,
+                prompts=prompts, new=8)
+    direct = _run(cfg, params, "full", share=False, chunked=True,
+                  prompts=prompts, new=8)
+    _assert_equal(mono, direct, "prefill-direct")
+
+
+def test_near_hit_blend_exact_at_full_recompute(small_model):
+    """recompute_frac=1.0 makes CacheBlend recompute every non-prefix
+    token — the blended cache is exact, so streams match sharing-off."""
+    cfg, params = small_model
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+    edited = base.copy()
+    edited[8:12] = rng.integers(0, cfg.vocab_size, size=4)
+    prompts = [base, edited]
+    off = _run(cfg, params, "full", share=False, prompts=prompts, new=8)
+    on = _run(cfg, params, "full", share=True, near=1.0, prompts=prompts,
+              new=8)
+    _assert_equal(off, on, "near-hit frac=1.0")
+    assert on.prefix["near_hits"] == 1
+
+
+def test_near_hit_blend_approx_smoke(small_model):
+    """recompute_frac<1 is approximate by design: the run completes, the
+    near-hit is detected, and the blended request still emits max_new
+    tokens (never ingested back into the index)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+    edited = base.copy()
+    edited[8:12] = rng.integers(0, cfg.vocab_size, size=4)
+    on = _run(cfg, params, "full", share=True, near=0.25,
+              prompts=[base, edited], new=8)
+    assert on.prefix["near_hits"] == 1
+    assert all(r.finish_reason == "length" for r in on.results)
+    assert all(r.n_tokens == 8 for r in on.results)
+
+
+def test_ctor_validations(small_model):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    with pytest.raises(ValueError, match="requires paged"):
+        Engine(cfg, params, pol, prompt_len=64, max_new=4,
+               prefix_sharing=True)
+    with pytest.raises(ValueError, match="near_hit requires"):
+        Engine(cfg, params, pol, prompt_len=64, max_new=4, paged=True,
+               near_hit=0.5)
+    with pytest.raises(ValueError, match="speculative"):
+        Engine(cfg, params, pol, prompt_len=64, max_new=4, paged=True,
+               prefix_sharing=True, speculative=True)
