@@ -32,6 +32,13 @@ max_new + slack) vs observed peak blocks for an early-terminating
 request — the per-sequence pool bytes a request actually pins, and the
 seqs/GB that buys.
 
+Overload report (`--prompt-mix overload`): a 2x-oversubscribed paged
+pool served with the overload ladder (pressure degradation -> preemption
+with recompute-on-resume) on vs off — completion/failure counts, goodput
+over completed requests, preemption/retry/degrade counts, and the pool
+invariant audit (ladder-on must complete 100% where ladder-off fails
+>= 1 request; asserted under --check).
+
 Prefix-sharing report (`--prompt-mix templated`): N requests sharing a
 512-token system prompt served with the radix prefix cache on vs off —
 warm admissions prefill only their unique tail and map the shared
@@ -373,6 +380,83 @@ def prefix_sharing_report(*, requests=6, sys_len=512, tail_len=64,
     }
 
 
+def overload_report(budget, window, *, block_len=16, slots=4,
+                    requests=8, max_new=24):
+    """2x-oversubscribed paged pool, overload ladder on vs off.
+
+    The pool is sized from the engine's own block math so the workload
+    is *genuinely* oversubscribed under lazy growth: big enough that
+    two prompts admit side by side (and any one request fits an empty
+    pool), too small for both residents' decode growth to complete —
+    so admissions and mid-decode growth both starve. Ladder off, a
+    starved admission with nothing resident fails and a starved
+    resident retires "oom". Ladder on (pressure degradation +
+    preemption with recompute-on-resume), starved work degrades
+    resident quantized slots first, then preempts the least-progressed
+    slot and requeues it; a request only fails if it cannot fit an
+    *empty* pool — so every request completes, at the cost of
+    recompute (preemptions/retries reported). Goodput counts only
+    completed requests' tokens."""
+    cfg, params = bench_model(n_layers=2, d_model=128, train_steps=0)
+    L = min(BUCKETS)
+    # Eviction-free budget: retention never drops rows during the run,
+    # so resident block need grows monotonically to prompt + max_new and
+    # the pool pressure is *persistent* — with a budget-evicting config
+    # residents plateau and even release blocks as old groups retire,
+    # which lets the ladder-off arm retry its way out of the contention
+    # this report exists to demonstrate. Still quantized (kivi2), so
+    # the degrade rung has flushed groups to drop. Rounded up to the
+    # flush-group size (== window), a CacheSpec invariant.
+    budget = -(-(L + max_new) // window) * window
+    pol = presets(budget=budget, window=window)["kivi2"]
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                        size=L).astype(np.int32),
+                    max_new=max_new) for _ in range(requests)]
+    out = {}
+    pool = full_pool = None
+    for ladder in (False, True):
+        eng = Engine(cfg, params, pol, prompt_len=L, max_new=max_new,
+                     slots=slots, buckets=(L,), paged=True,
+                     block_len=block_len, block_growth="lazy",
+                     pool_blocks=pool, preemption=ladder, degrade=ladder)
+        if pool is None:       # first build reports capacity parity …
+            full_pool = eng.pool_blocks
+            # … then size the contended pool off this engine's own
+            # math: `need_adm` blocks admit a prompt (lazy reserve),
+            # `need_total` covers a request's whole resident life.
+            # 2*need_adm + 1 admits two prompts but cannot grow both to
+            # completion; max() keeps a lone request servable — ladder
+            # off MUST strand work, ladder on MUST be able to finish it.
+            probe = Request(tokens=reqs[0].tokens, max_new=max_new)
+            need_adm = eng._request_blocks(probe)
+            need_total = eng.n_max_blocks
+            pool = min(max(2 * need_adm + 1, need_total),
+                       max(2 * need_total - 1, 1))
+            eng = Engine(cfg, params, pol, prompt_len=L, max_new=max_new,
+                         slots=slots, buckets=(L,), paged=True,
+                         block_len=block_len, block_growth="lazy",
+                         pool_blocks=pool, preemption=ladder,
+                         degrade=ladder)
+        res = eng.generate_continuous(
+            [Request(tokens=r.tokens, max_new=r.max_new) for r in reqs])
+        done = [r for r in res.results
+                if r.finish_reason in ("eos", "length")]
+        out[ladder] = dict(
+            completed=len(done),
+            failed=len(res.results) - len(done),
+            goodput_tok_s=(sum(len(r.tokens) for r in done)
+                           / max(res.decode_seconds, 1e-9)),
+            preemptions=sum(r.n_preemptions for r in res.results),
+            retries=sum(r.n_retries for r in res.results),
+            degrades=(eng.pressure.stats["degrades"]
+                      if eng.pressure is not None else 0),
+            audit_clean=bool(eng.last_audit and eng.last_audit["clean"]),
+        )
+    return {"pool_blocks": pool, "full_pool_blocks": full_pool,
+            "requests": requests, "off": out[False], "on": out[True]}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--policies", default="full,h2o,kivi2")
@@ -409,11 +493,15 @@ def main() -> int:
                          "speculative report")
     ap.add_argument("--no-lazy", action="store_true",
                     help="skip the lazy block-growth capacity report")
-    ap.add_argument("--prompt-mix", choices=("random", "templated"),
+    ap.add_argument("--prompt-mix", choices=("random", "templated",
+                                             "overload"),
                     default="random",
                     help="templated: add the prefix-sharing report (N "
                          "requests sharing a 512-token system prompt, "
-                         "served with the radix prefix cache on vs off)")
+                         "served with the radix prefix cache on vs off); "
+                         "overload: add the 2x-oversubscribed-pool report "
+                         "(overload ladder on vs off, goodput + failure "
+                         "rate)")
     ap.add_argument("--sys-len", type=int, default=512,
                     help="shared system-prompt length for --prompt-mix "
                          "templated")
@@ -541,6 +629,23 @@ def main() -> int:
               f"{pfx['on_seqs_per_gb']:,.0f} seqs/GB, "
               f"{pfx['capacity_ratio']:.2f}x)")
 
+    over = None
+    if args.prompt_mix == "overload":
+        over = overload_report(args.budget, args.window,
+                               block_len=args.block_len)
+        print(f"\noverload ({over['requests']} requests into a "
+              f"{over['pool_blocks']}-block pool — two prompts admit, "
+              f"their decode growth cannot both complete; capacity-"
+              f"parity size is {over['full_pool_blocks']} blocks):")
+        for name, r in (("ladder off", over["off"]),
+                        ("ladder on", over["on"])):
+            print(f"  {name:<10} {r['completed']}/{over['requests']} "
+                  f"completed ({r['failed']} failed), goodput "
+                  f"{r['goodput_tok_s']:.1f} tok/s, "
+                  f"{r['preemptions']} preemptions, {r['retries']} "
+                  f"retries, {r['degrades']} degrades, audit "
+                  f"{'clean' if r['audit_clean'] else 'DIRTY'}")
+
     if args.check:
         import jax
         # wave-vs-continuous for the uncompressed baseline is within
@@ -591,6 +696,20 @@ def main() -> int:
                 print(f"CHECK FAILED: prefix sharing seqs/GB ratio "
                       f"{pfx['capacity_ratio']:.2f}x < 1.3x")
                 return 1
+        if over is not None:
+            if over["on"]["failed"] != 0:
+                print(f"CHECK FAILED: {over['on']['failed']} requests "
+                      f"failed with the overload ladder ON (want 0)")
+                return 1
+            if over["off"]["failed"] < 1:
+                print("CHECK FAILED: overload workload not oversubscribed "
+                      "enough — ladder-off run had no failures, so the "
+                      "ladder-on arm proves nothing")
+                return 1
+            if not over["on"]["audit_clean"]:
+                print("CHECK FAILED: pool audit dirty after the ladder-on "
+                      "overload run")
+                return 1
         print("CHECK PASSED: continuous >= wave tok/s"
               + (f" (speedup not enforced on cpu for {skipped})"
                  if skipped else " for all policies")
@@ -607,7 +726,11 @@ def main() -> int:
                  f"; lazy-growth seqs/GB {lazy['ratio']:.2f}x")
               + ("" if pfx is None else
                  f"; prefix sharing TTFT {pfx['ttft_ratio']:.2f}x / "
-                 f"seqs/GB {pfx['capacity_ratio']:.2f}x"))
+                 f"seqs/GB {pfx['capacity_ratio']:.2f}x")
+              + ("" if over is None else
+                 f"; overload ladder {over['on']['completed']}/"
+                 f"{over['requests']} completed vs "
+                 f"{over['off']['completed']}/{over['requests']} without"))
     return 0
 
 

@@ -42,7 +42,10 @@ one-past-the-end and are dropped by the scatter (`mode="drop"`).
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional
+import random
+from dataclasses import dataclass
+from typing import (Dict, Iterable, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -453,6 +456,40 @@ def reset_slot_paged(stacked: PagedLayerKV, slot_idx, *,
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault injection for `BlockAllocator` — the test
+    harness for the overload ladder. Faults are keyed by *alloc-call
+    index* (0-based count of `alloc` calls on the allocator), so a plan
+    replays bit-identically against the same workload:
+
+      * `fail_allocs` — call indices whose allocation is refused even
+        though the free list could cover it (a transient exhaustion: the
+        scheduler's reclaim retry / the engine's preemption ladder fire
+        exactly as they would under real pressure — a forced reclaim
+        storm when the index holds lingering blocks).
+      * `fail_rate` — extra refusals drawn from `random.Random(seed)`,
+        one draw per would-succeed alloc call (deterministic given the
+        workload); `max_failures` bounds the total injected refusals.
+      * `skew_alloc`/`skew_delta` — silently corrupt the refcount of the
+        first id handed out by call `skew_alloc`. A positive delta leaks
+        the block (never returns to the free list), a negative one
+        under-counts (premature free / double-map). `audit_pool` must
+        catch either — that is the point.
+    """
+
+    seed: int = 0
+    fail_allocs: Tuple[int, ...] = ()
+    fail_rate: float = 0.0
+    max_failures: Optional[int] = None
+    skew_alloc: Optional[int] = None
+    skew_delta: int = 1
+
+
+class PoolAuditError(AssertionError):
+    """A pool invariant audit failed; the message lists every violation."""
+
+
 class BlockAllocator:
     """Refcounted free-list over the shared block-id space. One id
     reserves the same row of every layer's pools. `alloc` is
@@ -464,15 +501,26 @@ class BlockAllocator:
     table, the prefix index) map the same block read-only, and `free`
     drops one reference — the id returns to the free list only at zero.
     Dropping a reference that was never taken raises (double-decref is a
-    lifecycle bug, not a no-op)."""
+    lifecycle bug, not a no-op).
 
-    def __init__(self, n_blocks: int):
+    `fault_plan` (a `FaultPlan`) injects deterministic failures and
+    refcount skew for overload / audit testing; without one the
+    allocator behaves exactly as before."""
+
+    def __init__(self, n_blocks: int, *,
+                 fault_plan: Optional[FaultPlan] = None):
         if n_blocks < 1:
             raise ValueError(f"need >= 1 block, got {n_blocks}")
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._refs: dict[int, int] = {}
         self.peak_used = 0
+        self.fault_plan = fault_plan
+        self.alloc_calls = 0
+        self.faults_injected = 0
+        self.skews_injected = 0
+        self._fault_rng = (random.Random(fault_plan.seed)
+                           if fault_plan is not None else None)
 
     @property
     def available(self) -> int:
@@ -482,14 +530,42 @@ class BlockAllocator:
     def used(self) -> int:
         return self.n_blocks - len(self._free)
 
+    def free_ids(self) -> List[int]:
+        return list(self._free)
+
+    def refcounts(self) -> Dict[int, int]:
+        return dict(self._refs)
+
+    def _inject_failure(self, call_idx: int, n: int) -> bool:
+        """True when the fault plan refuses this (would-succeed) call."""
+        plan = self.fault_plan
+        if plan is None or n == 0 or n > len(self._free):
+            return False
+        if (plan.max_failures is not None
+                and self.faults_injected >= plan.max_failures):
+            return False
+        # draw before the explicit-index check so the rng stream depends
+        # only on the sequence of would-succeed calls (replayable)
+        r = self._fault_rng.random() if plan.fail_rate > 0.0 else 1.0
+        return call_idx in plan.fail_allocs or r < plan.fail_rate
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0:
             raise ValueError(f"negative block count {n}")
+        call_idx = self.alloc_calls
+        self.alloc_calls += 1
+        if self._inject_failure(call_idx, n):
+            self.faults_injected += 1
+            return None
         if n > len(self._free):
             return None
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
             self._refs[i] = 1
+        plan = self.fault_plan
+        if plan is not None and plan.skew_alloc == call_idx and ids:
+            self._refs[ids[0]] += plan.skew_delta
+            self.skews_injected += 1
         self.peak_used = max(self.peak_used, self.used)
         return ids
 
@@ -512,6 +588,120 @@ class BlockAllocator:
             if self._refs[i] == 0:
                 del self._refs[i]
                 self._free.append(i)
+
+
+def audit_pool(
+    allocator: BlockAllocator,
+    slot_blocks: Mapping[int, Sequence[int]],
+    index_blocks: Iterable[int] = (),
+    *,
+    block_tbl=None,
+    tbl_slots: Optional[Iterable[int]] = None,
+) -> Dict[str, object]:
+    """Cross-check the allocator's refcounts against every holder: the
+    occupied slots' grant lists (`slot_blocks`: slot -> table-order ids)
+    and the prefix index's resident ids (`index_blocks`). Every block
+    must be either free or accounted for by exactly `refcount` holders —
+    no leaks (allocated, zero holders), no double-maps (one slot mapping
+    an id twice, or a held id sitting on the free list), no orphaned
+    increfs (refcount above the holder count).
+
+    `block_tbl` (optional, host array `[..., B, n_max]`, layer dims
+    leading) adds the device cross-check: each checked slot's mapped
+    table row must equal its grant list in order, identically in every
+    layer copy. `tbl_slots` restricts the row check to those slots —
+    pass the *active* set: a still-prefilling slot holds granted blocks
+    (censused above) whose table row is only written at insert, and
+    retired slots' rows may be stale (reset is lazy).
+
+    Returns a report dict (leaked / double_mapped / skewed / lost id
+    lists plus summary counts); raises `PoolAuditError` listing every
+    violation when any invariant fails.
+    """
+    problems: List[str] = []
+    free = allocator.free_ids()
+    refs = allocator.refcounts()
+    free_set = set(free)
+    all_ids = set(range(allocator.n_blocks))
+
+    if len(free) != len(free_set):
+        problems.append("free list holds duplicate ids")
+    if not free_set <= all_ids:
+        problems.append(f"free list ids out of range: "
+                        f"{sorted(free_set - all_ids)}")
+    overlap = free_set & set(refs)
+    if overlap:
+        problems.append(f"ids both free and allocated: {sorted(overlap)}")
+    lost = sorted(all_ids - free_set - set(refs))
+    if lost:
+        problems.append(f"ids neither free nor allocated (lost): {lost}")
+
+    # holder census
+    holders: Dict[int, int] = {}
+    double_mapped: List[int] = []
+    for slot, ids in sorted(slot_blocks.items()):
+        seen = set()
+        for i in ids:
+            if i in seen:
+                double_mapped.append(i)
+                problems.append(f"slot {slot} maps block {i} twice")
+            seen.add(i)
+            if i in free_set:
+                double_mapped.append(i)
+                problems.append(f"slot {slot} maps freed block {i}")
+            holders[i] = holders.get(i, 0) + 1
+    for i in index_blocks:
+        holders[i] = holders.get(i, 0) + 1
+
+    leaked = sorted(i for i in refs if holders.get(i, 0) == 0)
+    for i in leaked:
+        problems.append(f"block {i} allocated (refs={refs[i]}) but held "
+                        "by no slot and no index entry (leak)")
+    skewed: List[int] = []
+    for i, n_hold in sorted(holders.items()):
+        r = refs.get(i, 0)
+        if r != n_hold:
+            skewed.append(i)
+            problems.append(f"block {i} refcount skew: allocator={r} "
+                            f"holders={n_hold}")
+    for i, r in sorted(refs.items()):
+        if r <= 0:
+            skewed.append(i)
+            problems.append(f"block {i} has nonpositive refcount {r}")
+
+    if block_tbl is not None:
+        import numpy as np
+        tbl = np.asarray(block_tbl)
+        tbl = tbl.reshape(-1, *tbl.shape[-2:])          # [L, B, n_max]
+        if not (tbl == tbl[:1]).all():
+            problems.append("block table layer copies diverge")
+        row0 = tbl[0]
+        check = (set(slot_blocks) if tbl_slots is None
+                 else set(tbl_slots) & set(slot_blocks))
+        for slot, ids in sorted(slot_blocks.items()):
+            if slot not in check:
+                continue
+            mapped = [int(b) for b in row0[slot] if b >= 0]
+            if mapped != list(ids):
+                problems.append(
+                    f"slot {slot} device table {mapped} != grant list "
+                    f"{list(ids)}")
+
+    report: Dict[str, object] = dict(
+        n_blocks=allocator.n_blocks,
+        free=len(free),
+        allocated=len(refs),
+        holders=sum(holders.values()),
+        leaked=leaked,
+        double_mapped=sorted(set(double_mapped)),
+        skewed=sorted(set(skewed)),
+        lost=lost,
+        clean=not problems,
+    )
+    if problems:
+        raise PoolAuditError(
+            "pool audit failed:\n  " + "\n  ".join(problems))
+    return report
 
 
 def blocks_for_len(n_rows: int, block_len: int) -> int:
@@ -591,6 +781,83 @@ def clear_block_table_from(stacked: PagedLayerKV, slot_idx, start, *,
     row = jnp.where(jnp.arange(n_max) >= start, -1, row)
     return stacked._replace(
         block_tbl=kvcache._scatter_batch(tbl, row, slot_idx, batch_axis))
+
+
+# ---------------------------------------------------------------------------
+# Pressure-driven budget degradation (quantized streaming slots)
+# ---------------------------------------------------------------------------
+
+
+def degrade_slot_groups(stacked: PagedLayerKV, spec: CacheSpec, slot_idx,
+                        n_drop, *, batch_axis: int = 1) -> PagedLayerKV:
+    """Quality-reversible pressure eviction for one resident quantized
+    streaming slot: drop its `n_drop` oldest fully-flushed non-sink
+    groups and compact the block table + per-row metadata. Block ==
+    group for quantized pools, so a drop is a *table permutation* — no
+    pool data moves, and the slot regrows naturally (one group per
+    window of appends) once pressure clears.
+
+    Mirrors `plan_group_flush`'s semantics: storage group 0 (the
+    attention sinks) is protected, ages come from `slot_pos`, and the
+    partial tail group / rows beyond `length` are never touched.
+    Requires uniform per-layer lengths (the engine gates on its host
+    mirror) because the layer-replicated table row takes one shared
+    permutation. The dropped ids fall off the table tail; the engine
+    diffs the new row against the slot's grant list and releases them
+    through the scheduler's `release` seam."""
+    G = spec.group
+    assert spec.quantized and G > 0, "degradation needs a grouped ring store"
+    tbl = stacked.block_tbl
+    n_max = tbl.shape[-1]
+    row = jax.lax.dynamic_index_in_dim(tbl, slot_idx, axis=batch_axis,
+                                       keepdims=False)
+    sp = jax.lax.dynamic_index_in_dim(stacked.slot_pos, slot_idx,
+                                      axis=batch_axis, keepdims=False)
+    sc = jax.lax.dynamic_index_in_dim(stacked.scores, slot_idx,
+                                      axis=batch_axis, keepdims=False)
+    ln = jax.lax.dynamic_index_in_dim(stacked.length, slot_idx,
+                                      axis=batch_axis, keepdims=False)
+    # the indexed slices keep any leading batch axes before `batch_axis`
+    # (the engine's layout has one); flatten them into the layer axis and
+    # restore the shapes at scatter time
+    rshape, pshape, lshape = row.shape, sp.shape, ln.shape
+    S = sp.shape[-1]
+    row = row.reshape(-1, n_max)                              # [L, n_max]
+    sp = sp.reshape(-1, S)
+    sc = sc.reshape(-1, S)
+    ln = ln.reshape(-1)                                       # [L]
+    L = sp.shape[0]
+    length = jnp.min(ln)                    # uniform across layers (gated)
+    full_groups = length // G               # fully-flushed prefix groups
+    n_drop = jnp.clip(n_drop, 0, jnp.maximum(full_groups - 1, 0))
+
+    ages = jnp.max(sp.reshape(L, n_max, G), axis=(0, 2))      # [n_max]
+    idx = jnp.arange(n_max)
+    cand = (idx >= 1) & (idx < full_groups)  # non-sink, fully flushed
+    key = jnp.where(cand, ages, jnp.iinfo(jnp.int32).max)
+    rank = jnp.argsort(jnp.argsort(key))     # age rank among candidates
+    drop = cand & (rank < n_drop)
+    # stable compaction: kept entries keep relative order, dropped go last
+    perm = jnp.argsort(jnp.where(drop, n_max, 0) + idx)
+    kept = idx < n_max - n_drop
+
+    new_row = jnp.where(kept, row[:, perm], -1)
+
+    def compact(rows, fill):                # [L, S] -> [L, S]
+        x = rows.reshape(L, n_max, G)[:, perm]
+        x = jnp.where(kept[None, :, None], x, fill)
+        return x.reshape(L, n_max * G)
+
+    def put(dst, val, shape):
+        upd = jnp.expand_dims(val.reshape(shape), batch_axis)
+        return kvcache._scatter_batch(dst, upd, slot_idx, batch_axis)
+
+    return stacked._replace(
+        block_tbl=put(tbl, new_row, rshape),
+        scores=put(stacked.scores, compact(sc, 0.0), pshape),
+        slot_pos=put(stacked.slot_pos, compact(sp, -1), pshape),
+        length=put(stacked.length, ln - n_drop * G, lshape),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,25 @@ def main() -> None:
                     help="queue order for admissions: shortest-prompt "
                          "lets short prompts jump long ones when "
                          "resident latency budgets are tight")
+    ap.add_argument("--preemption", action="store_true",
+                    help="overload ladder (--continuous only): a pool-"
+                         "starved admission or decode step preempts the "
+                         "least-progressed resident slot, which requeues "
+                         "and later resumes bit-identically via prompt "
+                         "re-prefill + token replay; requests only fail "
+                         "when they cannot fit an empty pool")
+    ap.add_argument("--degrade", action="store_true",
+                    help="pressure-driven budget degradation (--paged "
+                         "--block-growth lazy, quantized policy): above a "
+                         "high-water mark of pool usage, resident slots "
+                         "drop their oldest flushed groups until usage "
+                         "falls to the low-water mark — the reversible "
+                         "rung below preemption")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the pool invariant audit (allocator "
+                         "refcounts vs slot block tables vs prefix "
+                         "index) every N decode steps (--paged only; "
+                         "0 = audit only at end of run)")
     args = ap.parse_args()
     if args.paged and not args.continuous:
         ap.error("--paged requires --continuous (the wave path decodes "
@@ -130,6 +149,13 @@ def main() -> None:
         ap.error("--prefix-sharing and --speculative are mutually "
                  "exclusive (draft-cache restore does not track shared "
                  "blocks)")
+    if args.preemption and not args.continuous:
+        ap.error("--preemption requires --continuous (wave requests "
+                 "never contend for a shared pool)")
+    if args.degrade and not (args.paged and args.block_growth == "lazy"):
+        ap.error("--degrade requires --paged --block-growth lazy")
+    if args.audit_every and not args.paged:
+        ap.error("--audit-every requires --paged (it audits the pool)")
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
     cfg = get_config(args.arch)
@@ -154,7 +180,9 @@ def main() -> None:
                      block_growth=args.block_growth,
                      admission_order=args.admission_order,
                      prefix_sharing=args.prefix_sharing,
-                     near_hit=args.near_hit)
+                     near_hit=args.near_hit,
+                     preemption=args.preemption, degrade=args.degrade,
+                     audit_every=args.audit_every)
         eos = args.eos_id if args.eos_id >= 0 else None
         shared = rng.integers(0, cfg.vocab_size,
                               size=max(args.shared_prefix, 0))
@@ -182,6 +210,21 @@ def main() -> None:
         if failed:
             print(f"failed ({len(failed)} requests never fit the paged "
                   f"pool): uids={[r.uid for r in failed]}")
+        n_pre = sum(r.n_preemptions for r in res.results)
+        n_ret = sum(r.n_retries for r in res.results)
+        if args.preemption or n_pre or n_ret:
+            print(f"overload: {n_pre} preemptions, {n_ret} admission "
+                  f"retries across {len(res.results)} requests")
+        if args.degrade and eng.pressure is not None:
+            st = eng.pressure.stats
+            print(f"pressure: {st['degrades']} degrades dropped "
+                  f"{st['blocks_dropped']} blocks, peak pool usage "
+                  f"{st['peak_used_frac']:.2f}")
+        if args.paged and eng.last_audit is not None:
+            print(f"pool audit: clean={eng.last_audit['clean']} "
+                  f"({eng.last_audit['allocated']} allocated / "
+                  f"{eng.last_audit['free']} free of "
+                  f"{eng.last_audit['n_blocks']} blocks)")
         print(f"prefill_s={res.prefill_seconds:.2f} "
               f"decode_tok/s={res.decode_tokens_per_s:.1f} "
               f"occupancy={res.occupancy:.2f} "

@@ -3,6 +3,7 @@ from repro.serving.engine import (  # noqa: F401
     Engine,
     GenerationResult,
 )
+from repro.serving.adaptive import PressureController  # noqa: F401
 from repro.serving.prefix import PrefixIndex  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     Request,

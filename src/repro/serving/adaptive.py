@@ -8,6 +8,16 @@ budget retains quality; high-entropy prompts spread attention and need
 larger budgets. `choose_budget` maps normalized unigram entropy onto the
 configured bucket ladder; `AdaptiveEngine` keeps one compiled engine per
 bucket and routes request waves by signal.
+
+`PressureController` is the *runtime* half of the same future-work line:
+instead of choosing a budget once at admission, it watches the paged
+`BlockAllocator` free list during a continuous run and, above a
+high-water mark, asks the engine to evict resident quantized/window
+slots down to a tighter effective budget (dropping their oldest flushed
+groups — quality-reversible: the slots regrow one group per window of
+appends once pressure clears). It is the first rung of the overload
+ladder: degrade reversibly before any preemption fires, preempt before
+any request fails.
 """
 from __future__ import annotations
 
@@ -18,6 +28,66 @@ import numpy as np
 
 from repro.core.policy import CompressionPolicy, presets
 from repro.serving.engine import Engine, GenerationResult
+
+
+class PressureController:
+    """Watermark policy for pressure-driven budget degradation.
+
+    The engine calls `shortfall(allocator)` once per decode loop
+    iteration: 0 means no action; a positive value is the number of pool
+    blocks the engine should try to free by degrading resident
+    quantized-ring slots (dropping their oldest non-sink groups via
+    `core.paging.degrade_slot_groups`).
+
+    Hysteresis: pressure engages when the allocated fraction crosses
+    `high_water` and keeps asking for blocks down to `low_water`, so the
+    controller does not flap at the boundary; it disengages once usage
+    falls to `low_water` (slots then regrow naturally — "relaxing the
+    mark when the pool drains"). `keep_groups` floors how far any one
+    slot may be degraded (the sink group plus at least one recent
+    group always survive)."""
+
+    def __init__(self, *, high_water: float = 0.85, low_water: float = 0.60,
+                 keep_groups: int = 2):
+        if not 0.0 < low_water <= high_water <= 1.0:
+            raise ValueError(
+                f"need 0 < low_water <= high_water <= 1, got "
+                f"{low_water}/{high_water}")
+        if keep_groups < 2:
+            raise ValueError(f"keep_groups must be >= 2 (sinks + one "
+                             f"recent group), got {keep_groups}")
+        self.high_water = float(high_water)
+        self.low_water = float(low_water)
+        self.keep_groups = int(keep_groups)
+        self._pressed = False
+        self.stats = dict(degrades=0, blocks_dropped=0, ticks_pressed=0,
+                          peak_used_frac=0.0)
+
+    @property
+    def pressed(self) -> bool:
+        return self._pressed
+
+    def shortfall(self, allocator) -> int:
+        """Blocks the engine should free to return to `low_water` usage;
+        0 when the pool is below the engaged watermark."""
+        used_frac = allocator.used / max(allocator.n_blocks, 1)
+        self.stats["peak_used_frac"] = max(self.stats["peak_used_frac"],
+                                           used_frac)
+        if self._pressed:
+            if used_frac <= self.low_water:
+                self._pressed = False
+                return 0
+        elif used_frac < self.high_water:
+            return 0
+        else:
+            self._pressed = True
+        self.stats["ticks_pressed"] += 1
+        target_used = int(self.low_water * allocator.n_blocks)
+        return max(allocator.used - target_used, 0)
+
+    def note_degrade(self, n_blocks: int) -> None:
+        self.stats["degrades"] += 1
+        self.stats["blocks_dropped"] += n_blocks
 
 
 def prompt_entropy(tokens: np.ndarray, vocab: int) -> float:

@@ -146,6 +146,8 @@ class _ChunkedAdmission:
     direct: bool = False           # prefill-direct: segments write the pool
     blend: bool = False            # near-hit CacheBlend admission
     secs: float = 0.0              # accumulated prefill seconds
+    stalls: int = 0                # consecutive refused block grants —
+                                   # the preemption ladder's trigger
 
 
 class Engine:
@@ -162,7 +164,14 @@ class Engine:
                  admission_order: str = "fifo",
                  speculative: bool = False, gamma: int = 4,
                  draft_policy: str = "window:64",
-                 prefix_sharing: bool = False, near_hit: float = 0.0):
+                 prefix_sharing: bool = False, near_hit: float = 0.0,
+                 preemption: bool = False, preempt_patience: int = 2,
+                 fail_patience: int = 3,
+                 degrade: bool = False, degrade_high: float = 0.85,
+                 degrade_low: float = 0.60, degrade_keep_groups: int = 2,
+                 fault_plan: Optional[paging_lib.FaultPlan] = None,
+                 audit_every: int = 0,
+                 preempt_at: Sequence[Sequence[int]] = ()):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
         if use_kernels is not None:
@@ -459,15 +468,100 @@ class Engine:
                     dc.ssm, dc.cross_k, dc.cross_v, dc.cross_bias),
                 donate_argnums=(0,) if dn else ())
 
+        # --- overload ladder: degrade -> preempt -> fail ----------------
+        # Preemption: when an admission or a lazy-growth boundary can't
+        # get blocks, evict the lowest-progress resident slot (through
+        # `Scheduler.preempt`) and requeue it as a continuation — its
+        # re-admission re-prefills the prompt and *replays* the emitted
+        # tokens through the normal decode path, so resumed greedy
+        # streams are bit-identical to unpreempted runs. `preempt_at`
+        # ((step, slot) pairs) forces preemptions deterministically for
+        # that bit-identity test. Degradation (PressureController in
+        # serving/adaptive.py) sits below preemption: above a high-water
+        # mark resident quantized slots are evicted down first
+        # (`paging.degrade_slot_groups`). `fault_plan` + `audit_every`
+        # are the proof harness: injected allocator faults, and
+        # allocator-vs-table-vs-index invariant audits during the run.
+        self.preempt_at = tuple((int(k), int(s)) for k, s in preempt_at)
+        self.preemption = bool(preemption) or bool(self.preempt_at)
+        self.preempt_patience = int(preempt_patience)
+        self.fail_patience = max(int(fail_patience), 1)
+        self.fault_plan = fault_plan
+        self.audit_every = int(audit_every)
+        self.last_audit: Optional[dict] = None
+        if fault_plan is not None and not self.paged:
+            raise ValueError("fault_plan injects BlockAllocator faults; "
+                             "it requires paged=True")
+        if self.audit_every and not self.paged:
+            raise ValueError("audit_every audits the paged pool; it "
+                             "requires paged=True")
+        self.pressure = None
+        if degrade:
+            if not (self.paged and self.lazy_blocks):
+                raise ValueError(
+                    "degrade requires paged=True with block_growth="
+                    "'lazy': lazy growth grants a block before every "
+                    "dispatch, which is what guarantees a post-degrade "
+                    "ring flush always lands in a mapped table entry")
+            if not self.spec.quantized or self.spec.track_scores():
+                raise ValueError(
+                    "degrade drops whole flushed groups of a quantized "
+                    "streaming store (kivi*); score-carrying or "
+                    "unquantized policies have no group structure to "
+                    "evict down")
+            if self.speculative:
+                raise ValueError(
+                    "degrade + speculative is unsupported (the drafter's "
+                    "host mirror cannot track pressure evictions)")
+            # adaptive.py imports Engine at module level; import the
+            # controller lazily to keep the cycle one-directional
+            from repro.serving.adaptive import PressureController
+            self.pressure = PressureController(
+                high_water=degrade_high, low_water=degrade_low,
+                keep_groups=degrade_keep_groups)
+            self._degrade_op = jax.jit(
+                lambda c, slot, n: M.ModelCache(
+                    paging_lib.degrade_slot_groups(c.attn, self.spec, slot,
+                                                   n, batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+
+    # ------------------------------------------------------------------
+    def _run_audit(self, sched, cache=None) -> dict:
+        """Pool invariant audit (`core.paging.audit_pool`): allocator
+        refcounts vs every occupied slot's grant list vs the prefix
+        index; passing `cache` adds the device block-table cross-check
+        for active slots. Raises `PoolAuditError` on any violation; the
+        report lands on `self.last_audit` for post-run inspection."""
+        index_blocks = ()
+        if self._share_state is not None:
+            index_blocks = self._share_state["index"].block_ids()
+        report = paging_lib.audit_pool(
+            self.block_allocator, sched.occupied_blocks(), index_blocks,
+            block_tbl=(cache.attn.block_tbl if cache is not None else None),
+            tbl_slots=sched.active_slots())
+        self.last_audit = report
+        return report
+
     # ------------------------------------------------------------------
     def _request_blocks(self, req: Request) -> int:
         """Pool blocks an admission must reserve. Eager growth covers
         the request's whole budgeted length (prompt + decode headroom +
         quantization slack); lazy growth covers only the prompt — decode
-        blocks are granted as `pos` advances."""
+        blocks are granted as `pos` advances. Under preemption, lazy
+        admission additionally covers the continuation's replay rows
+        plus the first new append: a resumed slot must never starve
+        mid-replay (a mid-replay self-preempt discards the recompute
+        and commits nothing — with two such slots trading the pool the
+        loop never converges), and covering one row past the prefix
+        guarantees every resume commits >= 1 new token before it can be
+        preempted again."""
         if self.lazy_blocks:
+            rows = len(req.tokens) + len(req.emitted_prefix)
+            if self.preemption:
+                rows += 1
             return paging_lib.request_blocks_prefix(
-                self.spec, self._S_phys, len(req.tokens), self.block_len)
+                self.spec, self._S_phys, rows, self.block_len)
         return paging_lib.request_blocks(
             self.spec, self._S_phys, len(req.tokens), req.max_new,
             self.block_len)
@@ -825,6 +919,27 @@ class Engine:
         elif not adm.blend:
             share["stats"]["cold"] += 1
 
+    def _note_adm_stall(self, adm: _ChunkedAdmission, sched
+                        ) -> Optional[_ChunkedAdmission]:
+        """A block grant for the in-flight admission was refused. With
+        resident work the admission just stalls (the decode loop's
+        ladder may preempt a victim once `stalls` passes the patience).
+        With *nothing* active this used to be provably impossible
+        (total <= pool_blocks and nothing else holds blocks) and still
+        raises absent injected faults / preemption; under either, a lone
+        admission can genuinely starve — cancel it as "failed" after a
+        bounded retry window instead of spinning forever."""
+        adm.stalls += 1
+        if not sched.active_slots():
+            if self.fault_plan is None and not self.preemption:
+                raise RuntimeError(
+                    "chunked admission stalled with no active slots "
+                    "(allocator invariant violated)")
+            if adm.stalls > self.preempt_patience + self.fail_patience + 8:
+                sched.retire(adm.slot, "failed")
+                return None
+        return adm
+
     def _advance_chunked_admission(self, adm: _ChunkedAdmission, sched,
                                    cache, lb, *, run_all: bool):
         """Advance the in-flight admission by one interleave step: a
@@ -856,16 +971,10 @@ class Engine:
                 if self.paged and adm.total_blocks > adm.granted:
                     if not sched.grant_blocks(
                             adm.slot, adm.total_blocks - adm.granted):
-                        if not sched.active_slots():
-                            # can't happen: total <= pool_blocks and
-                            # nothing else holds blocks — guard so a
-                            # bookkeeping bug can't spin forever
-                            raise RuntimeError(
-                                "chunked admission stalled with no "
-                                "active slots (allocator invariant "
-                                "violated)")
+                        adm = self._note_adm_stall(adm, sched)
                         break  # stall until a retire frees blocks
                     adm.granted = adm.total_blocks
+                    adm.stalls = 0
                 tok = self.sampler(adm.last_logits, adm.key)
                 slot = adm.slot
                 if self.paged:
@@ -894,13 +1003,10 @@ class Engine:
                 if target > adm.granted:
                     if not sched.grant_blocks(adm.slot,
                                               target - adm.granted):
-                        if not sched.active_slots():
-                            raise RuntimeError(
-                                "chunked admission stalled with no "
-                                "active slots (allocator invariant "
-                                "violated)")
+                        adm = self._note_adm_stall(adm, sched)
                         break  # stall until a retire frees blocks
                     adm.granted = target
+                    adm.stalls = 0
             adm.last_logits, adm.st = self._chunk_step(
                 self.params, adm.st, jnp.asarray(adm.segs[i][None]),
                 jnp.int32(adm.starts[i]))
@@ -977,7 +1083,8 @@ class Engine:
         if self.paged:
             # fresh free list per run (the cache is rebuilt below too);
             # kept on self for post-run inspection (peak usage)
-            self.block_allocator = paging_lib.BlockAllocator(self.pool_blocks)
+            self.block_allocator = paging_lib.BlockAllocator(
+                self.pool_blocks, fault_plan=self.fault_plan)
             sched = Scheduler(buckets or self.buckets, self.slots,
                               allocator=self.block_allocator,
                               block_need=self._request_blocks,
@@ -1049,8 +1156,83 @@ class Engine:
         lazy_mirror = (spec_lib.CacheMirror(
             self.spec, self.layer_budgets, self._S_phys, self.slots)
             if (self.paged and self.lazy_blocks) else None)
+        # Pipeline + preemption state, declared before the initial fill:
+        # admissions may preempt (the ladder below), and `preempt_slot`
+        # reads the in-flight token buffers.
+        pending = None                          # (tok_dev, valid slots)
+        first_pending = None                    # (slot, first-token dev)
+        replay: dict = {}     # slot -> committed tokens still to re-feed
+        step_idx = 0                            # dispatches so far
+        preempt_due = list(self.preempt_at)     # forced (step, slot) pairs
 
-        def admit_into(slot_idx: int) -> bool:
+        def preempt_slot(s: int) -> bool:
+            """Preempt slot `s`: fold its committed-but-unfetched token
+            (a decode token riding `pending` or a chunk-admitted first
+            token riding `first_pending`) into the record, then requeue
+            prompt + emitted as a continuation and clear the slot. If
+            that folded token *finished* the request it retires instead
+            (nothing left to resume) — blocks are freed either way.
+            Returns True when the slot was preempted (vs retired)."""
+            nonlocal cache, pending, first_pending, decode_tokens
+            reason = None
+            if pending is not None and s in pending[1]:
+                ptok, pvalid = pending
+                decode_tokens += 1
+                reason = sched.record_token(s, int(np.asarray(ptok)[s]))
+                pvalid.remove(s)
+            elif first_pending is not None and first_pending[0] == s:
+                reason = sched.record_token(
+                    s, int(jax.device_get(first_pending[1])[0]))
+                first_pending = None
+            if reason is not None:
+                sched.retire(s, reason)
+            else:
+                sched.preempt(s)
+            share_retire(s)
+            cache = self._reset(cache, jnp.int32(s))
+            clean_slots.add(s)
+            if lazy_mirror is not None:
+                lazy_mirror.reset(s)
+            replay.pop(s, None)
+            return reason is None
+
+        def degrade_tick() -> None:
+            """First rung of the ladder: above the controller's high-water
+            mark, evict resident quantized slots down (drop their oldest
+            flushed non-sink groups) until the requested shortfall is
+            freed — reversible quality loss instead of preemption."""
+            nonlocal cache
+            ctrl = self.pressure
+            shortfall = ctrl.shortfall(self.block_allocator)
+            if shortfall <= 0:
+                return
+            G = self.spec.group
+            share = self._share_state
+            for s in sched.active_slots():
+                if shortfall <= 0:
+                    break
+                if s in replay:
+                    continue    # mid-resume recompute: keep it exact
+                if share is not None and share["upto"].get(s):
+                    continue    # leading blocks shared read-only
+                lens = lazy_mirror.length[s]
+                if int(lens.min()) != int(lens.max()):
+                    continue    # one shared table permutation per layer
+                n = min(int(lens[0]) // G - ctrl.keep_groups, shortfall)
+                if n <= 0:
+                    continue
+                cache = self._degrade_op(cache, jnp.int32(s), jnp.int32(n))
+                tbl = np.asarray(jax.device_get(cache.attn.block_tbl))
+                row = tbl.reshape(-1, tbl.shape[-2], tbl.shape[-1])[0, s]
+                dropped = sched.replace_blocks(
+                    s, [int(b) for b in row if b >= 0])
+                lazy_mirror.drop_rows(s, len(dropped) * G)
+                if share is not None:
+                    share["mirror"].drop_rows(s, len(dropped) * G)
+                ctrl.note_degrade(len(dropped))
+                shortfall -= len(dropped)
+
+        def admit_into(slot_idx: int, ladder: bool = False) -> bool:
             """Fill a free slot from the queue: bucketed batch-1 prefill,
             scatter into the live cache, stream the first token. Loops in
             case a request finishes on its very first token. Returns True
@@ -1058,20 +1240,38 @@ class Engine:
             `next_tok[slot_idx]`). Under paging, `admit_next` may refuse
             while the pool is exhausted — the slot then idles until a
             retire frees blocks (the decode loop retries every free slot
-            after each batch of retirements)."""
+            after each batch of retirements). `ladder=True` (only at
+            safe points: the initial fill and the loop-top sweep, never
+            mid-record) lets a refused admission claim a victim via the
+            preemption ladder."""
             nonlocal cache, prefill_s
             while True:
                 req = sched.admit_next(slot_idx)
                 if req is None:
-                    if (self.paged and sched.pending
-                            and not sched.active_slots()
-                            and not sched.prefilling_slots()):
-                        # nothing running will ever free blocks: the head
-                        # request simply doesn't fit this pool. Retire it
-                        # as "failed" (preserving every completed
-                        # request's results) and try the next head.
-                        sched.fail_head()
-                        continue
+                    if self.paged and sched.pending:
+                        tries = sched.note_retry()
+                        if (ladder and self.preemption
+                                and tries > self.preempt_patience):
+                            # the ladder: free a victim's blocks and
+                            # retry. Replaying slots are never victims —
+                            # a victim's progress must have grown since
+                            # its last preemption (convergence).
+                            v = sched.preempt_victim(exclude=tuple(replay))
+                            if v is not None:
+                                preempt_slot(v)
+                                continue
+                        if (not sched.active_slots()
+                                and not sched.prefilling_slots()):
+                            # nothing running will ever free blocks —
+                            # but an *injected* refusal is transient, so
+                            # retry a bounded number of times before
+                            # concluding the head just doesn't fit this
+                            # pool and retiring it "failed" (preserving
+                            # every completed request's results).
+                            if tries <= self.fail_patience:
+                                continue
+                            sched.fail_head()
+                            continue
                     # nothing admittable: clear the slot so stale KV never
                     # leaks into accounting or a later occupant — under
                     # paging this is load-bearing, not hygiene: a stale
@@ -1100,6 +1300,17 @@ class Engine:
                     lazy_mirror.admit(slot_idx, len(req.tokens))
                 tok_i = int(jax.device_get(tok)[0])
                 prefill_s += time.perf_counter() - t0
+                if req.emitted_prefix:
+                    # recompute-on-resume: the prefill covered the
+                    # prompt; the committed tokens now *replay* through
+                    # the normal decode path (outputs discarded until
+                    # the queue drains), so each replay step IS the
+                    # original decode step and the stream stays
+                    # bit-identical. Nothing is recorded here — the
+                    # prefix already holds this prefill's first token.
+                    next_tok[slot_idx] = req.emitted_prefix[0]
+                    replay[slot_idx] = list(req.emitted_prefix[1:])
+                    return True
                 next_tok[slot_idx] = tok_i
                 reason = sched.record_token(slot_idx, tok_i)
                 if reason is None:
@@ -1149,14 +1360,40 @@ class Engine:
         # because dispatching ahead consumes self.key splits in a
         # different sequence around mid-run admissions.
         tok_in = jnp.asarray(next_tok)          # [slots] device-side
-        pending = None                          # (tok_dev, valid slots)
-        first_pending = None                    # (slot, first-token dev)
         loop_t0 = time.perf_counter()
         prefill_at_loop = prefill_s
         while True:
             if use_adm and adm is None:
                 adm = self._start_chunked_admission(sched)
+            if preempt_due:
+                # forced preemption injection — the deterministic
+                # preempt-at-step-k hook the bit-identity tests drive
+                for k_s in [x for x in preempt_due if x[0] == step_idx]:
+                    preempt_due.remove(k_s)
+                    if k_s[1] in sched.active_slots():
+                        preempt_slot(k_s[1])
+            if (self.preemption and adm is not None
+                    and adm.stalls > self.preempt_patience):
+                # a chunk-admission grant has stalled past patience:
+                # escalate to the ladder (never victimize the admission's
+                # own slot or a mid-resume replay)
+                v = sched.preempt_victim(exclude=(adm.slot, *replay))
+                if v is not None:
+                    preempt_slot(v)
+                    adm.stalls = 0
+            if self.preemption and not use_adm and sched.pending:
+                # admission retry sweep: a head refused earlier may fit
+                # now, or may claim a victim through the ladder
+                for i in sched.free_slots():
+                    if not sched.pending or not admit_into(i, ladder=True):
+                        break
+                    tok_in = tok_in.at[i].set(int(next_tok[i]))
+            if self.pressure is not None:
+                degrade_tick()
             active = sched.active_slots()
+            if (self.audit_every and step_idx
+                    and step_idx % self.audit_every == 0):
+                self._run_audit(sched, cache)
             if lazy_mirror is not None and active:
                 # lazy growth: every slot joining this dispatch must have
                 # table coverage for the row the dispatch appends. A slot
@@ -1174,7 +1411,36 @@ class Engine:
                     have = len(sched.slot_blocks(s))
                     if need <= have:
                         continue
-                    if sched.grant_blocks(s, need - have):
+                    # bounded retry absorbs transient (injected)
+                    # refusals — each attempt is a fresh alloc call
+                    granted = False
+                    for _ in range(self.fail_patience):
+                        if sched.grant_blocks(s, need - have):
+                            granted = True
+                            break
+                    if not granted and self.preemption:
+                        # the ladder: free victims' blocks until the
+                        # grant fits, then requeue *this* slot if other
+                        # work still holds blocks that will free —
+                        # "oom" stays only for the truly-unservable
+                        # (a lone slot the whole pool cannot grow)
+                        while not granted:
+                            v = sched.preempt_victim(exclude=(s, *replay))
+                            if v is None:
+                                break
+                            preempt_slot(v)
+                            if v in active:
+                                active.remove(v)
+                            if v in worklist:
+                                worklist.remove(v)
+                            granted = sched.grant_blocks(s, need - have)
+                        if not granted and (
+                                len(sched.active_slots()) > 1
+                                or sched.prefilling_slots()):
+                            preempt_slot(s)
+                            active.remove(s)
+                            continue
+                    if granted:
                         ids = sched.slot_blocks(s)[have:]
                         cache = self._grow_tbl(
                             cache, jnp.int32(s), jnp.int32(have),
@@ -1280,8 +1546,24 @@ class Engine:
                 tok_dev, cache = self._decode(self.params, cache,
                                               tok_in[:, None], k2)
                 sched.note_decode_step()
+                step_idx += 1
                 new_pending = (tok_dev, list(active))
                 tok_in = tok_dev                # feed N+1 from N, no sync
+                if replay:
+                    # recompute-on-resume: while a slot replays, each
+                    # dispatch's output is the recomputation of an
+                    # already-committed token — drop it from the valid
+                    # set and feed the next committed token instead.
+                    # Once the queue is empty the dispatch just fed the
+                    # last committed token, so its output is the first
+                    # *new* one: leave it in the valid set.
+                    for s in [s for s in list(replay) if s in active]:
+                        q = replay[s]
+                        if q:
+                            new_pending[1].remove(s)
+                            tok_in = tok_in.at[s].set(q.pop(0))
+                        else:
+                            del replay[s]
                 if lazy_mirror is not None:
                     for s in active:
                         lazy_mirror.append(s, 1)
@@ -1314,8 +1596,17 @@ class Engine:
                 # device-to-device; the host fetch + record are deferred
                 # to the next iteration like any pending decode token
                 slot0, ftok = first
-                tok_in = tok_in.at[slot0].set(ftok[0])
-                first_pending = (slot0, ftok)
+                creq = sched.slot_request(slot0)
+                if creq.emitted_prefix:
+                    # chunk-admitted continuation: the recomputed first
+                    # token is already in the prefix — seed the replay
+                    # instead of recording anything
+                    tok_in = tok_in.at[slot0].set(
+                        int(creq.emitted_prefix[0]))
+                    replay[slot0] = list(creq.emitted_prefix[1:])
+                else:
+                    tok_in = tok_in.at[slot0].set(ftok[0])
+                    first_pending = (slot0, ftok)
             if (pending is None and new_pending is None and adm is None
                     and first_pending is None and not sched.pending):
                 break
@@ -1359,6 +1650,12 @@ class Engine:
             pending = new_pending
         decode_s = (time.perf_counter() - loop_t0) - (prefill_s -
                                                       prefill_at_loop)
+        if self.paged:
+            # every run ends with a host-side invariant audit: all slots
+            # retired, so anything still allocated must be held by the
+            # prefix index — leaks/skew surface here even in tests that
+            # only assert on token streams
+            self._run_audit(sched)
         return self._continuous_result(
             sched, cache, prefill_s=prefill_s, decode_s=decode_s,
             decode_tokens=decode_tokens)

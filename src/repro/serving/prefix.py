@@ -80,6 +80,11 @@ class PrefixIndex:
     def __len__(self) -> int:
         return len(self._nodes)
 
+    def block_ids(self) -> List[int]:
+        """Every pool block id the index currently holds a reference to
+        (one per resident node) — the index's side of the pool audit."""
+        return list(self._nodes)
+
     def _key(self, tokens, b: int) -> tuple:
         return tuple(int(t) for t in tokens[b * self.bl:(b + 1) * self.bl])
 

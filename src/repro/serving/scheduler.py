@@ -36,6 +36,18 @@ class Request:
     max_new: int
     eos_id: Optional[int] = None
     uid: int = field(default_factory=lambda: next(_uid_counter))
+    # --- continuation state (preemption with recompute-on-resume) ---
+    # tokens already emitted before a preemption, carried across the
+    # requeue: on re-admission the engine re-prefills the *prompt* and
+    # replays these through the decode path (discarding the outputs), so
+    # the resumed stream is bit-identical to an unpreempted run. Their
+    # timestamps and the true first-token time ride along so TTFT /
+    # per-token accounting survive the round trip.
+    emitted_prefix: List[int] = field(default_factory=list)
+    token_times_prefix: List[float] = field(default_factory=list)
+    t_first_prefix: float = 0.0
+    n_preemptions: int = 0
+    n_retries: int = 0
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32)
@@ -43,6 +55,11 @@ class Request:
             raise ValueError(f"prompt must be 1-D, got {self.tokens.shape}")
         if self.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+
+    @property
+    def remaining_new(self) -> int:
+        """Decode tokens still owed (max_new minus the carried prefix)."""
+        return self.max_new - len(self.emitted_prefix)
 
 
 @dataclass
@@ -58,6 +75,8 @@ class RequestResult:
     decode_s: float               # first token -> retirement
     token_times: np.ndarray = field(  # [n_emitted] clock at each token —
         default_factory=lambda: np.zeros(0))  # inter-token stall analysis
+    n_preemptions: int = 0        # times the request was preempted/resumed
+    n_retries: int = 0            # admission attempts refused by the pool
 
     @property
     def n_tokens(self) -> int:
@@ -88,6 +107,7 @@ class _SlotState:
     blocks: List[int] = field(default_factory=list)   # paged-pool block ids
     prefilling: bool = False      # chunked admission in flight: occupied,
                                   # not yet decoding (no tokens yet)
+    seq: int = -1                 # admission order (victim tie-break)
 
 
 class Scheduler:
@@ -146,6 +166,9 @@ class Scheduler:
         self.results: List[RequestResult] = []
         self._decode_steps = 0
         self._active_slot_steps = 0
+        self._admit_seq = itertools.count()
+        self.n_preemptions = 0        # fleet totals (per-request counts
+        self.n_retries = 0            # land on RequestResult)
 
     def _head_idx(self) -> int:
         """Queue index the next admission takes. FIFO: the front.
@@ -225,7 +248,7 @@ class Scheduler:
         req, t_submit = self._pop_head()
         self._slots[slot_idx] = _SlotState(
             req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
-            blocks=blocks)
+            blocks=blocks, seq=next(self._admit_seq))
         return req
 
     def slot_blocks(self, slot_idx: int) -> List[int]:
@@ -249,7 +272,7 @@ class Scheduler:
         req, t_submit = self._pop_head()
         self._slots[slot_idx] = _SlotState(
             req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
-            prefilling=True)
+            prefilling=True, seq=next(self._admit_seq))
         return req
 
     def grant_blocks(self, slot_idx: int, n: int) -> bool:
@@ -368,7 +391,7 @@ class Scheduler:
         st.token_times.append(now)
         if st.req.eos_id is not None and token == st.req.eos_id:
             return "eos"
-        if len(st.emitted) >= st.req.max_new:
+        if len(st.req.emitted_prefix) + len(st.emitted) >= st.req.max_new:
             return "length"
         return None
 
@@ -379,22 +402,109 @@ class Scheduler:
         self._slots[slot_idx] = None
         self.release(slot_idx, st.blocks)      # freed capacity is reusable
         now = self._clock()
+        req = st.req
+        # a preempted-and-resumed request carries its pre-preemption
+        # tokens (and their timestamps, and the true first-token time) in
+        # the Request; the result merges them with the post-resume stream
+        tokens = req.emitted_prefix + st.emitted
+        times = req.token_times_prefix + st.token_times
+        t_first = req.t_first_prefix if req.emitted_prefix else st.t_first
         res = RequestResult(
-            uid=st.req.uid,
-            tokens=np.asarray(st.emitted, np.int32),
-            prompt_len=len(st.req.tokens),
+            uid=req.uid,
+            tokens=np.asarray(tokens, np.int32),
+            prompt_len=len(req.tokens),
             bucket=st.bucket,
             slot=slot_idx,
             finish_reason=reason,
             # a slot retired before its first token (failed mid-prefill)
             # has no t_first: zero latencies instead of clock garbage
-            ttft_s=(st.t_first - st.t_submit) if st.emitted else 0.0,
+            ttft_s=(t_first - st.t_submit) if tokens else 0.0,
             total_s=now - st.t_submit,
-            decode_s=(now - st.t_first) if st.emitted else 0.0,
-            token_times=np.asarray(st.token_times, np.float64),
+            decode_s=(now - t_first) if tokens else 0.0,
+            token_times=np.asarray(times, np.float64),
+            n_preemptions=req.n_preemptions,
+            n_retries=req.n_retries,
         )
         self.results.append(res)
         return res
+
+    # ---- preemption (overload ladder: degrade -> preempt -> fail) --------
+    def preempt(self, slot_idx: int) -> Request:
+        """Evict an ACTIVE slot's request and requeue it at the queue
+        front as a continuation: its blocks go back through the `release`
+        seam, its emitted tokens (plus their timestamps and first-token
+        time) fold into the Request's continuation prefix, and the
+        original submit time rides along so end-to-end latency keeps
+        counting. On re-admission the engine re-prefills the prompt and
+        replays the prefix through the decode path — bit-identical
+        recompute-on-resume."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        if st.prefilling:
+            raise ValueError(f"slot {slot_idx} is prefilling; cancel the "
+                             "admission instead of preempting it")
+        self._slots[slot_idx] = None
+        self.release(slot_idx, st.blocks)
+        req = st.req
+        if st.emitted and not req.emitted_prefix:
+            req.t_first_prefix = st.t_first
+        req.emitted_prefix.extend(st.emitted)
+        req.token_times_prefix.extend(st.token_times)
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        self._queue.appendleft((req, st.t_submit))
+        return req
+
+    def preempt_victim(self, exclude: Sequence[int] = ()) -> Optional[int]:
+        """Victim policy: the ACTIVE slot with the lowest progress
+        fraction (emitted / max_new, continuation prefix included) — the
+        least sunk recompute cost — tie-broken youngest-admitted-first
+        so an old request under repeated pressure still converges."""
+        best = None
+        for i, st in enumerate(self._slots):
+            if st is None or st.prefilling or i in exclude:
+                continue
+            done = len(st.req.emitted_prefix) + len(st.emitted)
+            key = (done / max(st.req.max_new, 1), -st.seq, i)
+            if best is None or key < best[0]:
+                best = (key, i)
+        return best[1] if best is not None else None
+
+    def note_retry(self) -> int:
+        """An admission attempt for the head request was refused by the
+        pool; bump its retry count (bounded-retry-with-backoff lives in
+        the engine — this is the accounting half). Returns the head's
+        retry count so far (0 when the queue is empty)."""
+        req = self.head_request()
+        if req is None:
+            return 0
+        req.n_retries += 1
+        self.n_retries += 1
+        return req.n_retries
+
+    def replace_blocks(self, slot_idx: int, keep_ids: Sequence[int]
+                       ) -> List[int]:
+        """Pressure degradation dropped some of a slot's blocks
+        device-side: swap the grant list for the kept ids (in new table
+        order) and release the dropped ones through the seam. Returns
+        the dropped ids."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        keep = [int(i) for i in keep_ids]
+        ks = set(keep)
+        assert len(ks) == len(keep) and ks <= set(st.blocks), \
+            (keep, st.blocks)
+        dropped = [b for b in st.blocks if b not in ks]
+        st.blocks = keep
+        self.release(slot_idx, dropped)
+        return dropped
+
+    def occupied_blocks(self) -> dict:
+        """slot -> grant list for every occupied slot (audit input)."""
+        return {i: list(st.blocks) for i, st in enumerate(self._slots)
+                if st is not None}
 
     def fail_head(self, reason: str = "failed") -> RequestResult:
         """Retire the head of the queue without ever admitting it — the
@@ -405,16 +515,23 @@ class Scheduler:
             raise ValueError("queue is empty")
         req, t_submit = self._pop_head()
         now = self._clock()
+        # a preempted continuation that later proves unservable still
+        # surfaces the tokens it already emitted — work is never discarded
         res = RequestResult(
             uid=req.uid,
-            tokens=np.zeros(0, np.int32),
+            tokens=np.asarray(req.emitted_prefix, np.int32),
             prompt_len=len(req.tokens),
             bucket=self.bucket_for(len(req.tokens)),
             slot=-1,
             finish_reason=reason,
-            ttft_s=0.0,
+            ttft_s=((req.t_first_prefix - t_submit)
+                    if req.emitted_prefix else 0.0),
             total_s=now - t_submit,
-            decode_s=0.0,
+            decode_s=((now - req.t_first_prefix)
+                      if req.emitted_prefix else 0.0),
+            token_times=np.asarray(req.token_times_prefix, np.float64),
+            n_preemptions=req.n_preemptions,
+            n_retries=req.n_retries,
         )
         self.results.append(res)
         return res

@@ -196,6 +196,15 @@ class CacheMirror:
             self.length[slot] -= n
         self.pos[slot] -= n
 
+    def drop_rows(self, slot: int, n: int) -> None:
+        """Mirror of pressure degradation (`degrade_slot_groups`): the
+        slot lost `n` of its oldest flushed main-store rows in every
+        layer. Ring state and absolute position are untouched — the
+        drop rewrites history, not the append cursor."""
+        if n <= 0:
+            return
+        self.length[slot] = np.maximum(self.length[slot] - n, 0)
+
     def headroom_after_feeds(self, slot: int, n: int) -> int:
         """Appends guaranteed eviction/flush-free after `n` more appends
         land — the speculative depth budget for rollbackable rows."""
@@ -255,6 +264,15 @@ class _SlotSpecState:
     """Per-slot host state of the speculative lifecycle."""
     stream: List[int] = field(default_factory=list)   # prompt + committed
     fed: int = 0            # stream tokens whose KV the draft cache holds
+    # recompute-on-resume: committed tokens still to re-feed through the
+    # target cache (outputs discarded). While nonempty the slot drafts
+    # nothing (gamma forced 0) — replay rounds are plain re-decodes.
+    replay: List[int] = field(default_factory=list)
+    # True from continuation admit until the first post-replay round:
+    # that round also runs plain (gamma 0) so its single append stays
+    # inside the admission's resume reserve — it always completes and
+    # commits >= 1 new token, which is what makes preemption converge.
+    resumed: bool = False
 
 
 def generate_continuous_spec(eng, requests: Sequence[Union[Request,
@@ -274,7 +292,8 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
     stats = SpecStats(draft_policy=eng.draft.name, gamma=gamma)
 
     if eng.paged:
-        eng.block_allocator = paging_lib.BlockAllocator(eng.pool_blocks)
+        eng.block_allocator = paging_lib.BlockAllocator(
+            eng.pool_blocks, fault_plan=eng.fault_plan)
         sched = Scheduler(buckets or eng.buckets, eng.slots,
                           allocator=eng.block_allocator,
                           block_need=eng._request_blocks,
@@ -321,6 +340,20 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         slot_state[i] = _SlotSpecState()
         clean.add(i)
 
+    def replaying() -> List[int]:
+        """Slots mid-resume — never preemption victims (convergence: a
+        victim must have recorded progress since its last preemption)."""
+        return [i for i, st in enumerate(slot_state) if st.replay]
+
+    def spec_preempt(i: int) -> None:
+        """Preempt slot `i`: requeue prompt + committed as a continuation
+        and drop all of its device state (target AND drafter — the
+        drafter re-prefills at re-admission, so no draft row survives).
+        Unlike the plain loop there is never a pending token to fold:
+        every committed token was recorded synchronously."""
+        sched.preempt(i)
+        reset_slot(i)
+
     def admit_draft(slot: int, req: Request, key) -> None:
         """Prefill + insert the drafter's cache for a just-admitted
         request (the drafter sees the same prompt under its own spec)."""
@@ -351,17 +384,34 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
             return True
         return False
 
-    def admit_into(slot: int) -> bool:
+    def admit_into(slot: int, ladder: bool = False) -> bool:
         """Monolithic admission (target + draft caches). Mirrors the
-        engine's plain-loop admission, extended with the drafter."""
+        engine's plain-loop admission, extended with the drafter.
+        `ladder=True` (round-top sweep only — never mid-round, where a
+        victim reset would corrupt in-flight per-round state) lets a
+        refused admission preempt a victim for its blocks."""
         nonlocal cache, prefill_s
         while True:
             req = sched.admit_next(slot)
             if req is None:
-                if (eng.paged and sched.pending and not sched.active_slots()
-                        and not sched.prefilling_slots()):
-                    sched.fail_head()
-                    continue
+                if eng.paged and sched.pending:
+                    tries = sched.note_retry()
+                    if (ladder and eng.preemption
+                            and tries > eng.preempt_patience):
+                        v = sched.preempt_victim(
+                            exclude=(slot, *replaying()))
+                        if v is not None:
+                            spec_preempt(v)
+                            continue
+                    if (not sched.active_slots()
+                            and not sched.prefilling_slots()):
+                        # transient injected refusals get a bounded
+                        # retry window before the head is declared
+                        # truly unservable
+                        if tries <= eng.fail_patience:
+                            continue
+                        sched.fail_head()
+                        continue
                 if slot not in clean:
                     reset_slot(slot)
                 return False
@@ -382,6 +432,19 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
             tmirror.admit(slot, len(req.tokens))
             prefill_s += time.perf_counter() - t0
             admit_draft(slot, req, k1)
+            if req.emitted_prefix:
+                # preempted continuation: the prompt's KV was just
+                # re-prefilled; the already-recorded tokens re-enter
+                # through plain replay rounds (all but the last fed with
+                # outputs discarded; the last fed token's output is the
+                # first NEW token). The prefill's sample is discarded —
+                # the first emitted token is already in the prefix.
+                st = slot_state[slot]
+                st.stream = (list(map(int, req.tokens))
+                             + [int(t) for t in req.emitted_prefix])
+                st.replay = [int(t) for t in req.emitted_prefix[:-1]]
+                st.resumed = True
+                return True
             if not record(slot, int(jax.device_get(tok)[0]), count=False):
                 return True
             # 1-token request: retired immediately, refill the slot
@@ -421,6 +484,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
 
     # chunked-prefill interleave state (at most one admission in flight)
     adm = None
+    preempt_due = list(eng.preempt_at)   # forced (round, slot) pairs
 
     if not eng.chunked_prefill:
         for i in range(eng.slots):
@@ -443,8 +507,45 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                 tmirror.admit(slot0, len(req0.tokens))
                 eng.key, kd = jax.random.split(eng.key)
                 admit_draft(slot0, req0, kd)
-                record(slot0, int(jax.device_get(ftok)[0]), count=False)
+                if req0.emitted_prefix:
+                    # chunk-admitted continuation: discard the sampled
+                    # first token, replay the recorded prefix instead
+                    st0 = slot_state[slot0]
+                    st0.stream = (list(map(int, req0.tokens))
+                                  + [int(t) for t in req0.emitted_prefix])
+                    st0.replay = [int(t) for t in req0.emitted_prefix[:-1]]
+                    st0.resumed = True
+                else:
+                    record(slot0, int(jax.device_get(ftok)[0]), count=False)
                 active = sched.active_slots()
+        if preempt_due:
+            # forced preemptions (tests): fire at the given dispatch round
+            due = [p for p in preempt_due if p[0] == stats.rounds]
+            if due:
+                preempt_due = [p for p in preempt_due
+                               if p[0] != stats.rounds]
+                for _, s in due:
+                    if s in sched.active_slots():
+                        spec_preempt(s)
+                active = sched.active_slots()
+        if (eng.preemption and adm is not None
+                and adm.stalls > eng.preempt_patience):
+            # chunk-admission grant stalled past patience: escalate to
+            # the ladder (never the admission's own slot or a replayer)
+            v = sched.preempt_victim(exclude=(adm.slot, *replaying()))
+            if v is not None:
+                spec_preempt(v)
+                adm.stalls = 0
+        if (eng.preemption and not eng.chunked_prefill and sched.pending):
+            # admission retry sweep: a refused head may fit now, or may
+            # claim a victim through the ladder
+            for i in sched.free_slots():
+                if not sched.pending or not admit_into(i, ladder=True):
+                    break
+            active = sched.active_slots()
+        if (eng.audit_every and stats.rounds
+                and stats.rounds % eng.audit_every == 0):
+            eng._run_audit(sched, cache)
         if not active:
             if sched.pending or adm is not None:
                 if not eng.chunked_prefill:
@@ -456,6 +557,16 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         # --- per-slot speculation depth (host mirrors, no device sync) --
         gam: Dict[int, int] = {}
         for s in active:
+            if slot_state[s].replay:
+                gam[s] = 0      # mid-resume: plain replay rounds only
+                continue
+            if slot_state[s].resumed:
+                # first post-replay round: plain, so its one append is
+                # inside the admission's resume reserve — guaranteed to
+                # complete and commit the first new token
+                slot_state[s].resumed = False
+                gam[s] = 0
+                continue
             st = sched.slot_request(s)
             remaining = st.max_new - len(slot_state[s].stream) + len(st.tokens)
             g = min(gamma,
@@ -502,13 +613,41 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         # --- lazy paged: cover the verify appends; starved slots fall
         # back to a plain step, then to an oom retire -------------------
         for s in list(active):
+            if s not in active:     # preempted as an earlier slot's victim
+                continue
             if grow_blocks_for(s, 1 + gam[s]):
                 continue
             if gam[s] > 0 and grow_blocks_for(s, 1):
                 gam[s] = 0
                 continue
-            sched.retire(s, "oom")
-            reset_slot(s)
+            gam[s] = 0
+            # transient injected refusals: each retry is a fresh alloc
+            granted = False
+            for _ in range(eng.fail_patience):
+                if grow_blocks_for(s, 1):
+                    granted = True
+                    break
+            if not granted and eng.preemption:
+                # the ladder: free victims' blocks until the grant fits
+                while not granted:
+                    v = sched.preempt_victim(exclude=(s, *replaying()))
+                    if v is None:
+                        break
+                    spec_preempt(v)
+                    if v in active:
+                        active.remove(v)
+                    gam.pop(v, None)
+                    granted = grow_blocks_for(s, 1)
+            if granted:
+                continue
+            if eng.preemption and (len(sched.active_slots()) > 1
+                                   or sched.prefilling_slots()):
+                # other work holds blocks that will free: requeue this
+                # slot instead of failing it
+                spec_preempt(s)
+            else:
+                sched.retire(s, "oom")
+                reset_slot(s)
             active.remove(s)
             gam.pop(s, None)
         if not active:
@@ -530,7 +669,11 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                 dcache = eng._truncate_draft(dcache, jnp.asarray(m_vec))
             feed = np.zeros(eng.slots, np.int32)
             for s in active:
-                feed[s] = slot_state[s].stream[-1]
+                st = slot_state[s]
+                # mid-resume: re-feed the next recorded token (its output
+                # is a re-derivation, discarded); past the replay queue
+                # the last stream token's output is the first new one
+                feed[s] = st.replay[0] if st.replay else st.stream[-1]
             eng.key, kp = jax.random.split(eng.key)
             tok_dev, cache = eng._decode(eng.params, cache,
                                          jnp.asarray(feed)[:, None], kp)
@@ -538,8 +681,12 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
             stats.rounds += 1
             toks = np.asarray(tok_dev)
             for s in active:
-                stats.plain_steps += 1
+                st = slot_state[s]
                 tmirror.append(s, 1)
+                if st.replay:
+                    st.replay.pop(0)    # replay row landed; output unused
+                    continue
+                stats.plain_steps += 1
                 if record(s, int(toks[s])) and sched.pending \
                         and not eng.chunked_prefill:
                     for i in sched.free_slots():
@@ -552,7 +699,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         valid = np.zeros(eng.slots, np.int32)
         for s in active:
             st = slot_state[s]
-            tokens[s, 0] = st.stream[-1]
+            tokens[s, 0] = st.replay[0] if st.replay else st.stream[-1]
             for i, d in enumerate(drafts[s][:gam[s]]):
                 tokens[s, 1 + i] = d
             valid[s] = 1 + min(gam[s], len(drafts[s]))
@@ -589,7 +736,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                 stats.verify_steps += 1
                 stats.drafted += g
                 stats.accepted += a
-            else:
+            elif not st.replay:
                 stats.plain_steps += 1
         if m_vec.any():
             dcache = eng._truncate_draft(dcache, jnp.asarray(m_vec))
@@ -597,6 +744,10 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         for s in active:
             g = int(valid[s]) - 1
             a = int(acc[s])
+            st = slot_state[s]
+            if st.replay:
+                st.replay.pop(0)        # replay row committed (valid=1);
+                continue                # the re-derived output is unused
             retired = False
             for i in range(a + 1):
                 if g >= 1:
@@ -614,6 +765,8 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                         break
 
     decode_s = (time.perf_counter() - loop_t0) - (prefill_s - prefill_at_loop)
+    if eng.paged:
+        eng._run_audit(sched)    # every pool block accounted for, or raise
     return eng._continuous_result(
         sched, cache, prefill_s=prefill_s, decode_s=decode_s,
         decode_tokens=decode_tokens, spec_stats=stats)

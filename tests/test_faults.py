@@ -1,0 +1,364 @@
+"""Overload robustness: deterministic fault injection, pool invariant
+audits, preemption with recompute-on-resume, pressure-driven budget
+degradation. Tier-2 (own CI job); the pinned contracts:
+
+  * forced preempt-at-step-k greedy streams are BIT-IDENTICAL to
+    unpreempted runs (full/kivi2 x dense/paged, plain and speculative);
+  * the overload ladder turns starvation failures into completions —
+    "oom"/"failed" only when a request cannot fit an empty pool;
+  * every paged run ends with a clean audit: zero leaked, double-mapped
+    or refcount-skewed blocks, under injected faults included.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import paging as P
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, PressureController, Request
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic injection on the allocator
+# ---------------------------------------------------------------------------
+
+
+def _drain(alloc, n_calls, n=1):
+    """Run `n_calls` 1-block allocs, freeing each grant immediately;
+    returns the set of refused call indices."""
+    refused = set()
+    for k in range(n_calls):
+        ids = alloc.alloc(n)
+        if ids is None:
+            refused.add(k)
+        else:
+            alloc.free(ids)
+    return refused
+
+
+def test_fault_plan_explicit_indices():
+    plan = P.FaultPlan(fail_allocs=(1, 3))
+    a = P.BlockAllocator(4, fault_plan=plan)
+    assert _drain(a, 6) == {1, 3}
+    assert a.faults_injected == 2 and a.alloc_calls == 6
+
+
+def test_fault_plan_rate_is_deterministic():
+    runs = []
+    for _ in range(2):
+        a = P.BlockAllocator(4, fault_plan=P.FaultPlan(seed=7,
+                                                       fail_rate=0.3))
+        runs.append(_drain(a, 40))
+    assert runs[0] == runs[1]           # same seed -> same refusals
+    assert 0 < len(runs[0]) < 40        # and the rate actually fired
+    b = P.BlockAllocator(4, fault_plan=P.FaultPlan(seed=8, fail_rate=0.3))
+    assert _drain(b, 40) != runs[0]     # different seed -> different plan
+
+
+def test_fault_plan_max_failures_bounds_injection():
+    a = P.BlockAllocator(4, fault_plan=P.FaultPlan(seed=0, fail_rate=1.0,
+                                                   max_failures=3))
+    refused = _drain(a, 10)
+    assert refused == {0, 1, 2} and a.faults_injected == 3
+
+
+def test_fault_plan_only_fires_on_would_succeed_calls():
+    """A call the pool would refuse anyway is a real refusal, not an
+    injected one — plans replay against the workload's success path."""
+    a = P.BlockAllocator(2, fault_plan=P.FaultPlan(fail_allocs=(0,)))
+    assert a.alloc(5) is None           # too big: genuine refusal
+    assert a.faults_injected == 0
+    assert a.alloc(1) is not None       # call 1: plan only named call 0
+
+
+def test_fault_plan_refcount_skew_and_audit():
+    a = P.BlockAllocator(4, fault_plan=P.FaultPlan(skew_alloc=1,
+                                                   skew_delta=1))
+    ids0 = a.alloc(1)
+    ids1 = a.alloc(2)                   # call 1: first id over-counted
+    assert a.skews_injected == 1
+    assert a.refcount(ids1[0]) == 2
+    with pytest.raises(P.PoolAuditError, match="skew"):
+        P.audit_pool(a, {0: ids0, 1: ids1})
+    # the leak is real: freeing every holder's reference strands the block
+    a.free(ids0)
+    a.free(ids1)
+    assert a.refcount(ids1[0]) == 1 and ids1[0] not in a.free_ids()
+    with pytest.raises(P.PoolAuditError, match="leak"):
+        P.audit_pool(a, {})
+
+
+# ---------------------------------------------------------------------------
+# audit_pool: detection units on hand-built states
+# ---------------------------------------------------------------------------
+
+
+def test_audit_clean_report():
+    a = P.BlockAllocator(6)
+    x, y = a.alloc(2), a.alloc(1)
+    a.incref([x[0]])                    # index holds a second reference
+    rep = P.audit_pool(a, {0: x, 1: y}, index_blocks=[x[0]])
+    assert rep["clean"] and rep["allocated"] == 3 and rep["free"] == 3
+    assert not (rep["leaked"] or rep["double_mapped"] or rep["skewed"])
+
+
+def test_audit_detects_leak():
+    a = P.BlockAllocator(4)
+    ids = a.alloc(2)
+    with pytest.raises(P.PoolAuditError, match="leak"):
+        P.audit_pool(a, {})             # allocated but no holder census
+    rep = P.audit_pool(a, {0: ids})
+    assert rep["clean"]
+
+
+def test_audit_detects_double_map_and_freed_map():
+    a = P.BlockAllocator(4)
+    ids = a.alloc(1)
+    with pytest.raises(P.PoolAuditError, match="twice"):
+        P.audit_pool(a, {0: ids + ids})
+    a2 = P.BlockAllocator(4)
+    ids2 = a2.alloc(1)
+    a2.free(ids2)
+    with pytest.raises(P.PoolAuditError, match="freed"):
+        P.audit_pool(a2, {0: ids2})
+
+
+def test_audit_detects_orphaned_incref():
+    a = P.BlockAllocator(4)
+    ids = a.alloc(1)
+    a.incref(ids)                       # refcount 2, but only one holder
+    with pytest.raises(P.PoolAuditError, match="skew"):
+        P.audit_pool(a, {0: ids})
+
+
+def test_audit_device_table_cross_check():
+    a = P.BlockAllocator(8)
+    ids = a.alloc(3)
+    tbl = np.full((2, 2, 4), -1, np.int32)      # [L, slots, n_max]
+    tbl[:, 0, :3] = ids
+    rep = P.audit_pool(a, {0: ids}, block_tbl=tbl, tbl_slots=[0])
+    assert rep["clean"]
+    bad = tbl.copy()
+    bad[1, 0, 1] = ids[0]               # layer copies diverge
+    with pytest.raises(P.PoolAuditError):
+        P.audit_pool(a, {0: ids}, block_tbl=bad, tbl_slots=[0])
+    swapped = tbl.copy()
+    swapped[:, 0, :3] = ids[::-1]       # row order != grant order
+    with pytest.raises(P.PoolAuditError):
+        P.audit_pool(a, {0: ids}, block_tbl=swapped, tbl_slots=[0])
+    # a prefilling slot's unwritten row is exempt unless listed
+    rep = P.audit_pool(a, {0: ids}, block_tbl=swapped, tbl_slots=[])
+    assert rep["clean"]
+
+
+# ---------------------------------------------------------------------------
+# PressureController watermarks
+# ---------------------------------------------------------------------------
+
+
+def test_pressure_controller_hysteresis():
+    ctrl = PressureController(high_water=0.8, low_water=0.5)
+    a = P.BlockAllocator(10)
+    grants = [a.alloc(1) for _ in range(7)]
+    assert ctrl.shortfall(a) == 0 and not ctrl.pressed    # 0.7 < high
+    grants.append(a.alloc(1))
+    assert ctrl.shortfall(a) == 3 and ctrl.pressed        # 0.8 -> target 5
+    a.free(grants.pop())
+    a.free(grants.pop())
+    assert ctrl.shortfall(a) == 1 and ctrl.pressed        # 0.6: still on
+    a.free(grants.pop())
+    assert ctrl.shortfall(a) == 0 and not ctrl.pressed    # 0.5: released
+    assert ctrl.stats["peak_used_frac"] == 0.8
+
+
+def test_pressure_controller_validation():
+    with pytest.raises(ValueError):
+        PressureController(high_water=0.4, low_water=0.6)
+    with pytest.raises(ValueError):
+        PressureController(keep_groups=1)
+
+
+# ---------------------------------------------------------------------------
+# End to end: recompute-on-resume bit-identity, ladder, degrade, soak
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, size=32, max_new=10):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                        size=size).astype(np.int32),
+                    max_new=max_new) for _ in range(n)]
+
+
+def _tokens(res):
+    return [r.tokens.tolist() for r in sorted(res.results,
+                                              key=lambda r: r.uid)]
+
+
+@pytest.mark.parametrize("pname,paged", [
+    ("full", False), ("full", True), ("kivi2", False), ("kivi2", True),
+])
+def test_preempt_resume_bit_identical(small_model, pname, paged):
+    """THE tentpole contract: force preemptions at fixed decode steps;
+    the preempted run re-prefills the prompt, replays the emitted
+    tokens, and its final greedy streams equal the unpreempted run's
+    bit for bit."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)[pname]
+    kw = dict(prompt_len=32, max_new=10, slots=2, buckets=(32,), seed=0)
+    if paged:
+        kw.update(paged=True, block_len=8)
+    base = Engine(cfg, params, pol, **kw)
+    ref = base.generate_continuous(_requests(cfg, 3, seed=1))
+    eng = Engine(cfg, params, pol, preempt_at=((3, 0), (5, 1)), **kw)
+    res = eng.generate_continuous(_requests(cfg, 3, seed=1))
+    assert _tokens(res) == _tokens(ref)
+    assert sum(r.n_preemptions for r in res.results) >= 2
+    if paged:
+        assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+@pytest.mark.parametrize("pname,paged", [
+    ("full", True),
+    pytest.param("full", False, marks=pytest.mark.slow),
+    pytest.param("kivi2", False, marks=pytest.mark.slow),
+    ("kivi2", True),
+])
+def test_preempt_resume_bit_identical_speculative(small_model, pname,
+                                                  paged):
+    """Same contract through the draft/verify loop: a preempted slot
+    replays through plain rounds (gamma forced 0 mid-resume), then
+    resumes drafting — streams unchanged."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)[pname]
+    kw = dict(prompt_len=32, max_new=12, slots=2, buckets=(32,), seed=0,
+              speculative=True, gamma=3, draft_policy="kivi2:16:8")
+    if paged:
+        kw.update(paged=True, block_len=8)
+    base = Engine(cfg, params, pol, **kw)
+    ref = base.generate_continuous(_requests(cfg, 3, seed=1, max_new=12))
+    eng = Engine(cfg, params, pol, preempt_at=((2, 0), (4, 1)), **kw)
+    res = eng.generate_continuous(_requests(cfg, 3, seed=1, max_new=12))
+    assert _tokens(res) == _tokens(ref)
+    assert sum(r.n_preemptions for r in res.results) >= 2
+    if paged:
+        assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+def test_lazy_starvation_preempts_instead_of_oom(small_model):
+    """Satellite 1: mid-decode block starvation under lazy growth routes
+    through preempt/requeue — every request completes (serialized), none
+    retires "oom", and the ladder-off twin really does fail some."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    kw = dict(prompt_len=32, max_new=10, slots=3, buckets=(32,), seed=0,
+              paged=True, block_len=8, block_growth="lazy", pool_blocks=10)
+    reqs = lambda: _requests(cfg, 4, seed=3)
+    off = Engine(cfg, params, pol, **kw)
+    res_off = off.generate_continuous(reqs())
+    assert any(r.finish_reason in ("oom", "failed")
+               for r in res_off.results)
+    on = Engine(cfg, params, pol, preemption=True, **kw)
+    res_on = on.generate_continuous(reqs())
+    assert all(r.finish_reason == "length" for r in res_on.results)
+    assert sum(r.n_preemptions for r in res_on.results) >= 1
+    assert on.last_audit is not None and on.last_audit["clean"]
+    # the streams match an uncontended run (resume exactness end to end)
+    wide = Engine(cfg, params, pol, prompt_len=32, max_new=10, slots=3,
+                  buckets=(32,), seed=0, paged=True, block_len=8,
+                  block_growth="lazy")
+    assert _tokens(res_on) == _tokens(wide.generate_continuous(reqs()))
+
+
+def test_unservable_request_still_fails_with_retries_counted(small_model):
+    """Only truly-unservable work fails: a request that cannot fit an
+    EMPTY pool retires "failed" even with the full ladder on, and its
+    result carries the bounded-retry count."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=2,
+                 buckets=(32,), paged=True, block_len=8, pool_blocks=2,
+                 preemption=True, seed=0)
+    res = eng.generate_continuous(
+        [Request(tokens=np.zeros(32, np.int32), max_new=4)])
+    (r,) = res.results
+    assert r.finish_reason == "failed" and r.n_tokens == 0
+    assert r.n_retries > eng.fail_patience
+    assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+def test_degradation_under_pressure(small_model):
+    """Tentpole rung 1: above the high-water mark, resident kivi2 slots
+    drop their oldest flushed groups (blocks released through the
+    scheduler seam) before any preemption fires; everything completes
+    and the pool audit stays clean."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["kivi2"]
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=16, slots=3,
+                 buckets=(32,), paged=True, block_len=8,
+                 block_growth="lazy", preemption=True, degrade=True,
+                 degrade_high=0.5, degrade_low=0.3, seed=0)
+    res = eng.generate_continuous(_requests(cfg, 6, seed=5, max_new=16))
+    assert all(r.finish_reason == "length" for r in res.results)
+    st = eng.pressure.stats
+    assert st["degrades"] >= 1 and st["blocks_dropped"] >= 1
+    assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+def test_degrade_requires_lazy_quantized():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    pol = presets(budget=32, window=8)["kivi2"]
+    with pytest.raises(ValueError, match="lazy"):
+        Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=2,
+               buckets=(32,), paged=True, block_len=8, degrade=True)
+    with pytest.raises(ValueError, match="quantized|grouped"):
+        Engine(cfg, params, presets(budget=32, window=8)["full"],
+               prompt_len=32, max_new=8, slots=2, buckets=(32,),
+               paged=True, block_len=8, block_growth="lazy", degrade=True)
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=2,
+               buckets=(32,), fault_plan=P.FaultPlan())
+
+
+@pytest.mark.parametrize("pname", ["full", "kivi2"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fault_injection_soak(small_model, pname, seed):
+    """Satellite 3: randomized (seeded) alloc failures against a mixed
+    run with the ladder on — every request finishes or fails cleanly,
+    and the end-of-run audit finds zero leaked / double-mapped blocks."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)[pname]
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=10, slots=2,
+                 buckets=(32,), paged=True, block_len=8,
+                 block_growth="lazy", preemption=True, audit_every=4,
+                 fault_plan=P.FaultPlan(seed=seed, fail_rate=0.15), seed=0)
+    res = eng.generate_continuous(_requests(cfg, 4, seed=seed))
+    assert len(res.results) == 4
+    assert all(r.finish_reason in ("length", "eos", "failed", "oom")
+               for r in res.results)
+    assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+def test_fault_injection_reclaim_storm_with_skew_is_caught(small_model):
+    """A refcount skew injected mid-run is invisible to the serving loop
+    but cannot survive the audit."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    eng = Engine(cfg, params, pol, prompt_len=32, max_new=8, slots=2,
+                 buckets=(32,), paged=True, block_len=8,
+                 block_growth="lazy", preemption=True,
+                 fault_plan=P.FaultPlan(skew_alloc=0, skew_delta=1),
+                 seed=0)
+    with pytest.raises(P.PoolAuditError):
+        eng.generate_continuous(_requests(cfg, 2, seed=0, max_new=4))
+    assert eng.block_allocator.skews_injected == 1

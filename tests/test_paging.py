@@ -274,6 +274,8 @@ def test_continuous_paged_equals_dense(small_model, pname):
         res = eng.generate_continuous(
             [Request(tokens=r.tokens, max_new=r.max_new) for r in reqs])
         outs[paged] = _uid_tokens(res)
+        if paged:        # teardown audit: every pool block accounted for
+            assert eng.last_audit is not None and eng.last_audit["clean"]
     assert outs[False] == outs[True]
 
 
@@ -292,6 +294,7 @@ def test_paged_pool_exhaustion_recycles(small_model):
                  buckets=(32,), paged=True, block_len=8, pool_blocks=6,
                  seed=0)
     res = eng.generate_continuous(reqs)
+    assert eng.last_audit is not None and eng.last_audit["clean"]
     assert len(res.results) == 4
     assert all(r.n_tokens == 4 for r in res.results)
     assert res.pool_peak_blocks <= 6

@@ -299,7 +299,10 @@ def _run(cfg, params, pname, *, share, chunked=False, near=0.0, L=64,
                  near_hit=near if share else 0.0, use_kernels=use_kernels,
                  pool_blocks=pool_blocks, block_growth=block_growth)
     reqs = [Request(tokens=p, max_new=new) for p in prompts]
-    return eng.generate_continuous(reqs)
+    res = eng.generate_continuous(reqs)
+    # teardown audit: allocator refcounts vs slot tables vs prefix index
+    assert eng.last_audit is not None and eng.last_audit["clean"]
+    return res
 
 
 def _assert_equal(res_off, res_on, label):

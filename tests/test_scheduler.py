@@ -8,6 +8,7 @@ import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.core import cache as C
+from repro.core import paging as P
 from repro.core.cache import CacheSpec
 from repro.core.policy import presets
 from repro.nn import model as M
@@ -131,6 +132,102 @@ def test_scheduler_fail_head_and_failed_retire():
     res2 = sched.retire(0, "failed")
     assert res2.finish_reason == "failed" and res2.ttft_s == 0.0
     assert sched.all_done()
+
+
+def test_scheduler_preempt_requeues_with_prefix():
+    """Preemption folds emitted tokens into the continuation prefix,
+    releases blocks, requeues at the queue FRONT; on re-admission the
+    length budget and the retired result count the prefix."""
+    alloc = P.BlockAllocator(8)
+    sched = Scheduler((16,), n_slots=2, clock=_FakeClock(),
+                      allocator=alloc, block_need=lambda r: 2)
+    r1 = _req(16, max_new=6)
+    r2 = _req(16, max_new=6)
+    sched.submit(r1)
+    sched.submit(r2)
+    assert sched.admit_next(0) is r1 and alloc.used == 2
+    sched.record_token(0, 7)
+    sched.record_token(0, 8)
+    assert sched.preempt(0) is r1
+    assert alloc.used == 0 and sched.active_slots() == []
+    assert list(r1.emitted_prefix) == [7, 8]
+    assert r1.n_preemptions == 1 and sched.n_preemptions == 1
+    assert len(r1.token_times_prefix) == 2
+    assert sched.pending == 2
+    assert sched.admit_next(1) is r1         # continuation jumps r2
+    for t in (9, 10, 11):
+        assert sched.record_token(1, t) is None
+    assert sched.record_token(1, 12) == "length"   # 2 prefix + 4 = 6
+    res = sched.retire(1, "length")
+    assert res.tokens.tolist() == [7, 8, 9, 10, 11, 12]
+    assert res.n_preemptions == 1
+    assert res.token_times.shape == (6,)
+    assert res.ttft_s > 0                    # first-token time carried
+
+
+def test_scheduler_preempt_guards():
+    sched = Scheduler((16,), n_slots=2, clock=_FakeClock())
+    with pytest.raises(ValueError):
+        sched.preempt(0)                     # empty slot
+    sched.submit(_req(16))
+    sched.begin_prefill(0)
+    with pytest.raises(ValueError, match="prefilling"):
+        sched.preempt(0)                     # cancel, don't preempt
+
+
+def test_scheduler_preempt_victim_policy():
+    """Lowest progress fraction loses; ties break youngest-admitted
+    first; prefilling and excluded slots are never victims."""
+    sched = Scheduler((16,), n_slots=3, clock=_FakeClock())
+    a = _req(16, max_new=4)
+    b = _req(16, max_new=4)
+    c = _req(16, max_new=8)
+    for r in (a, b, c):
+        sched.submit(r)
+    assert sched.admit_next(0) is a
+    assert sched.admit_next(1) is b
+    assert sched.admit_next(2) is c
+    for s in (0, 1, 2):
+        sched.record_token(s, 1)
+    assert sched.preempt_victim() == 2               # 1/8 < 1/4
+    assert sched.preempt_victim(exclude=(2,)) == 1   # tie: b younger
+    assert sched.preempt_victim(exclude=(1, 2)) == 0
+    assert sched.preempt_victim(exclude=(0, 1, 2)) is None
+    # a continuation's prefix counts as progress
+    sched.preempt(2)
+    assert sched.preempt_victim() in (0, 1)
+
+
+def test_scheduler_note_retry_counts():
+    sched = Scheduler((16,), n_slots=1, clock=_FakeClock())
+    assert sched.note_retry() == 0           # empty queue: no-op
+    sched.submit(_req(16))
+    assert sched.note_retry() == 1
+    assert sched.note_retry() == 2
+    assert sched.n_retries == 2
+    res = sched.fail_head()
+    assert res.n_retries == 2                # surfaced on the result
+
+
+def test_scheduler_replace_blocks_and_occupied():
+    alloc = P.BlockAllocator(8)
+    sched = Scheduler((16,), n_slots=2, clock=_FakeClock(),
+                      allocator=alloc, block_need=lambda r: 4)
+    sched.submit(_req(16))
+    sched.admit_next(0)
+    ids = sched.slot_blocks(0)
+    keep = [ids[2], ids[0]]                  # degraded table order
+    dropped = sched.replace_blocks(0, keep)
+    assert sorted(dropped) == sorted(set(ids) - set(keep))
+    assert sched.slot_blocks(0) == keep and alloc.used == 2
+    assert sched.occupied_blocks() == {0: keep}
+    with pytest.raises(AssertionError):
+        sched.replace_blocks(0, [99])        # not a subset of the grant
+    # occupied_blocks censuses PREFILLING holders too (audit input)
+    sched.submit(_req(16))
+    sched.begin_prefill(1)
+    occ = sched.occupied_blocks()
+    assert set(occ) == {0, 1} and occ[1] == sched.slot_blocks(1)
 
 
 # ---------------------------------------------------------------------------

@@ -43,7 +43,10 @@ def _run(cfg, params, pname, *, L=64, new=16, n=5, slots=2, eos_at=None,
     prompts = _prompts(cfg, n, L)
     reqs = [Request(tokens=prompts[i], max_new=new,
                     eos_id=(eos_at if i == 1 else None)) for i in range(n)]
-    return eng.generate_continuous(reqs)
+    res = eng.generate_continuous(reqs)
+    if eng.paged:        # teardown audit: every pool block accounted for
+        assert eng.last_audit is not None and eng.last_audit["clean"]
+    return res
 
 
 def _assert_equal_streams(res_a, res_b, label):
