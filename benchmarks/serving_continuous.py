@@ -39,6 +39,14 @@ over completed requests, preemption/retry/degrade counts, and the pool
 invariant audit (ladder-on must complete 100% where ladder-off fails
 >= 1 request; asserted under --check).
 
+KV-tiering report (`--prompt-mix tiered`): a kivi2 workload whose
+working set is >= 1.5x the device pool, host spill tier on vs off —
+off strands work ("oom"/"failed"); on completes everything by demoting
+cold blocks and spilling preempted slots to host RAM (restored, not
+recomputed), moving *quantized* bytes: >= 4x fewer bytes per block
+than fp16 transport asserted under --check for 2-bit. `--json PATH`
+mirrors every computed report to a machine-readable file.
+
 Prefix-sharing report (`--prompt-mix templated`): N requests sharing a
 512-token system prompt served with the radix prefix cache on vs off —
 warm admissions prefill only their unique tail and map the shared
@@ -457,6 +465,77 @@ def overload_report(budget, window, *, block_len=16, slots=4,
             "requests": requests, "off": out[False], "on": out[True]}
 
 
+def tiered_report(window=32, *, block_len=16, slots=4, requests=8,
+                  max_new=48):
+    """KV tiering under a pool sized *below the working set*: `slots`
+    co-resident kivi2 requests want ~2x the device blocks that exist.
+
+    Tiering off (and no ladder), mid-decode block starvation under lazy
+    growth strands work: requests retire "oom"/"failed". Tiering on,
+    the ladder's spill rung demotes cold blocks and preempted slots
+    snapshot to host RAM — restored on re-admission instead of
+    recomputed — so the same workload completes. The tier moves
+    *quantized* bytes: one block costs `block_bytes` on the wire vs
+    what the same rows would cost as fp16 (`fp16_block_bytes`) — the
+    compressed-transport ratio (>= 4x asserted under --check for
+    2-bit at this window/head-dim)."""
+    cfg, params = bench_model(n_layers=2, d_model=256, train_steps=0)
+    L = min(BUCKETS)
+    # eviction-free budget (see overload_report): resident block need
+    # grows monotonically, so the pool pressure is persistent
+    budget = -(-(L + max_new) // window) * window
+    pol = presets(budget=budget, window=window)["kivi2"]
+    rng = np.random.default_rng(9)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                        size=L).astype(np.int32),
+                    max_new=max_new) for _ in range(requests)]
+    probe = Engine(cfg, params, pol, prompt_len=L, max_new=max_new,
+                   slots=slots, buckets=(L,), paged=True,
+                   block_len=block_len, block_growth="lazy")
+    need_adm = probe._request_blocks(
+        Request(tokens=reqs[0].tokens, max_new=max_new))
+    need_total = probe.n_max_blocks
+    pool = min(max(2 * need_adm + 1, need_total),
+               max(2 * need_total - 1, 1))
+    working_set = slots * need_total
+    out = {}
+    for tiered in (False, True):
+        eng = Engine(cfg, params, pol, prompt_len=L, max_new=max_new,
+                     slots=slots, buckets=(L,), paged=True,
+                     block_len=block_len, block_growth="lazy",
+                     pool_blocks=pool, preemption=tiered, tiering=tiered,
+                     audit_every=8)
+        res = eng.generate_continuous(
+            [Request(tokens=r.tokens, max_new=r.max_new) for r in reqs])
+        done = [r for r in res.results
+                if r.finish_reason in ("eos", "length")]
+        out[tiered] = dict(
+            completed=len(done),
+            failed=len(res.results) - len(done),
+            goodput_tok_s=(sum(len(r.tokens) for r in done)
+                           / max(res.decode_seconds, 1e-9)),
+            preemptions=sum(r.n_preemptions for r in res.results),
+            audit_clean=bool(eng.last_audit and eng.last_audit["clean"]),
+        )
+        if tiered:
+            t = res.tier
+            out[tiered].update(
+                n_spills=t["n_spills"], n_fetches=t["n_fetches"],
+                bytes_moved=t["bytes_moved"],
+                fetch_stall_s=t["fetch_stall_s"],
+                block_bytes=t["block_bytes"],
+                fp16_block_bytes=t["fp16_block_bytes"],
+                transport_ratio=(t["fp16_block_bytes"]
+                                 / max(t["block_bytes"], 1)),
+                fp16_bytes_equiv=(t["bytes_moved"] * t["fp16_block_bytes"]
+                                  / max(t["block_bytes"], 1)),
+            )
+    return {"pool_blocks": pool, "working_set_blocks": working_set,
+            "oversubscription": working_set / max(pool, 1),
+            "requests": requests, "window": window,
+            "off": out[False], "on": out[True]}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--policies", default="full,h2o,kivi2")
@@ -494,17 +573,22 @@ def main() -> int:
     ap.add_argument("--no-lazy", action="store_true",
                     help="skip the lazy block-growth capacity report")
     ap.add_argument("--prompt-mix", choices=("random", "templated",
-                                             "overload"),
+                                             "overload", "tiered"),
                     default="random",
                     help="templated: add the prefix-sharing report (N "
                          "requests sharing a 512-token system prompt, "
                          "served with the radix prefix cache on vs off); "
                          "overload: add the 2x-oversubscribed-pool report "
                          "(overload ladder on vs off, goodput + failure "
-                         "rate)")
+                         "rate); tiered: add the KV-tiering report (pool "
+                         "below the working set, host spill tier on vs "
+                         "off, compressed-transport bytes-moved ratio)")
     ap.add_argument("--sys-len", type=int, default=512,
                     help="shared system-prompt length for --prompt-mix "
                          "templated")
+    ap.add_argument("--json", default="",
+                    help="write every computed report to PATH as JSON "
+                         "(machine-readable mirror of the stdout tables)")
     args = ap.parse_args()
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
@@ -629,6 +713,30 @@ def main() -> int:
               f"{pfx['on_seqs_per_gb']:,.0f} seqs/GB, "
               f"{pfx['capacity_ratio']:.2f}x)")
 
+    tiered = None
+    if args.prompt_mix == "tiered":
+        # window=32 (not args.window): the quant flush group == window,
+        # and the group size sets the f32-scale overhead the transport
+        # ratio amortizes — 32 is where 2-bit clears 4x at this head dim
+        tiered = tiered_report(block_len=args.block_len)
+        print(f"\nKV tiering ({tiered['requests']} kivi2 requests, working "
+              f"set {tiered['working_set_blocks']} blocks into a "
+              f"{tiered['pool_blocks']}-block pool — "
+              f"{tiered['oversubscription']:.1f}x oversubscribed):")
+        for name, r in (("tiering off", tiered["off"]),
+                        ("tiering on", tiered["on"])):
+            print(f"  {name:<11} {r['completed']}/{tiered['requests']} "
+                  f"completed ({r['failed']} failed), goodput "
+                  f"{r['goodput_tok_s']:.1f} tok/s, "
+                  f"{r['preemptions']} preemptions, audit "
+                  f"{'clean' if r['audit_clean'] else 'DIRTY'}")
+        t = tiered["on"]
+        print(f"  transport: {t['n_spills']} spills / {t['n_fetches']} "
+              f"fetches moved {human_bytes(t['bytes_moved'])} quantized "
+              f"vs {human_bytes(t['fp16_bytes_equiv'])} as fp16 "
+              f"({t['transport_ratio']:.1f}x fewer bytes/block), fetch "
+              f"stalls {t['fetch_stall_s'] * 1e3:.1f} ms total")
+
     over = None
     if args.prompt_mix == "overload":
         over = overload_report(args.budget, args.window,
@@ -645,6 +753,42 @@ def main() -> int:
                   f"{r['preemptions']} preemptions, {r['retries']} "
                   f"retries, {r['degrades']} degrades, audit "
                   f"{'clean' if r['audit_clean'] else 'DIRTY'}")
+
+    if args.json:
+        # written before --check so a failed gate still leaves the data
+        import dataclasses
+        import json
+
+        def jsonable(x):
+            if isinstance(x, dict):
+                return {str(k): jsonable(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return [jsonable(v) for v in x]
+            if isinstance(x, np.integer):
+                return int(x)
+            if isinstance(x, np.floating):
+                return float(x)
+            if isinstance(x, np.ndarray):
+                return x.tolist()
+            return x
+
+        payload = jsonable({
+            "workload": {"requests": len(requests), "buckets": list(BUCKETS),
+                         "max_new_cap": MAX_NEW_CAP, "slots": args.slots,
+                         "paged": args.paged, "prompt_mix": args.prompt_mix},
+            "head_to_head": [dataclasses.asdict(r) for r in rows],
+            "mixed_budget_capacity": cap,
+            "admission_stall": stall,
+            "speculative": spec_rep,
+            "lazy_growth": lazy,
+            "prefix_sharing": pfx,
+            "overload": over,
+            "tiering": tiered,
+        })
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote JSON report to {args.json}")
 
     if args.check:
         import jax
@@ -696,6 +840,33 @@ def main() -> int:
                 print(f"CHECK FAILED: prefix sharing seqs/GB ratio "
                       f"{pfx['capacity_ratio']:.2f}x < 1.3x")
                 return 1
+        if tiered is not None:
+            if tiered["oversubscription"] < 1.5:
+                print(f"CHECK FAILED: tiered working set only "
+                      f"{tiered['oversubscription']:.2f}x the device pool "
+                      f"(< 1.5x — the scenario proves nothing)")
+                return 1
+            if tiered["on"]["failed"] != 0:
+                print(f"CHECK FAILED: {tiered['on']['failed']} requests "
+                      f"failed with tiering ON (want 0)")
+                return 1
+            if tiered["off"]["failed"] < 1:
+                print("CHECK FAILED: tiered workload not oversubscribed "
+                      "enough — the tiering-off run had no failures")
+                return 1
+            if tiered["on"]["n_spills"] < 1 or tiered["on"]["n_fetches"] < 1:
+                print("CHECK FAILED: tiering-on run never exercised the "
+                      "swap path (no spills or no fetches)")
+                return 1
+            if tiered["on"]["transport_ratio"] < 4.0:
+                print(f"CHECK FAILED: 2-bit transport moved only "
+                      f"{tiered['on']['transport_ratio']:.2f}x fewer "
+                      f"bytes/block than fp16 (< 4x)")
+                return 1
+            if not tiered["on"]["audit_clean"]:
+                print("CHECK FAILED: pool audit dirty after the "
+                      "tiering-on run")
+                return 1
         if over is not None:
             if over["on"]["failed"] != 0:
                 print(f"CHECK FAILED: {over['on']['failed']} requests "
@@ -730,7 +901,13 @@ def main() -> int:
               + ("" if over is None else
                  f"; overload ladder {over['on']['completed']}/"
                  f"{over['requests']} completed vs "
-                 f"{over['off']['completed']}/{over['requests']} without"))
+                 f"{over['off']['completed']}/{over['requests']} without")
+              + ("" if tiered is None else
+                 f"; tiering {tiered['on']['completed']}/"
+                 f"{tiered['requests']} completed vs "
+                 f"{tiered['off']['completed']}/{tiered['requests']} "
+                 f"without, transport "
+                 f"{tiered['on']['transport_ratio']:.1f}x"))
     return 0
 
 

@@ -42,13 +42,17 @@ one-past-the-end and are dropped by the scatter (`mode="drop"`).
 """
 from __future__ import annotations
 
+import itertools
 import random
+import time
+import zlib
 from dataclasses import dataclass
-from typing import (Dict, Iterable, List, Mapping, NamedTuple, Optional,
+from typing import (Any, Dict, Iterable, List, Mapping, NamedTuple, Optional,
                     Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cache as kvcache
 from repro.core.cache import CacheSpec
@@ -413,6 +417,69 @@ def copy_pool_blocks(stacked: PagedLayerKV, src_ids: Array, dst_ids: Array,
     return stacked._replace(**upd)
 
 
+def gather_pool_blocks(stacked: PagedLayerKV, ids: Array, *,
+                       batch_axis: int = 1) -> Dict[str, Array]:
+    """Read whole pool blocks `ids` ([k] int32) out of every layer's
+    pools — the device half of a *spill* to the host tier. Returns a
+    dict keyed by `POOL_FIELDS` name (zero-width quantization leaves of
+    a dense store are omitted); each value has the block axis of the
+    pool replaced by `k`. Dispatch is asynchronous like any jax op: the
+    caller can free and re-grant the ids immediately, because the gather
+    captured the pool buffer at dispatch time."""
+    out: Dict[str, Array] = {}
+    for f in POOL_FIELDS:
+        pool = getattr(stacked, f)
+        if pool.shape[batch_axis + 1] == 0:
+            continue
+        out[f] = jnp.take(pool, ids, axis=batch_axis)
+    return out
+
+
+def scatter_pool_blocks(stacked: PagedLayerKV, ids: Array,
+                        payload: Mapping[str, Array], *,
+                        batch_axis: int = 1) -> PagedLayerKV:
+    """Write spilled block bytes back into pool rows `ids` ([k] int32)
+    — the device half of a *fetch* from the host tier. `payload` is a
+    `gather_pool_blocks` result (host numpy round-trips bit-identically:
+    the pools hold integer codes / bf16 / f32, no re-encoding on either
+    copy). The ids are freshly allocated rows, generally different from
+    the rows the blocks were spilled out of — block identity survives
+    the round trip through the holder's table/index entry, not the row
+    number."""
+    upd = {}
+    for f, val in payload.items():
+        pool = getattr(stacked, f)
+        idx = (slice(None),) * batch_axis + (ids,)
+        upd[f] = pool.at[idx].set(val.astype(pool.dtype), mode="drop")
+    return stacked._replace(**upd)
+
+
+def gather_slot_meta(stacked: PagedLayerKV, slot_idx, *,
+                     batch_axis: int = 1) -> Dict[str, Array]:
+    """Read batch slot `slot_idx`'s dense metadata row (scores, slot
+    positions, lengths, the fp residual ring) — the non-pool half of a
+    slot snapshot, so a spilled-then-restored slot resumes with exactly
+    the eviction/flush state it was preempted with."""
+    return {
+        f: jax.lax.dynamic_index_in_dim(getattr(stacked, f), slot_idx,
+                                        axis=batch_axis, keepdims=True)
+        for f in META_FIELDS
+    }
+
+
+def scatter_slot_meta(stacked: PagedLayerKV, slot_idx,
+                      payload: Mapping[str, Array], *,
+                      batch_axis: int = 1) -> PagedLayerKV:
+    """Write a `gather_slot_meta` snapshot back into slot `slot_idx`."""
+    upd = {
+        f: kvcache._scatter_batch(getattr(stacked, f),
+                                  val.astype(getattr(stacked, f).dtype),
+                                  slot_idx, batch_axis)
+        for f, val in payload.items()
+    }
+    return stacked._replace(**upd)
+
+
 def write_prefill_rows(stacked: PagedLayerKV, rows: Array, k_seg: Array,
                        v_seg: Array, *, batch_axis: int = 1) -> PagedLayerKV:
     """Prefill-direct segment write (dense, non-quantized pools): scatter
@@ -476,6 +543,19 @@ class FaultPlan:
         the block (never returns to the free list), a negative one
         under-counts (premature free / double-map). `audit_pool` must
         catch either — that is the point.
+
+    The same plan also drives the host tier's swap path (`HostTier`
+    takes the plan too), keyed by *fetch-call index* with an independent
+    rng stream (`seed + 1`) so alloc faults and fetch faults compose
+    without perturbing each other:
+
+      * `fail_fetches` / `fetch_fail_rate` / `max_fetch_failures` — the
+        fetch analogue of alloc refusal: the host copy is declared
+        unreadable (a torn transfer, an evicted pinned page) and the
+        entry is dropped, forcing the engine down the ladder to
+        recompute-on-resume.
+      * `delay_fetches` / `fetch_delay_s` — the fetch completes but
+        stalls, charged to the request's `fetch_stall_s` accounting.
     """
 
     seed: int = 0
@@ -484,6 +564,11 @@ class FaultPlan:
     max_failures: Optional[int] = None
     skew_alloc: Optional[int] = None
     skew_delta: int = 1
+    fail_fetches: Tuple[int, ...] = ()
+    fetch_fail_rate: float = 0.0
+    max_fetch_failures: Optional[int] = None
+    delay_fetches: Tuple[int, ...] = ()
+    fetch_delay_s: float = 0.005
 
 
 class PoolAuditError(AssertionError):
@@ -590,6 +675,194 @@ class BlockAllocator:
                 self._free.append(i)
 
 
+class _HostEntry(NamedTuple):
+    payload: Any            # numpy tree once resident, jax tree in flight
+    n_blocks: int
+    nbytes: int
+    resident: bool
+    checksum: int           # crc32 over leaves in jax.tree order (0 in flight)
+
+
+class HostTier:
+    """Host-RAM block tier under the device pool. Entries are whole
+    payload trees (a `gather_pool_blocks` dict, or a slot snapshot
+    wrapping one) keyed by a monotonic *handle* — deliberately not the
+    device block id, which is freed at spill time and reused: block
+    identity lives with the holder (prefix-index node, queued request
+    ticket), not the pool row.
+
+    The spill path is asynchronous and double-buffered. `begin_spill`
+    accepts the still-on-device gather result without syncing — jax's
+    functional semantics keep the captured pool buffer alive even after
+    the freed ids are re-granted and overwritten — and `drain()` one
+    engine iteration later pulls completed transfers to numpy while the
+    *next* step's decode is already dispatched. `fetch` of a
+    not-yet-resident entry drains on demand (the stall is timed and
+    surfaced). Every resident entry carries a crc32 checksum so
+    `audit_pool` can prove spilled-then-fetched bytes are bit-identical.
+
+    `capacity_blocks` bounds the tier in device-block units (a slot
+    snapshot's meta rows ride along free — they are a rounding error
+    next to the pool blocks). `fault_plan` reuses `FaultPlan`'s swap
+    fields for seeded fetch refusals / delays."""
+
+    def __init__(self, capacity_blocks: int, *,
+                 fault_plan: Optional[FaultPlan] = None):
+        if capacity_blocks < 1:
+            raise ValueError(f"need >= 1 host block, got {capacity_blocks}")
+        self.capacity_blocks = capacity_blocks
+        self.fault_plan = fault_plan
+        self._entries: Dict[int, _HostEntry] = {}
+        self._pending: List[int] = []
+        self._next = itertools.count()
+        self.fetch_calls = 0
+        self._fetch_rng = (random.Random(fault_plan.seed + 1)
+                           if fault_plan is not None else None)
+        self.stats: Dict[str, Any] = dict(
+            spills=0, fetches=0, drops=0,
+            bytes_spilled=0, bytes_fetched=0, fetch_stall_s=0.0,
+            refused_spills=0, refused_fetches=0, delayed_fetches=0)
+
+    # -- census ----------------------------------------------------------
+    @property
+    def used_blocks(self) -> int:
+        return sum(e.n_blocks for e in self._entries.values())
+
+    @property
+    def resident_blocks(self) -> int:
+        return sum(e.n_blocks for e in self._entries.values() if e.resident)
+
+    @property
+    def in_flight_blocks(self) -> int:
+        return sum(e.n_blocks for e in self._entries.values()
+                   if not e.resident)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.capacity_blocks - self.used_blocks
+
+    def handles(self) -> List[int]:
+        return list(self._entries)
+
+    def nbytes_of(self, handle: int) -> int:
+        return self._entries[handle].nbytes
+
+    # -- spill -----------------------------------------------------------
+    def begin_spill(self, payload: Any, n_blocks: int) -> Optional[int]:
+        """Adopt a dispatched device gather; returns the handle, or None
+        when the tier is full (the caller falls down the ladder). No
+        device sync: sizes come from leaf metadata."""
+        if n_blocks > self.free_blocks:
+            self.stats["refused_spills"] += 1
+            return None
+        nbytes = sum(l.nbytes for l in jax.tree.leaves(payload))
+        h = next(self._next)
+        self._entries[h] = _HostEntry(payload, n_blocks, nbytes, False, 0)
+        self._pending.append(h)
+        self.stats["spills"] += 1
+        self.stats["bytes_spilled"] += nbytes
+        return h
+
+    def drain(self) -> int:
+        """Complete pending spills: device→host copy + checksum. Called
+        one engine iteration after `begin_spill` (double-buffering) and
+        once at teardown. Returns the number of entries landed."""
+        landed = 0
+        for h in self._pending:
+            e = self._entries.get(h)
+            if e is None or e.resident:      # dropped or already fetched
+                continue
+            host = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
+                                e.payload)
+            crc = 0
+            for leaf in jax.tree.leaves(host):
+                crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+            self._entries[h] = e._replace(payload=host, resident=True,
+                                          checksum=crc)
+            landed += 1
+        self._pending = []
+        return landed
+
+    def prefetch(self, handle: int) -> None:
+        """Make `handle` resident ahead of its fetch so the fetch-time
+        stall is zero (the queue-head's ticket is the one caller)."""
+        if handle in self._entries and not self._entries[handle].resident:
+            self.drain()
+
+    # -- fetch -----------------------------------------------------------
+    def _inject_fetch_fault(self, call_idx: int) -> Tuple[bool, bool]:
+        """(refused, delayed) for this fetch call."""
+        plan = self.fault_plan
+        if plan is None:
+            return False, False
+        delayed = call_idx in plan.delay_fetches
+        if (plan.max_fetch_failures is not None
+                and self.stats["refused_fetches"] >= plan.max_fetch_failures):
+            return False, delayed
+        r = (self._fetch_rng.random()
+             if plan.fetch_fail_rate > 0.0 else 1.0)
+        refused = (call_idx in plan.fail_fetches
+                   or r < plan.fetch_fail_rate)
+        return refused, delayed
+
+    def fetch(self, handle: int) -> Optional[Tuple[Any, int, float]]:
+        """Pop entry `handle` and return `(payload, nbytes, stall_s)` —
+        the host numpy tree ready for `scatter_pool_blocks`. Returns
+        None on an injected fetch refusal (the entry is *dropped*: the
+        bytes are gone, the caller recomputes). Verifies the checksum of
+        every resident entry against spill time."""
+        call_idx = self.fetch_calls
+        self.fetch_calls += 1
+        e = self._entries.get(handle)
+        if e is None:
+            raise KeyError(f"host tier has no entry {handle}")
+        refused, delayed = self._inject_fetch_fault(call_idx)
+        if refused:
+            del self._entries[handle]
+            self.stats["refused_fetches"] += 1
+            return None
+        stall = 0.0
+        if not e.resident:
+            t0 = time.perf_counter()
+            self.drain()
+            stall = time.perf_counter() - t0
+            e = self._entries[handle]
+        if delayed:
+            stall += self.fault_plan.fetch_delay_s
+            self.stats["delayed_fetches"] += 1
+        crc = 0
+        for leaf in jax.tree.leaves(e.payload):
+            crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+        if crc != e.checksum:
+            raise PoolAuditError(
+                f"host tier entry {handle} corrupted: checksum "
+                f"{crc:#x} != spill-time {e.checksum:#x}")
+        del self._entries[handle]
+        self.stats["fetches"] += 1
+        self.stats["bytes_fetched"] += e.nbytes
+        self.stats["fetch_stall_s"] += stall
+        return e.payload, e.nbytes, stall
+
+    def drop(self, handle: int) -> None:
+        """Discard entry `handle` without fetching (holder retired)."""
+        if self._entries.pop(handle, None) is not None:
+            self.stats["drops"] += 1
+
+    def verify(self) -> List[int]:
+        """Re-checksum every resident entry; returns mismatched handles
+        (audit hook — does not consume entries)."""
+        bad = []
+        for h, e in sorted(self._entries.items()):
+            if not e.resident:
+                continue
+            crc = 0
+            for leaf in jax.tree.leaves(e.payload):
+                crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+            if crc != e.checksum:
+                bad.append(h)
+        return bad
+
+
 def audit_pool(
     allocator: BlockAllocator,
     slot_blocks: Mapping[int, Sequence[int]],
@@ -597,6 +870,8 @@ def audit_pool(
     *,
     block_tbl=None,
     tbl_slots: Optional[Iterable[int]] = None,
+    host_tier: Optional[HostTier] = None,
+    tier_holders: Iterable[int] = (),
 ) -> Dict[str, object]:
     """Cross-check the allocator's refcounts against every holder: the
     occupied slots' grant lists (`slot_blocks`: slot -> table-order ids)
@@ -613,6 +888,15 @@ def audit_pool(
     pass the *active* set: a still-prefilling slot holds granted blocks
     (censused above) whose table row is only written at insert, and
     retired slots' rows may be stale (reset is lazy).
+
+    `host_tier`/`tier_holders` add the tiering cross-check. Device ids
+    are partitioned by the checks above (free / device-mapped, each held
+    by exactly refcount holders); the tier census proves the host side:
+    every holder handle (prefix-index host nodes, queued requests' spill
+    tickets) names a live entry, every entry is named by exactly one
+    holder (an unnamed entry is a host-side leak), the tier is within
+    capacity, and every resident entry still matches its spill-time
+    checksum — spilled bytes must come back bit-identical.
 
     Returns a report dict (leaked / double_mapped / skewed / lost id
     lists plus summary counts); raises `PoolAuditError` listing every
@@ -687,6 +971,32 @@ def audit_pool(
                     f"slot {slot} device table {mapped} != grant list "
                     f"{list(ids)}")
 
+    host_resident = host_in_flight = host_entries = 0
+    if host_tier is not None:
+        held: Dict[int, int] = {}
+        for h in tier_holders:
+            held[h] = held.get(h, 0) + 1
+        live = set(host_tier.handles())
+        for h, n in sorted(held.items()):
+            if h not in live:
+                problems.append(f"tier holder names dead entry {h}")
+            elif n > 1:
+                problems.append(f"tier entry {h} claimed by {n} holders")
+        orphans = sorted(live - set(held))
+        for h in orphans:
+            problems.append(f"host entry {h} held by no index node and "
+                            "no queued ticket (host leak)")
+        if host_tier.used_blocks > host_tier.capacity_blocks:
+            problems.append(
+                f"host tier over capacity: {host_tier.used_blocks} > "
+                f"{host_tier.capacity_blocks}")
+        for h in host_tier.verify():
+            problems.append(f"host entry {h} bytes differ from spill "
+                            "time (checksum mismatch)")
+        host_resident = host_tier.resident_blocks
+        host_in_flight = host_tier.in_flight_blocks
+        host_entries = len(live)
+
     report: Dict[str, object] = dict(
         n_blocks=allocator.n_blocks,
         free=len(free),
@@ -696,6 +1006,9 @@ def audit_pool(
         double_mapped=sorted(set(double_mapped)),
         skewed=sorted(set(skewed)),
         lost=lost,
+        host_resident=host_resident,
+        host_in_flight=host_in_flight,
+        host_entries=host_entries,
         clean=not problems,
     )
     if problems:
@@ -887,6 +1200,16 @@ def mapped_blocks(p: PagedLayerKV) -> int:
     n_max = tbl.shape[-1]
     tbl2 = tbl.reshape(-1, tbl.shape[-2], n_max)[0]       # one layer copy
     return int(np.unique(tbl2[tbl2 >= 0]).size)
+
+
+def block_fp16_bytes(p: PagedLayerKV, spec: CacheSpec) -> int:
+    """Bytes one block would cost to *transport* as fp16 across every
+    layer — the uncompressed-offload baseline for the tier's bytes-moved
+    ratio. A quantized pool packs `8 // bits` codes per int8 lane, so
+    the logical element count is the packed count times that factor."""
+    n_blocks = p.pk.shape[-4]
+    factor = 8 // spec.bits if spec.quantized else 1
+    return (p.pk.size + p.pv.size) * factor // n_blocks * 2   # fp16 bytes
 
 
 def paged_physical_bytes(p: PagedLayerKV) -> int:

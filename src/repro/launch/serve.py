@@ -123,6 +123,17 @@ def main() -> None:
                          "drop their oldest flushed groups until usage "
                          "falls to the low-water mark — the reversible "
                          "rung below preemption")
+    ap.add_argument("--tiering", action="store_true",
+                    help="KV tiering (--continuous --paged only): an "
+                         "async host-RAM block tier under the pool — "
+                         "preempted slots spill their blocks and restore "
+                         "on re-admission instead of recomputing, cold "
+                         "prefix-cache blocks demote instead of "
+                         "LRU-freeing, and the overload ladder gains a "
+                         "spill rung ahead of degrade/preempt/fail")
+    ap.add_argument("--host-blocks", type=int, default=0,
+                    help="host tier capacity in blocks for --tiering "
+                         "(0 = same as the device pool)")
     ap.add_argument("--audit-every", type=int, default=0,
                     help="run the pool invariant audit (allocator "
                          "refcounts vs slot block tables vs prefix "
@@ -154,6 +165,14 @@ def main() -> None:
                  "never contend for a shared pool)")
     if args.degrade and not (args.paged and args.block_growth == "lazy"):
         ap.error("--degrade requires --paged --block-growth lazy")
+    if args.tiering and not (args.continuous and args.paged):
+        ap.error("--tiering requires --continuous --paged (the host tier "
+                 "spills pool blocks)")
+    if args.tiering and args.speculative:
+        ap.error("--tiering and --speculative are mutually exclusive "
+                 "(draft-cache restore does not track spilled blocks)")
+    if args.host_blocks and not args.tiering:
+        ap.error("--host-blocks requires --tiering")
     if args.audit_every and not args.paged:
         ap.error("--audit-every requires --paged (it audits the pool)")
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
@@ -182,6 +201,8 @@ def main() -> None:
                      prefix_sharing=args.prefix_sharing,
                      near_hit=args.near_hit,
                      preemption=args.preemption, degrade=args.degrade,
+                     tiering=args.tiering,
+                     host_blocks=args.host_blocks or None,
                      audit_every=args.audit_every)
         eos = args.eos_id if args.eos_id >= 0 else None
         shared = rng.integers(0, cfg.vocab_size,
@@ -220,6 +241,18 @@ def main() -> None:
             print(f"pressure: {st['degrades']} degrades dropped "
                   f"{st['blocks_dropped']} blocks, peak pool usage "
                   f"{st['peak_used_frac']:.2f}")
+        if args.tiering and res.tier is not None:
+            t = res.tier
+            ratio = t["fp16_block_bytes"] / max(t["block_bytes"], 1)
+            print(f"tier: {t['n_spills']} spills / {t['n_fetches']} "
+                  f"fetches moved {t['bytes_moved'] / 2**20:.1f} MiB "
+                  f"(fp16 transport would be {ratio:.1f}x), "
+                  f"fetch stalls {t['fetch_stall_s'] * 1e3:.1f} ms, "
+                  f"{t['host_entries']} entries / "
+                  f"{t['host_resident']} blocks host-resident of "
+                  f"{t['host_blocks']} (refused "
+                  f"{t['refused_fetches']} fetches, stripped "
+                  f"{t['grants_stripped']} grants)")
         if args.paged and eng.last_audit is not None:
             print(f"pool audit: clean={eng.last_audit['clean']} "
                   f"({eng.last_audit['allocated']} allocated / "

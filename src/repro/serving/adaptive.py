@@ -15,9 +15,13 @@ instead of choosing a budget once at admission, it watches the paged
 high-water mark, asks the engine to evict resident quantized/window
 slots down to a tighter effective budget (dropping their oldest flushed
 groups — quality-reversible: the slots regrow one group per window of
-appends once pressure clears). It is the first rung of the overload
-ladder: degrade reversibly before any preemption fires, preempt before
-any request fails.
+appends once pressure clears). With KV tiering enabled the same
+controller (a second instance, watching tier headroom too) drives the
+*spill* rung ahead of it, so the full overload ladder is: spill cold
+blocks to host RAM (lossless — bytes come back bit-identical), degrade
+resident budgets reversibly, preempt (to host when the tier has room —
+restore instead of recompute — else recompute-on-resume), and only then
+fail.
 """
 from __future__ import annotations
 
@@ -61,7 +65,7 @@ class PressureController:
         self.keep_groups = int(keep_groups)
         self._pressed = False
         self.stats = dict(degrades=0, blocks_dropped=0, ticks_pressed=0,
-                          peak_used_frac=0.0)
+                          peak_used_frac=0.0, spills=0, blocks_spilled=0)
 
     @property
     def pressed(self) -> bool:
@@ -88,6 +92,11 @@ class PressureController:
     def note_degrade(self, n_blocks: int) -> None:
         self.stats["degrades"] += 1
         self.stats["blocks_dropped"] += n_blocks
+
+    def note_spill(self, n_blocks: int) -> None:
+        """The spill rung freed `n_blocks` by demotion (not loss)."""
+        self.stats["spills"] += 1
+        self.stats["blocks_spilled"] += n_blocks
 
 
 def prompt_entropy(tokens: np.ndarray, vocab: int) -> float:

@@ -103,6 +103,9 @@ class ContinuousGenerationResult:
     prefix: Optional[dict] = None  # prefix-sharing runs only: warm/cold
                                    # hits + prefill seconds, CoW copies,
                                    # near-hits, index churn
+    tier: Optional[dict] = None    # tiering runs only: spill/fetch counts,
+                                   # bytes moved, fetch stalls, host-tier
+                                   # capacity + pressure-controller stats
 
     def tokens_for(self, uid: int) -> np.ndarray:
         for r in self.results:
@@ -169,6 +172,7 @@ class Engine:
                  fail_patience: int = 3,
                  degrade: bool = False, degrade_high: float = 0.85,
                  degrade_low: float = 0.60, degrade_keep_groups: int = 2,
+                 tiering: bool = False, host_blocks: Optional[int] = None,
                  fault_plan: Optional[paging_lib.FaultPlan] = None,
                  audit_every: int = 0,
                  preempt_at: Sequence[Sequence[int]] = ()):
@@ -229,6 +233,33 @@ class Engine:
             raise ValueError("block_growth='lazy' requires paged=True")
         self.lazy_blocks = block_growth == "lazy"
         self.admission_order = admission_order
+
+        # --- KV tiering: host-RAM block tier under the pool -------------
+        # A `paging.HostTier` holds spilled block payloads (async,
+        # double-buffered device<->host copies; core/paging.py). Cold
+        # sources, in ladder order: refcount-1 prefix-index blocks are
+        # *demoted* instead of LRU-freed (warm hits survive pool churn,
+        # paged back on adoption), stalled admissions' granted-but-
+        # unwritten scratch blocks are stripped, and preempted slots
+        # snapshot to host — restored on re-admission instead of
+        # recomputed. Fetch always lands blocks device-resident before
+        # attention, so kernels never see the tier.
+        self.tiering = bool(tiering)
+        if self.tiering and not self.paged:
+            raise ValueError("tiering spills paged pool blocks; it "
+                             "requires paged=True")
+        if self.tiering and speculative:
+            raise ValueError("tiering + speculative is unsupported (the "
+                             "draft cache holds no block tables to spill)")
+        if host_blocks is not None and not self.tiering:
+            raise ValueError("host_blocks requires tiering=True")
+        self.host_blocks = (int(host_blocks) if host_blocks
+                            else self.pool_blocks if self.tiering else 0)
+        self.host_tier: Optional[paging_lib.HostTier] = None
+        self.tier_pressure = None
+        self._tier_aux: dict = {}     # tier handle -> host mirror snapshots
+        self._adm_live = None         # mid-advance cache (reclaim reads it)
+        self._tier_stripped = 0       # stalled-admission grants reclaimed
 
         # --- chunked prefill (continuous batching only) -----------------
         # Long-prompt admissions stream in `chunk_len`-token segments
@@ -394,7 +425,33 @@ class Engine:
                     c.ssm, c.cross_k, c.cross_v, c.cross_bias),
                 donate_argnums=(0,) if dn else ())
 
-        if self.paged and (self.lazy_blocks or self.prefix_sharing):
+        if self.paged and self.tiering:
+            # device halves of the tier's swap path. The gathers are NOT
+            # donated (the live cache survives a spill); the scatters
+            # are (a fetch rewrites the pool in place). Payloads round-
+            # trip host RAM bit-identically — pools hold integer codes /
+            # raw floats, nothing is re-encoded on either copy.
+            self._gather_blocks = jax.jit(
+                lambda c, ids: paging_lib.gather_pool_blocks(
+                    c.attn, ids, batch_axis=2))
+            self._scatter_blocks = jax.jit(
+                lambda c, ids, payload: M.ModelCache(
+                    paging_lib.scatter_pool_blocks(c.attn, ids, payload,
+                                                   batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+            self._gather_meta = jax.jit(
+                lambda c, slot: paging_lib.gather_slot_meta(
+                    c.attn, slot, batch_axis=2))
+            self._restore_meta = jax.jit(
+                lambda c, slot, payload: M.ModelCache(
+                    paging_lib.scatter_slot_meta(c.attn, slot, payload,
+                                                 batch_axis=2),
+                    c.ssm, c.cross_k, c.cross_v, c.cross_bias),
+                donate_argnums=(0,) if dn else ())
+
+        if self.paged and (self.lazy_blocks or self.prefix_sharing
+                           or self.tiering):
             # device half of lazy growth/rollback: write freshly granted
             # ids into a slot's table row / unmap released entries
             self._grow_tbl = jax.jit(
@@ -536,10 +593,16 @@ class Engine:
         index_blocks = ()
         if self._share_state is not None:
             index_blocks = self._share_state["index"].block_ids()
+        tier_holders: List[int] = []
+        if self.host_tier is not None:
+            if self._share_state is not None:
+                tier_holders += self._share_state["index"].host_handles()
+            tier_holders += sched.queued_tickets()
         report = paging_lib.audit_pool(
             self.block_allocator, sched.occupied_blocks(), index_blocks,
             block_tbl=(cache.attn.block_tbl if cache is not None else None),
-            tbl_slots=sched.active_slots())
+            tbl_slots=sched.active_slots(),
+            host_tier=self.host_tier, tier_holders=tier_holders)
         self.last_audit = report
         return report
 
@@ -560,11 +623,28 @@ class Engine:
             rows = len(req.tokens) + len(req.emitted_prefix)
             if self.preemption:
                 rows += 1
-            return paging_lib.request_blocks_prefix(
+            base = paging_lib.request_blocks_prefix(
                 self.spec, self._S_phys, rows, self.block_len)
-        return paging_lib.request_blocks(
-            self.spec, self._S_phys, len(req.tokens), req.max_new,
-            self.block_len)
+        else:
+            base = paging_lib.request_blocks(
+                self.spec, self._S_phys, len(req.tokens), req.max_new,
+                self.block_len)
+        if req.tier_ticket is not None:
+            # a spill-preempted continuation restores its snapshot into
+            # freshly granted ids — the grant must cover the snapshot
+            # AND the recompute path (a refused fetch falls back to
+            # replay, which needs its normal coverage)
+            return max(req.tier_blocks, base)
+        return base
+
+    def _drop_ticket(self, req: Request) -> None:
+        """Abandon a queued continuation's host snapshot; it will resume
+        by recompute-on-resume replay instead."""
+        if req.tier_ticket is not None and self.host_tier is not None:
+            self.host_tier.drop(req.tier_ticket)
+            self._tier_aux.pop(req.tier_ticket, None)
+            req.tier_ticket = None
+            req.tier_blocks = 0
 
     # ------------------------------------------------------------------
     # Prefix sharing: eligibility + host-side copy-on-write trigger
@@ -743,6 +823,24 @@ class Engine:
         if self._share_state is not None:
             prefix_stats = dict(self._share_state["stats"])
             prefix_stats["index_blocks"] = len(self._share_state["index"])
+        tier_stats = None
+        if self.host_tier is not None:
+            tier_stats = dict(self.host_tier.stats)
+            tier_stats.update(
+                host_blocks=self.host_tier.capacity_blocks,
+                host_entries=len(self.host_tier.handles()),
+                host_resident=self.host_tier.resident_blocks,
+                n_spills=sched.n_spills, n_fetches=sched.n_fetches,
+                bytes_moved=sched.bytes_moved,
+                fetch_stall_s=sched.fetch_stall_s,
+                grants_stripped=self._tier_stripped,
+                # transport compression: what one block costs to move vs
+                # what it would cost as fp16 (the offload baseline)
+                block_bytes=paging_lib.bytes_per_block(cache.attn),
+                fp16_block_bytes=paging_lib.block_fp16_bytes(
+                    cache.attn, self.spec))
+            if self.tier_pressure is not None:
+                tier_stats["pressure"] = dict(self.tier_pressure.stats)
         return ContinuousGenerationResult(
             results=results,
             prefill_seconds=prefill_s,
@@ -759,6 +857,7 @@ class Engine:
             policy_name=self.policy.name,
             spec=spec_stats,
             prefix=prefix_stats,
+            tier=tier_stats,
             **pool_stats,
         )
 
@@ -781,6 +880,11 @@ class Engine:
             if not free:
                 return None
             req = sched.head_request()
+            if self.host_tier is not None and req.tier_ticket is not None:
+                # a spill-preempted continuation is restored by the
+                # loop-top ticket path, never streamed through chunked
+                # admission; later requests stay FIFO-blocked behind it
+                return None
             total = self._request_blocks(req) if self.paged else 0
             if self.paged and total > self.pool_blocks:
                 sched.fail_head()
@@ -955,6 +1059,10 @@ class Engine:
         t0 = time.perf_counter()
         first = None
         cur = adm
+        # a block grant below can trigger the scheduler's reclaim, whose
+        # tiering half gathers pool blocks — publish the in-progress
+        # cache so it never dispatches against a donated stale buffer
+        self._adm_live = cache
         while adm is not None:
             i = adm.next_i
             if i == len(adm.segs):        # compress the scratch
@@ -1025,9 +1133,11 @@ class Engine:
                 cache = self._write_rows(
                     cache, jnp.asarray(rows),
                     adm.st.k[:, :, :, c0a:c1a], adm.st.v[:, :, :, c0a:c1a])
+                self._adm_live = cache
             adm.next_i += 1
             if not run_all:
                 break
+        self._adm_live = None
         dt = time.perf_counter() - t0
         if cur is not None:
             cur.secs += dt
@@ -1101,6 +1211,21 @@ class Engine:
                     f"{self.max_new}")
             sched.submit(r)
 
+        # KV tiering: fresh host tier + its own pressure controller per
+        # run (same watermarks as degradation — the spill rung engages
+        # at the same pressure, one rung earlier in the ladder)
+        tier: Optional[paging_lib.HostTier] = None
+        tier_ctrl = None
+        self._tier_aux = {}
+        self._tier_stripped = 0
+        if self.tiering:
+            tier = paging_lib.HostTier(self.host_blocks,
+                                       fault_plan=self.fault_plan)
+            from repro.serving.adaptive import PressureController
+            tier_ctrl = PressureController(high_water=0.85, low_water=0.60)
+        self.host_tier = tier
+        self.tier_pressure = tier_ctrl
+
         # sharing routes every admission through the chunked machinery
         # (a warm hit is a chunked prefill resumed at the match offset);
         # the chunked == monolithic bit-identity contract keeps streams
@@ -1127,11 +1252,24 @@ class Engine:
             )
 
             def _reclaim(shortfall: int) -> None:
+                # under tiering, cold index blocks demote to host first
+                # (warm hits survive the churn); only what the tier
+                # can't absorb is LRU-freed outright
+                if tier is not None:
+                    shortfall -= demote_index_blocks(shortfall)
+                if shortfall <= 0:
+                    return
                 freed = index.evict(shortfall, self.block_allocator)
                 self._share_state["stats"]["evicted_blocks"] += len(freed)
                 sched.release(-1, freed)
 
             sched.reclaim = _reclaim
+            if tier is not None:
+                # tier-aware admission: free + spillable-cold coverage
+                # (the scheduler's second reclaim pass converts it)
+                sched.spillable = lambda: min(
+                    index.spillable(self.block_allocator),
+                    tier.free_blocks)
 
         def share_retire(slot_idx: int) -> None:
             if self._share_state is not None:
@@ -1187,7 +1325,15 @@ class Engine:
             if reason is not None:
                 sched.retire(s, reason)
             else:
-                sched.preempt(s)
+                # preempt-to-host: snapshot blocks + slot meta before
+                # `preempt` releases the ids; the ticketed continuation
+                # restores instead of recomputing. Tier off / host full
+                # / nothing emitted yet -> recompute-on-resume as before.
+                h = spill_slot(s)
+                req = sched.preempt(s)
+                if h is not None:
+                    req.tier_ticket = h
+                    req.tier_blocks = self._tier_aux[h]["n"]
             share_retire(s)
             cache = self._reset(cache, jnp.int32(s))
             clean_slots.add(s)
@@ -1232,6 +1378,208 @@ class Engine:
                 ctrl.note_degrade(len(dropped))
                 shortfall -= len(dropped)
 
+        # --- KV tiering closures (all no-ops with tiering off) ----------
+        def _live_cache():
+            """Buffer a tier gather may dispatch against. A block grant
+            inside `_advance_chunked_admission` can reclaim -> demote
+            while the closure `cache` is a donated stale buffer; the
+            admission publishes its in-progress cache for that window."""
+            return self._adm_live if self._adm_live is not None else cache
+
+        def demote_index_blocks(shortfall: int) -> int:
+            """Cold source (a): prefix-cache blocks past their last
+            adopter (refcount 1) demote to host LRU-first instead of
+            being LRU-freed — a later warm hit pages them back
+            (`promote_for_head`) rather than re-prefilling. Returns the
+            number of device blocks freed."""
+            share = self._share_state
+            if tier is None or share is None:
+                return 0
+            index = share["index"]
+            freed = 0
+            while freed < shortfall:
+                node = index.demote_candidate(self.block_allocator)
+                if node is None:
+                    break
+                payload = self._gather_blocks(
+                    _live_cache(), jnp.asarray([node.block_id], jnp.int32))
+                h = tier.begin_spill(payload, 1)
+                if h is None:
+                    break                       # host tier full
+                bid = node.block_id
+                index.mark_host(node, h)
+                sched.release(-1, [bid])
+                sched.note_swap(-1, spills=1,
+                                bytes_moved=tier.nbytes_of(h))
+                freed += 1
+            if freed and tier_ctrl is not None:
+                tier_ctrl.note_spill(freed)
+            return freed
+
+        def spill_tick() -> None:
+            """The ladder's new first rung, ahead of degradation: above
+            the tier controller's high-water mark, demote cold index
+            blocks, then strip granted-but-unwritten blocks from a
+            stalled PREFILLING admission (its scratch holds the rows, so
+            the blocks carry no data yet and the grant loop simply
+            re-requests them once pressure clears)."""
+            shortfall = tier_ctrl.shortfall(self.block_allocator)
+            if shortfall <= 0:
+                return
+            shortfall -= demote_index_blocks(shortfall)
+            if (shortfall > 0 and adm is not None and not adm.direct
+                    and not adm.blend and adm.stalls > 0
+                    and adm.granted > adm.n_adopt):
+                n_strip = min(shortfall, adm.granted - adm.n_adopt)
+                freed = sched.release_blocks(adm.slot, n_strip)
+                adm.granted -= len(freed)
+                self._tier_stripped += len(freed)
+
+        def spill_slot(s: int) -> Optional[int]:
+            """Snapshot slot `s`'s pool blocks + meta row (and host-side
+            mirrors) into the tier. Async: the gather is dispatched, the
+            ids freed immediately by the caller's `preempt`, the host
+            copy drains next iteration. Returns the ticket, or None when
+            the slot can't restore bit-identically (mid-replay, nothing
+            emitted yet) or the host tier is full."""
+            if tier is None or s in replay or sched.emitted_total(s) == 0:
+                return None
+            ids = sched.slot_blocks(s)
+            if not ids:
+                return None
+            payload = dict(
+                blocks=self._gather_blocks(
+                    cache, jnp.asarray(ids, jnp.int32)),
+                meta=self._gather_meta(cache, jnp.int32(s)))
+            h = tier.begin_spill(payload, len(ids))
+            if h is None:
+                return None         # host full -> recompute-on-resume
+            aux: dict = dict(n=len(ids))
+            if lazy_mirror is not None:
+                aux["lazy"] = lazy_mirror.snapshot(s)
+            if self._share_state is not None:
+                aux["share"] = self._share_state["mirror"].snapshot(s)
+            self._tier_aux[h] = aux
+            sched.note_swap(s, spills=len(ids),
+                            bytes_moved=tier.nbytes_of(h))
+            return h
+
+        def try_restore(slot_idx: int, req) -> bool:
+            """Land a ticketed continuation's saved blocks back into its
+            fresh grant and resume from the last emitted token — no
+            replay; restored bytes are checksum-verified bit-identical.
+            A refused fetch (injected fault) consumes the ticket and
+            returns False: the caller falls back to recompute-on-resume,
+            which rebuilds the same stream."""
+            nonlocal cache
+            h = req.tier_ticket
+            req.tier_ticket = None
+            req.tier_blocks = 0
+            aux = self._tier_aux.pop(h, None)
+            got = tier.fetch(h)
+            if got is None:                 # refusal: the bytes are gone
+                return False
+            payload, nbytes, stall = got
+            k = aux["n"]
+            ids = sched.slot_blocks(slot_idx)
+            cache = self._scatter_blocks(
+                cache, jnp.asarray(ids[:k], jnp.int32), payload["blocks"])
+            cache = self._restore_meta(cache, jnp.int32(slot_idx),
+                                       payload["meta"])
+            # map the full grant: the k saved blocks plus any headroom
+            # blocks the re-admission granted beyond them (future rows)
+            row = np.full(self.n_max_blocks, -1, np.int32)
+            row[:len(ids)] = ids
+            cache = self._grow_tbl(cache, jnp.int32(slot_idx),
+                                   jnp.int32(0), jnp.asarray(row))
+            clean_slots.discard(slot_idx)
+            if lazy_mirror is not None:
+                lazy_mirror.restore(slot_idx, aux["lazy"])
+            if self._share_state is not None:
+                # row mirror only: the restored slot owns fresh exclusive
+                # ids, so no CoW watch set ("upto") comes back with it
+                self._share_state["mirror"].restore(slot_idx, aux["share"])
+            sched.note_swap(slot_idx, fetches=k, bytes_moved=nbytes,
+                            stall_s=stall)
+            next_tok[slot_idx] = req.emitted_prefix[-1]
+            return True
+
+        def admit_ticket_head() -> None:
+            """Loop-top admission for a ticketed (spill-preempted)
+            continuation: a plain `admit_next` sizes the grant through
+            `_request_blocks` (>= its saved blocks), then the fetch lands
+            the snapshot into the granted ids. Runs outside the chunked
+            machinery — there is no prompt left to stream."""
+            nonlocal cache, tok_in, prefill_s
+            free = sched.free_slots()
+            if not free:
+                return
+            i = free[0]
+            req = sched.admit_next(i)
+            if req is None:
+                tries = sched.note_retry()
+                if self.preemption and tries > self.preempt_patience:
+                    v = sched.preempt_victim(exclude=tuple(replay))
+                    if v is not None:
+                        preempt_slot(v)
+                        return
+                if (not sched.active_slots()
+                        and not sched.prefilling_slots()
+                        and tries > self.fail_patience):
+                    # the whole pool can't cover the ticket-sized grant:
+                    # drop the ticket so the continuation retries as a
+                    # plain (smaller-footprint) recompute admission
+                    head = sched.head_request()
+                    if head is not None and head.tier_ticket is not None:
+                        self._drop_ticket(head)
+                return
+            t0 = time.perf_counter()
+            ok = try_restore(i, req)
+            prefill_s += time.perf_counter() - t0
+            if ok:
+                tok_in = tok_in.at[i].set(int(next_tok[i]))
+            else:
+                # fetch refused before anything ran in the slot: requeue
+                # at the front as an ordinary recompute-on-resume
+                # continuation (the chunked machinery re-prefills it)
+                sched.preempt(i)
+
+        def promote_for_head() -> None:
+            """Pre-admission paging for a warm hit on demoted prefix
+            blocks: fetch the head prompt's host-resident nodes back into
+            freshly allocated blocks so `match` can hand the admission
+            the full read-only hit. A refused fetch drops the node's
+            subtree (its bytes are gone); an empty free list leaves the
+            admission with the partial (device-resident) hit."""
+            nonlocal cache
+            share = self._share_state
+            if tier is None or share is None or not sched.pending:
+                return
+            req = sched.head_request()
+            if req is None or not self._share_retained(len(req.tokens)):
+                return
+            index = share["index"]
+            for node in index.match_nodes(req.tokens):
+                if node.host is None:
+                    continue
+                got_ids = self.block_allocator.alloc(1)
+                if got_ids is None:
+                    break
+                got = tier.fetch(node.host)
+                if got is None:
+                    dev_ids, handles = index.drop_node(node)
+                    sched.release(-1, dev_ids)
+                    for hh in handles:
+                        tier.drop(hh)
+                    sched.release(-1, got_ids)
+                    break
+                payload, nbytes, stall = got
+                cache = self._scatter_blocks(
+                    cache, jnp.asarray(got_ids, jnp.int32), payload)
+                index.promote(node, got_ids[0])
+                sched.note_swap(-1, fetches=1, bytes_moved=nbytes,
+                                stall_s=stall)
+
         def admit_into(slot_idx: int, ladder: bool = False) -> bool:
             """Fill a free slot from the queue: bucketed batch-1 prefill,
             scatter into the live cache, stream the first token. Loops in
@@ -1270,6 +1618,14 @@ class Engine:
                             # every completed request's results).
                             if tries <= self.fail_patience:
                                 continue
+                            head = sched.head_request()
+                            if (tier is not None and head is not None
+                                    and head.tier_ticket is not None):
+                                # a ticket-sized grant the pool can never
+                                # cover: drop the snapshot and retry as a
+                                # plain (smaller) recompute continuation
+                                self._drop_ticket(head)
+                                continue
                             sched.fail_head()
                             continue
                     # nothing admittable: clear the slot so stale KV never
@@ -1281,6 +1637,15 @@ class Engine:
                         cache = self._reset(cache, jnp.int32(slot_idx))
                         clean_slots.add(slot_idx)
                     return False
+                if tier is not None and req.tier_ticket is not None:
+                    # ticketed continuation: land the snapshot into the
+                    # grant instead of re-prefilling; a refused fetch
+                    # falls through to recompute-on-resume below
+                    t0 = time.perf_counter()
+                    ok = try_restore(slot_idx, req)
+                    prefill_s += time.perf_counter() - t0
+                    if ok:
+                        return True
                 self.key, k1 = jax.random.split(self.key)
                 t0 = time.perf_counter()
                 logits, pc = self._prefill(
@@ -1363,7 +1728,18 @@ class Engine:
         loop_t0 = time.perf_counter()
         prefill_at_loop = prefill_s
         while True:
+            if tier is not None:
+                # pull last iteration's dispatched spill copies to host
+                # (decode has run behind them — no hot-path sync)
+                tier.drain()
             if use_adm and adm is None:
+                if tier is not None and sched.pending:
+                    head = sched.head_request()
+                    if head is not None and head.tier_ticket is not None:
+                        tier.prefetch(head.tier_ticket)
+                        admit_ticket_head()
+                    else:
+                        promote_for_head()
                 adm = self._start_chunked_admission(sched)
             if preempt_due:
                 # forced preemption injection — the deterministic
@@ -1388,6 +1764,8 @@ class Engine:
                     if not sched.pending or not admit_into(i, ladder=True):
                         break
                     tok_in = tok_in.at[i].set(int(next_tok[i]))
+            if tier_ctrl is not None:
+                spill_tick()
             if self.pressure is not None:
                 degrade_tick()
             active = sched.active_slots()
@@ -1506,6 +1884,11 @@ class Engine:
                         dropped = share["index"].disown(ids_w[n_copy:])
                         share["stats"]["evicted_blocks"] += len(dropped)
                         sched.release(-1, dropped)
+                        if tier is not None:
+                            # the cascade may have unrooted demoted
+                            # descendants: their bytes die with the trie
+                            for hh in share["index"].take_orphaned_handles():
+                                tier.drop(hh)
                         res = (([], []) if n_copy == 0
                                else sched.cow_swap(s, n_copy))
                     if res is not None:
@@ -1655,6 +2038,8 @@ class Engine:
             # retired, so anything still allocated must be held by the
             # prefix index — leaks/skew surface here even in tests that
             # only assert on token streams
+            if tier is not None:
+                tier.drain()
             self._run_audit(sched)
         return self._continuous_result(
             sched, cache, prefill_s=prefill_s, decode_s=decode_s,

@@ -43,9 +43,13 @@ import numpy as np
 
 class _Node:
     """One full block of an indexed prefix: trie edge key = the block's
-    token ids, payload = pool block id + host scratch rows."""
+    token ids, payload = pool block id + host scratch rows. A *demoted*
+    node (`host` set, `block_id` None) keeps its place in the trie but
+    its block bytes live in the host tier under that handle — a warm hit
+    pages it back (`promote`) instead of re-prefilling."""
 
-    __slots__ = ("key", "parent", "children", "block_id", "piece", "tick")
+    __slots__ = ("key", "parent", "children", "block_id", "piece", "tick",
+                 "host")
 
     def __init__(self, key: tuple, parent: Optional["_Node"], block_id: int,
                  piece, tick: int):
@@ -55,6 +59,7 @@ class _Node:
         self.block_id = block_id
         self.piece = piece
         self.tick = tick
+        self.host: Optional[int] = None       # HostTier handle when demoted
 
 
 class PrefixIndex:
@@ -71,11 +76,15 @@ class PrefixIndex:
         self.align = max(int(align), 1)
         self._children: Dict[tuple, _Node] = {}      # root's children
         self._nodes: Dict[int, _Node] = {}           # block id -> node
+        self._host: Dict[int, _Node] = {}            # tier handle -> node
+        self._orphaned: List[int] = []               # handles disown dropped
         self._tick = 0
         self._recent: List[np.ndarray] = []
         self.max_recent = max_recent
         self.ingested = 0
         self.evicted = 0
+        self.demoted = 0
+        self.promoted = 0
 
     def __len__(self) -> int:
         return len(self._nodes)
@@ -104,12 +113,25 @@ class PrefixIndex:
         """Longest indexed prefix of `tokens`, in full blocks. Returns
         (pool block ids, scratch pieces) along the path and touches it
         (LRU). The engine decides how much of the match it can actually
-        use (alignment, budget retention, >= 1 suffix token)."""
+        use (alignment, budget retention, >= 1 suffix token). The usable
+        match stops at the first *demoted* node — a host-resident block
+        can't be mapped read-only; the engine promotes the path first
+        (`match_nodes` + `promote`) when it wants the full hit."""
         path = self._walk(tokens)
         self._tick += 1
         for n in path:
             n.tick = self._tick
-        return [n.block_id for n in path], [n.piece for n in path]
+        usable = []
+        for n in path:
+            if n.host is not None:
+                break
+            usable.append(n)
+        return [n.block_id for n in usable], [n.piece for n in usable]
+
+    def match_nodes(self, tokens) -> List[_Node]:
+        """The raw matched path, demoted nodes included (no LRU touch) —
+        the engine's pre-admission hook for paging host nodes back."""
+        return self._walk(tokens)
 
     def ingest(self, tokens, block_ids: List[int], pieces: List,
                allocator) -> int:
@@ -163,6 +185,73 @@ class PrefixIndex:
         self.evicted += len(out)
         return out
 
+    # ---- host tier (demote instead of evict) -----------------------------
+    def spillable(self, allocator) -> int:
+        """Blocks the engine could demote right now: device-resident
+        nodes only the index references (refcount 1). The scheduler's
+        tier-aware admission counts these as coverable capacity."""
+        return sum(1 for nd in self._nodes.values()
+                   if allocator.refcount(nd.block_id) == 1)
+
+    def demote_candidate(self, allocator) -> Optional[_Node]:
+        """LRU device node eligible for demotion (refcount 1 — mapped by
+        no resident slot). Unlike `evict` this needn't be a leaf: the
+        node keeps its trie position, so surviving paths stay intact."""
+        cands = [nd for nd in self._nodes.values()
+                 if allocator.refcount(nd.block_id) == 1]
+        return min(cands, key=lambda nd: nd.tick) if cands else None
+
+    def mark_host(self, node: _Node, handle: int) -> None:
+        """Device -> host: the node's block bytes were spilled under
+        `handle`; the caller releases the index's block reference. The
+        node stays in the trie so a warm hit survives pool churn."""
+        assert node.host is None and node.block_id is not None
+        del self._nodes[node.block_id]
+        node.block_id = None
+        node.host = handle
+        self._host[handle] = node
+        self.demoted += 1
+
+    def promote(self, node: _Node, block_id: int) -> None:
+        """Host -> device: the node's bytes were fetched into freshly
+        allocated `block_id` (the caller owns the fetch and hands the
+        index its reference back)."""
+        assert node.host is not None
+        del self._host[node.host]
+        node.host = None
+        node.block_id = int(block_id)
+        self._nodes[node.block_id] = node
+        self.promoted += 1
+
+    def host_handles(self) -> List[int]:
+        """Every host-tier handle the index holds (audit input)."""
+        return list(self._host)
+
+    def drop_node(self, node: _Node) -> Tuple[List[int], List[int]]:
+        """Remove `node` and its whole subtree from the trie (a fetch
+        refusal killed its bytes). Returns (device block ids, host
+        handles) of every removed node; the caller releases the ids and
+        drops the tier entries."""
+        siblings = (node.parent.children if node.parent is not None
+                    else self._children)
+        if siblings.get(node.key) is node:
+            del siblings[node.key]
+        ids: List[int] = []
+        handles: List[int] = []
+        stack = [node]
+        while stack:
+            nd = stack.pop()
+            if nd.block_id is not None:
+                if nd.block_id in self._nodes:
+                    del self._nodes[nd.block_id]
+                    ids.append(nd.block_id)
+            elif nd.host is not None and nd.host in self._host:
+                del self._host[nd.host]
+                handles.append(nd.host)
+            stack.extend(nd.children.values())
+        self.evicted += len(ids) + len(handles)
+        return ids, handles
+
     def disown(self, ids, allocator=None) -> List[int]:
         """Remove these blocks' nodes from the trie, cascading to any
         descendants left unreachable. Returns every removed node's block
@@ -171,7 +260,13 @@ class PrefixIndex:
         their remaining refcount). This is the copy-on-write pressure
         fallback: a slot that must un-share but can't afford the copies
         gives up the *index's* claim on its blocks instead — legal
-        exactly when no other resident slot maps them (refcount 2)."""
+        exactly when no other resident slot maps them (refcount 2).
+
+        Demoted descendants caught in the cascade surface their tier
+        handles through `take_orphaned_handles` — the engine drops the
+        host entries (this method predates the tier and every caller
+        consumes the device-id list; the handles ride a side channel
+        rather than a changed return type)."""
         dropped: List[int] = []
         for bid in ids:
             node = self._nodes.get(int(bid))
@@ -184,6 +279,12 @@ class PrefixIndex:
             stack = [node]
             while stack:
                 nd = stack.pop()
+                if nd.block_id is None:
+                    if nd.host in self._host:
+                        del self._host[nd.host]
+                        self._orphaned.append(nd.host)
+                    stack.extend(nd.children.values())
+                    continue
                 if nd.block_id not in self._nodes:
                     continue          # already removed via an earlier id
                 del self._nodes[nd.block_id]
@@ -191,6 +292,11 @@ class PrefixIndex:
                 stack.extend(nd.children.values())
         self.evicted += len(dropped)
         return dropped
+
+    def take_orphaned_handles(self) -> List[int]:
+        """Drain tier handles orphaned by `disown` cascades."""
+        out, self._orphaned = self._orphaned, []
+        return out
 
     # ---- near-hit detection (CacheBlend routing) -------------------------
     def note_prompt(self, tokens) -> None:

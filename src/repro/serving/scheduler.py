@@ -48,6 +48,20 @@ class Request:
     t_first_prefix: float = 0.0
     n_preemptions: int = 0
     n_retries: int = 0
+    # --- host-tier state (spill-to-host preemption) ---
+    # a preemption that spilled the slot's cache to the host tier rides
+    # its `HostTier` handle here; on re-admission the engine fetches and
+    # restores instead of replaying. `tier_blocks` is the granted block
+    # count the snapshot covers (restore maps exactly that many rows).
+    # The ticket is attached only while the request is queued — the
+    # audit's holder census is queued tickets + index host nodes.
+    tier_ticket: Optional[int] = None
+    tier_blocks: int = 0
+    # swap accounting accumulated across preempt/resume round trips
+    n_spills: int = 0
+    n_fetches: int = 0
+    bytes_moved: int = 0
+    fetch_stall_s: float = 0.0
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32)
@@ -77,6 +91,10 @@ class RequestResult:
         default_factory=lambda: np.zeros(0))  # inter-token stall analysis
     n_preemptions: int = 0        # times the request was preempted/resumed
     n_retries: int = 0            # admission attempts refused by the pool
+    n_spills: int = 0             # blocks spilled to the host tier
+    n_fetches: int = 0            # blocks fetched back device-side
+    bytes_moved: int = 0          # device<->host transport, both directions
+    fetch_stall_s: float = 0.0    # decode-blocking fetch wait
 
     @property
     def n_tokens(self) -> int:
@@ -108,6 +126,10 @@ class _SlotState:
     prefilling: bool = False      # chunked admission in flight: occupied,
                                   # not yet decoding (no tokens yet)
     seq: int = -1                 # admission order (victim tie-break)
+    n_spills: int = 0             # swap accounting for this residency
+    n_fetches: int = 0
+    bytes_moved: int = 0
+    fetch_stall_s: float = 0.0
 
 
 class Scheduler:
@@ -161,6 +183,13 @@ class Scheduler:
         # allocation fails, expected to drop lingering references (prefix-
         # index LRU eviction) so a retry can succeed
         self.reclaim: Optional[Callable[[int], None]] = None
+        # tier-aware admission: blocks the engine could demote to the
+        # host tier right now (cold refcount-1 prefix nodes with host
+        # room). Admission counts them as coverable: if the first
+        # reclaim retry still falls short, `_alloc` asks `reclaim` again
+        # — the engine's reclaim spills before it evicts, so the second
+        # pass converts cold-but-warm-cache capacity into free blocks.
+        self.spillable: Optional[Callable[[], int]] = None
         self._queue: Deque[Tuple[Request, float]] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
         self.results: List[RequestResult] = []
@@ -169,6 +198,10 @@ class Scheduler:
         self._admit_seq = itertools.count()
         self.n_preemptions = 0        # fleet totals (per-request counts
         self.n_retries = 0            # land on RequestResult)
+        self.n_spills = 0
+        self.n_fetches = 0
+        self.bytes_moved = 0
+        self.fetch_stall_s = 0.0
 
     def _head_idx(self) -> int:
         """Queue index the next admission takes. FIFO: the front.
@@ -258,6 +291,15 @@ class Scheduler:
             raise ValueError(f"slot {slot_idx} is empty")
         return list(st.blocks)
 
+    def emitted_total(self, slot_idx: int) -> int:
+        """Tokens the slot's request has emitted across all residencies
+        (pre-preemption prefix + this stint) — a spill snapshot needs at
+        least one, its restore resumes from the last emitted token."""
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        return len(st.req.emitted_prefix) + len(st.emitted)
+
     # ---- chunked-prefill lifecycle (QUEUED -> PREFILLING -> ACTIVE) ------
     def begin_prefill(self, slot_idx: int) -> Optional[Request]:
         """Pop the head request into a free slot in the PREFILLING state:
@@ -298,6 +340,13 @@ class Scheduler:
         giving up — resident requests always outrank the prompt cache."""
         got = self.allocator.alloc(n)
         if got is None and self.reclaim is not None:
+            self.reclaim(n - self.allocator.available)
+            got = self.allocator.alloc(n)
+        if (got is None and self.reclaim is not None
+                and self.spillable is not None and self.spillable() > 0):
+            # tier-aware second pass: the engine's reclaim demotes cold
+            # blocks to the host tier (bounded by tier room), so a
+            # request is admissible when free + spillable covers it
             self.reclaim(n - self.allocator.available)
             got = self.allocator.alloc(n)
         return got
@@ -424,11 +473,15 @@ class Scheduler:
             token_times=np.asarray(times, np.float64),
             n_preemptions=req.n_preemptions,
             n_retries=req.n_retries,
+            n_spills=req.n_spills + st.n_spills,
+            n_fetches=req.n_fetches + st.n_fetches,
+            bytes_moved=req.bytes_moved + st.bytes_moved,
+            fetch_stall_s=req.fetch_stall_s + st.fetch_stall_s,
         )
         self.results.append(res)
         return res
 
-    # ---- preemption (overload ladder: degrade -> preempt -> fail) --------
+    # ---- preemption (overload ladder: spill -> degrade -> preempt -> fail)
     def preempt(self, slot_idx: int) -> Request:
         """Evict an ACTIVE slot's request and requeue it at the queue
         front as a continuation: its blocks go back through the `release`
@@ -452,6 +505,12 @@ class Scheduler:
         req.emitted_prefix.extend(st.emitted)
         req.token_times_prefix.extend(st.token_times)
         req.n_preemptions += 1
+        # swap accounting survives the requeue on the Request, like the
+        # emitted prefix — the next residency starts its own slot counts
+        req.n_spills += st.n_spills
+        req.n_fetches += st.n_fetches
+        req.bytes_moved += st.bytes_moved
+        req.fetch_stall_s += st.fetch_stall_s
         self.n_preemptions += 1
         self._queue.appendleft((req, st.t_submit))
         return req
@@ -470,6 +529,31 @@ class Scheduler:
             if best is None or key < best[0]:
                 best = (key, i)
         return best[1] if best is not None else None
+
+    def note_swap(self, slot_idx: int, *, spills: int = 0, fetches: int = 0,
+                  bytes_moved: int = 0, stall_s: float = 0.0) -> None:
+        """Account a spill/fetch against a slot's request (and the fleet
+        totals). `slot_idx=-1` charges the fleet only — prefix-index
+        demotions/promotions move blocks no resident request owns."""
+        self.n_spills += spills
+        self.n_fetches += fetches
+        self.bytes_moved += bytes_moved
+        self.fetch_stall_s += stall_s
+        if slot_idx < 0:
+            return
+        st = self._slots[slot_idx]
+        if st is None:
+            raise ValueError(f"slot {slot_idx} is empty")
+        st.n_spills += spills
+        st.n_fetches += fetches
+        st.bytes_moved += bytes_moved
+        st.fetch_stall_s += stall_s
+
+    def queued_tickets(self) -> List[int]:
+        """Host-tier handles held by queued continuations (audit input:
+        a ticket is attached only while its request waits in queue)."""
+        return [req.tier_ticket for req, _ in self._queue
+                if req.tier_ticket is not None]
 
     def note_retry(self) -> int:
         """An admission attempt for the head request was refused by the
@@ -532,6 +616,10 @@ class Scheduler:
             token_times=np.asarray(req.token_times_prefix, np.float64),
             n_preemptions=req.n_preemptions,
             n_retries=req.n_retries,
+            n_spills=req.n_spills,
+            n_fetches=req.n_fetches,
+            bytes_moved=req.bytes_moved,
+            fetch_stall_s=req.fetch_stall_s,
         )
         self.results.append(res)
         return res

@@ -166,6 +166,18 @@ class CacheMirror:
         self.rlen[slot] = 0
         self.pos[slot] = 0
 
+    def snapshot(self, slot: int) -> dict:
+        """The slot's mirror row, detached — rides a host-tier slot
+        snapshot so a spill-preempted request resumes with the exact
+        eviction/ring state it left with."""
+        return dict(length=self.length[slot].copy(),
+                    rlen=int(self.rlen[slot]), pos=int(self.pos[slot]))
+
+    def restore(self, slot: int, snap: dict) -> None:
+        self.length[slot] = snap["length"]
+        self.rlen[slot] = snap["rlen"]
+        self.pos[slot] = snap["pos"]
+
     def _sim(self, slot: int, n: int):
         """(length, rlen) after n more appends."""
         ln = self.length[slot].copy()

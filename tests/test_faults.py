@@ -362,3 +362,72 @@ def test_fault_injection_reclaim_storm_with_skew_is_caught(small_model):
     with pytest.raises(P.PoolAuditError):
         eng.generate_continuous(_requests(cfg, 2, seed=0, max_new=4))
     assert eng.block_allocator.skews_injected == 1
+
+
+# ---------------------------------------------------------------------------
+# Swap-path faults: seeded fetch refusals / delays through the ladder
+# ---------------------------------------------------------------------------
+
+
+def test_swap_fetch_refusal_falls_back_to_recompute(small_model):
+    """An injected fetch refusal drops the spilled bytes on the floor;
+    the ladder falls back to recompute-on-resume and the greedy streams
+    stay bit-identical to an unpreempted run."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    kw = dict(prompt_len=32, max_new=10, slots=2, buckets=(32,), seed=0,
+              paged=True, block_len=8)
+    reqs = lambda: _requests(cfg, 3, seed=1)
+    ref = Engine(cfg, params, pol, **kw).generate_continuous(reqs())
+    eng = Engine(cfg, params, pol, preempt_at=((3, 0), (5, 1)),
+                 tiering=True,
+                 fault_plan=P.FaultPlan(fail_fetches=(0,)), **kw)
+    res = eng.generate_continuous(reqs())
+    assert _tokens(res) == _tokens(ref)
+    assert eng.host_tier.stats["refused_fetches"] >= 1
+    assert all(r.finish_reason == "length" for r in res.results)
+    assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+def test_swap_fetch_delay_is_timed_not_fatal(small_model):
+    """A delayed fetch only costs stall time: the restore still lands
+    bit-identical and the stall is surfaced on the result."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    kw = dict(prompt_len=32, max_new=10, slots=2, buckets=(32,), seed=0,
+              paged=True, block_len=8)
+    reqs = lambda: _requests(cfg, 3, seed=1)
+    ref = Engine(cfg, params, pol, **kw).generate_continuous(reqs())
+    eng = Engine(cfg, params, pol, preempt_at=((3, 0), (5, 1)),
+                 tiering=True,
+                 fault_plan=P.FaultPlan(delay_fetches=(0, 1),
+                                        fetch_delay_s=0.01), **kw)
+    res = eng.generate_continuous(reqs())
+    assert _tokens(res) == _tokens(ref)
+    assert eng.host_tier.stats["delayed_fetches"] >= 1
+    assert res.tier["fetch_stall_s"] >= 0.01
+    assert eng.last_audit is not None and eng.last_audit["clean"]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_swap_fault_soak(small_model, seed):
+    """Seeded refusal storm on the swap path while an oversubscribed
+    pool churns: every request still completes (refusals recompute),
+    streams match the fault-free tiering run, audit stays clean."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    kw = dict(prompt_len=32, max_new=10, slots=3, buckets=(32,), seed=0,
+              paged=True, block_len=8, block_growth="lazy",
+              pool_blocks=10, preemption=True, tiering=True,
+              audit_every=4)
+    reqs = lambda: _requests(cfg, 4, seed=3)
+    calm = Engine(cfg, params, pol, **kw)
+    res_calm = calm.generate_continuous(reqs())
+    faulty = Engine(cfg, params, pol,
+                    fault_plan=P.FaultPlan(seed=seed, fetch_fail_rate=0.3),
+                    **kw)
+    res = faulty.generate_continuous(reqs())
+    assert _tokens(res) == _tokens(res_calm)
+    assert all(r.finish_reason == "length" for r in res.results)
+    assert faulty.host_tier.fetch_calls >= 1
+    assert faulty.last_audit is not None and faulty.last_audit["clean"]

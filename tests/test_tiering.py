@@ -1,0 +1,366 @@
+"""KV tiering: the host-RAM block tier under the paged pool. Tier-2
+(own CI job); the pinned contracts:
+
+  * spilled bytes come back bit-identical — `HostTier` round-trips any
+    payload tree, checksums every entry at spill time, and both `fetch`
+    and `audit_pool` refuse corrupted bytes;
+  * tiering is invisible to decoding: greedy streams with tiering ON
+    (preempt-to-host + restore) equal tiering OFF (recompute-on-resume)
+    equal an unpreempted run, bit for bit, across full/kivi2 x
+    plain/chunked x sharing on/off;
+  * demoted prefix blocks survive pool churn: a warm hit that eviction
+    would have destroyed pages back from host instead;
+  * every run ends with a clean two-sided audit (device refcounts AND
+    host-entry census).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import paging as P
+from repro.core.policy import presets
+from repro.nn import model as M
+from repro.serving import Engine, Request
+
+
+# ---------------------------------------------------------------------------
+# HostTier: spill/drain/fetch round trips on bare payload trees
+# ---------------------------------------------------------------------------
+
+
+def _payload(seed=0, shape=(2, 8, 4, 16)):
+    rng = np.random.default_rng(seed)
+    return dict(pk=rng.standard_normal(shape).astype(np.float32),
+                pv=rng.standard_normal(shape).astype(np.float32))
+
+
+def _spill(tier, seed=0, n=1):
+    pay = _payload(seed)
+    h = tier.begin_spill(jax.tree.map(jnp.asarray, pay), n)
+    return h, pay
+
+
+def test_host_tier_roundtrip_bit_identical():
+    tier = P.HostTier(4)
+    h, pay = _spill(tier, n=2)
+    assert h is not None
+    assert tier.in_flight_blocks == 2 and tier.resident_blocks == 0
+    assert tier.drain() == 1
+    assert tier.resident_blocks == 2 and tier.free_blocks == 2
+    out, nbytes, stall = tier.fetch(h)
+    for k in pay:
+        np.testing.assert_array_equal(np.asarray(out[k]), pay[k])
+    assert nbytes == sum(v.nbytes for v in pay.values())
+    assert tier.used_blocks == 0
+    st = tier.stats
+    assert st["spills"] == 1 and st["fetches"] == 1
+    assert st["bytes_spilled"] == st["bytes_fetched"] == nbytes
+
+
+def test_host_tier_fetch_before_drain_drains_on_demand():
+    """Double-buffering's escape hatch: fetching a still-in-flight entry
+    completes the copy inline and times the stall."""
+    tier = P.HostTier(2)
+    h, pay = _spill(tier)
+    out, _, stall = tier.fetch(h)       # no drain() in between
+    np.testing.assert_array_equal(np.asarray(out["pk"]), pay["pk"])
+    assert stall >= 0.0
+    assert tier.stats["fetch_stall_s"] >= stall
+
+
+def test_host_tier_prefetch_hides_the_stall():
+    tier = P.HostTier(2)
+    h, _ = _spill(tier)
+    tier.prefetch(h)
+    assert tier.resident_blocks == 1    # landed ahead of the fetch
+    _, _, stall = tier.fetch(h)
+    assert stall == 0.0
+
+
+def test_host_tier_capacity_refusal():
+    tier = P.HostTier(2)
+    h, _ = _spill(tier, n=2)
+    assert h is not None
+    assert tier.begin_spill(jnp.zeros(4), 1) is None    # full
+    assert tier.stats["refused_spills"] == 1
+    tier.drain()
+    tier.fetch(h)
+    assert tier.begin_spill(jnp.zeros(4), 1) is not None  # room again
+
+
+def test_host_tier_drop_and_dead_handle():
+    tier = P.HostTier(2)
+    h, _ = _spill(tier)
+    tier.drop(h)
+    assert tier.stats["drops"] == 1 and tier.used_blocks == 0
+    tier.drop(h)                        # idempotent
+    assert tier.stats["drops"] == 1
+    with pytest.raises(KeyError):
+        tier.fetch(h)
+
+
+def _corrupt(tier, h, field):
+    """Flip one element of a resident entry's payload (the device_get
+    arrays are read-only views — swap in a tampered copy)."""
+    e = tier._entries[h]
+    bad = {k: np.array(v) for k, v in e.payload.items()}
+    bad[field].flat[0] += 1.0
+    tier._entries[h] = e._replace(payload=bad)
+
+
+def test_host_tier_checksum_catches_corruption():
+    tier = P.HostTier(2)
+    h, _ = _spill(tier)
+    tier.drain()
+    assert tier.verify() == []
+    _corrupt(tier, h, "pk")
+    assert tier.verify() == [h]
+    with pytest.raises(P.PoolAuditError, match="checksum"):
+        tier.fetch(h)
+
+
+def test_host_tier_fetch_fault_refusal_and_delay():
+    plan = P.FaultPlan(fail_fetches=(0,), delay_fetches=(1,),
+                       fetch_delay_s=0.01)
+    tier = P.HostTier(4, fault_plan=plan)
+    h0, _ = _spill(tier, seed=0)
+    h1, pay1 = _spill(tier, seed=1)
+    tier.drain()
+    assert tier.fetch(h0) is None       # refused; bytes are gone
+    assert tier.stats["refused_fetches"] == 1
+    assert h0 not in tier.handles()
+    out, _, stall = tier.fetch(h1)      # delayed but correct
+    np.testing.assert_array_equal(np.asarray(out["pk"]), pay1["pk"])
+    assert stall >= 0.01
+    assert tier.stats["delayed_fetches"] == 1
+
+
+def test_host_tier_fetch_fail_rate_deterministic():
+    def refusals(seed):
+        tier = P.HostTier(16, fault_plan=P.FaultPlan(
+            seed=seed, fetch_fail_rate=0.4))
+        hs = [_spill(tier, seed=i)[0] for i in range(8)]
+        tier.drain()
+        return {i for i, h in enumerate(hs) if tier.fetch(h) is None}
+    a, b = refusals(3), refusals(3)
+    assert a == b and 0 < len(a) < 8    # same seed -> same plan, and fires
+    assert refusals(4) != a
+
+
+def test_host_tier_validation():
+    with pytest.raises(ValueError):
+        P.HostTier(0)
+
+
+# ---------------------------------------------------------------------------
+# audit_pool: host-entry census cross-checks
+# ---------------------------------------------------------------------------
+
+
+def test_audit_host_census_clean_and_leak():
+    a = P.BlockAllocator(4)
+    tier = P.HostTier(4)
+    h, _ = _spill(tier)
+    tier.drain()
+    rep = P.audit_pool(a, {}, host_tier=tier, tier_holders=[h])
+    assert rep["clean"] and rep["host_entries"] == 1
+    assert rep["host_resident"] == 1 and rep["host_in_flight"] == 0
+    with pytest.raises(P.PoolAuditError, match="host leak"):
+        P.audit_pool(a, {}, host_tier=tier, tier_holders=[])
+
+
+def test_audit_host_census_dead_and_double_claim():
+    a = P.BlockAllocator(4)
+    tier = P.HostTier(4)
+    h, _ = _spill(tier)
+    with pytest.raises(P.PoolAuditError, match="dead entry"):
+        P.audit_pool(a, {}, host_tier=tier, tier_holders=[h, h + 99])
+    with pytest.raises(P.PoolAuditError, match="claimed by 2"):
+        P.audit_pool(a, {}, host_tier=tier, tier_holders=[h, h])
+
+
+def test_audit_host_census_checksum():
+    a = P.BlockAllocator(4)
+    tier = P.HostTier(4)
+    h, _ = _spill(tier)
+    tier.drain()
+    _corrupt(tier, h, "pv")
+    with pytest.raises(P.PoolAuditError, match="checksum mismatch"):
+        P.audit_pool(a, {}, host_tier=tier, tier_holders=[h])
+
+
+# ---------------------------------------------------------------------------
+# End to end: tiering is invisible to greedy decoding
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("paper-llama-7b"), num_layers=2)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, size=32, max_new=10):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                        size=size).astype(np.int32),
+                    max_new=max_new) for _ in range(n)]
+
+
+def _tokens(res):
+    return [r.tokens.tolist() for r in sorted(res.results,
+                                              key=lambda r: r.uid)]
+
+
+@pytest.mark.parametrize("pname,chunked", [
+    ("full", False), ("full", True), ("kivi2", False), ("kivi2", True),
+])
+def test_tiering_streams_bit_identical(small_model, pname, chunked):
+    """THE tentpole contract: forced preemptions spill the victim's
+    blocks to host and restore them on readmission; the streams equal
+    both the recompute-on-resume run (tiering off) and an unpreempted
+    run, bit for bit."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)[pname]
+    kw = dict(prompt_len=32, max_new=10, slots=2, buckets=(32,), seed=0,
+              paged=True, block_len=8)
+    if chunked:
+        kw.update(chunked_prefill=True, chunk_len=16)
+    reqs = lambda: _requests(cfg, 3, seed=1)
+    ref = Engine(cfg, params, pol, **kw).generate_continuous(reqs())
+    off = Engine(cfg, params, pol, preempt_at=((3, 0), (5, 1)), **kw)
+    res_off = off.generate_continuous(reqs())
+    on = Engine(cfg, params, pol, preempt_at=((3, 0), (5, 1)),
+                tiering=True, **kw)
+    res_on = on.generate_continuous(reqs())
+    assert _tokens(res_on) == _tokens(res_off) == _tokens(ref)
+    assert res_on.tier["n_spills"] >= 1 and res_on.tier["n_fetches"] >= 1
+    assert res_on.tier["bytes_moved"] > 0
+    # per-request accounting rolls up to the fleet totals
+    assert (sum(r.n_spills for r in res_on.results)
+            == res_on.tier["n_spills"])
+    assert on.last_audit is not None and on.last_audit["clean"]
+    assert off.last_audit is not None and off.last_audit["clean"]
+    # the tier drained: nothing left resident after the run
+    assert res_on.tier["host_entries"] == 0
+
+
+def _templated_prompts(cfg, n, L, seed=1, shared_frac=0.5):
+    rng = np.random.default_rng(seed)
+    m = int(L * shared_frac)
+    shared = rng.integers(0, cfg.vocab_size, size=m).astype(np.int32)
+    return [np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, size=L - m).astype(np.int32)]) for _ in range(n)]
+
+
+def test_tiering_with_sharing_streams_identical(small_model):
+    """Tiering under the prefix cache: preempt-to-host of slots holding
+    adopted (shared) blocks, plus demotion pressure, leave the streams
+    identical to a plain sharing-off run."""
+    cfg, params = small_model
+    pol = presets(budget=64, window=8)["full"]
+    kw = dict(prompt_len=64, max_new=8, slots=2, buckets=(64,), seed=0,
+              paged=True, block_len=8, chunked_prefill=True, chunk_len=16)
+    prompts = _templated_prompts(cfg, 5, 64)
+    reqs = lambda: [Request(tokens=p, max_new=8) for p in prompts]
+    ref = Engine(cfg, params, pol, **kw).generate_continuous(reqs())
+    on = Engine(cfg, params, pol, preempt_at=((3, 0), (5, 1)),
+                tiering=True, prefix_sharing=True, **kw)
+    res_on = on.generate_continuous(reqs())
+    assert _tokens(res_on) == _tokens(ref)
+    assert res_on.prefix["warm_hits"] >= 1      # sharing engaged
+    assert res_on.tier["n_spills"] >= 1         # tiering engaged
+    assert on.last_audit is not None and on.last_audit["clean"]
+
+
+def test_tiering_completes_oversubscribed_pool(small_model):
+    """Tier-aware admission + the spill rung: a pool too small for the
+    working set completes everything with tiering on (blocks park on
+    host instead of starving), streams matching an uncontended run."""
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    kw = dict(prompt_len=32, max_new=10, slots=3, buckets=(32,), seed=0,
+              paged=True, block_len=8, block_growth="lazy")
+    reqs = lambda: _requests(cfg, 4, seed=3)
+    on = Engine(cfg, params, pol, pool_blocks=10, preemption=True,
+                tiering=True, **kw)
+    res_on = on.generate_continuous(reqs())
+    assert all(r.finish_reason == "length" for r in res_on.results)
+    assert res_on.tier["n_spills"] >= 1
+    assert on.last_audit is not None and on.last_audit["clean"]
+    wide = Engine(cfg, params, pol, **kw)
+    assert _tokens(res_on) == _tokens(wide.generate_continuous(reqs()))
+
+
+# ---------------------------------------------------------------------------
+# Prefix demotion: warm hits survive churn that eviction would not
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_demotion_warm_hit_survives_eviction(small_model):
+    """Cold source (a): retired prefix blocks past refcount 1 demote to
+    host under reclaim pressure instead of LRU-freeing. A later request
+    with the same prefix pages them back (promote) and scores a warm
+    hit; with tiering off the same churn evicts the prefix and the
+    request re-prefills cold. Streams identical either way."""
+    cfg, params = small_model
+    pol = presets(budget=64, window=8)["full"]
+    L, new = 64, 8
+    kw = dict(prompt_len=L, max_new=new, slots=2, buckets=(64,), seed=0,
+              paged=True, block_len=8, chunked_prefill=True, chunk_len=16,
+              prefix_sharing=True, block_growth="lazy")
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, size=L // 2).astype(np.int32)
+    tail = lambda: rng.integers(0, cfg.vocab_size,
+                                size=L - L // 2).astype(np.int32)
+    fill = lambda: rng.integers(0, cfg.vocab_size, size=L).astype(np.int32)
+    # two sharers seed the index, fillers churn the pool past reclaim,
+    # then a third sharer probes whether the prefix survived
+    prompts = [np.concatenate([shared, tail()]),
+               np.concatenate([shared, tail()]),
+               fill(), fill(), fill(), fill(),
+               np.concatenate([shared, tail()])]
+
+    def run(pool, tiering):
+        eng = Engine(cfg, params, pol, pool_blocks=pool, preemption=True,
+                     tiering=tiering, **kw)
+        res = eng.generate_continuous(
+            [Request(tokens=p, max_new=new) for p in prompts])
+        assert eng.last_audit is not None and eng.last_audit["clean"]
+        return eng, res
+
+    # pool sized so the fillers force index reclaim between the sharers
+    pool = 24
+    eng_off, res_off = run(pool, tiering=False)
+    eng_on, res_on = run(pool, tiering=True)
+    assert _tokens(res_on) == _tokens(res_off)
+    idx = eng_on._share_state["index"]
+    assert idx.demoted >= 1             # reclaim demoted instead of freed
+    assert idx.promoted >= 1            # ...and the probe paged it back
+    assert res_on.tier["fetches"] >= 1
+    # the off run lost the prefix to eviction; the on run kept it warm
+    assert (res_on.prefix["warm_hits"] > res_off.prefix["warm_hits"]
+            or res_off.prefix["evicted_blocks"]
+            > res_on.prefix["evicted_blocks"])
+
+
+# ---------------------------------------------------------------------------
+# Construction guards
+# ---------------------------------------------------------------------------
+
+
+def test_tiering_validation(small_model):
+    cfg, params = small_model
+    pol = presets(budget=32, window=8)["full"]
+    kw = dict(prompt_len=32, max_new=8, slots=2, buckets=(32,), seed=0)
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, params, pol, tiering=True, **kw)
+    with pytest.raises(ValueError, match="speculative"):
+        Engine(cfg, params, pol, tiering=True, paged=True, block_len=8,
+               speculative=True, gamma=2, **kw)
+    with pytest.raises(ValueError, match="tiering"):
+        Engine(cfg, params, pol, paged=True, block_len=8,
+               host_blocks=16, **kw)
