@@ -2,7 +2,6 @@
 roofline. Run: PYTHONPATH=src python -m benchmarks.run"""
 from __future__ import annotations
 
-import sys
 import time
 
 

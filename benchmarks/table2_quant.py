@@ -3,9 +3,6 @@ rows): compression ratio (analytic, exact), throughput, perplexity-delta
 proxy (CE of compressed decode vs full-cache decode)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.policy import presets
 from benchmarks import common as C

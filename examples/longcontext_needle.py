@@ -9,11 +9,9 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.core.cache import CacheSpec
-from repro.core.policy import presets
 from repro.data.synthetic import needle_prompt
 from repro.data.synthetic import lm_batches
 from repro.nn import model as M

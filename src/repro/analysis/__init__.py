@@ -1,0 +1,50 @@
+"""kvlint: repo-native static analysis for the KV-cache serving stack.
+
+Every invariant this package checks was first paid for dynamically —
+`audit_pool` catching seam bypasses at teardown, bit-identity e2e grids
+catching stray host syncs as throughput cliffs, TPU runs catching
+donation regressions as OOMs. The analyzer re-states those contracts
+over the AST so they fail at review time, on every file, including
+paths no test exercises:
+
+  * ``release-seam``   — `BlockAllocator.free/incref/decref` only from
+    the ownership seam (`Scheduler.release` + allowlisted modules).
+  * ``host-sync``      — device→host syncs inside the per-step
+    decode/verify loops must carry a reasoned annotation placing them
+    in the double-buffer pipeline.
+  * ``jit-branch`` / ``jit-capture`` / ``jit-donate`` — jit hygiene:
+    no Python branches on traced values, no mutable closure captures,
+    cache-pytree jits donate (or say why not).
+  * ``pallas-grid`` / ``pallas-blockspec`` / ``pallas-interpret`` /
+    ``pallas-outshape`` — `pallas_call` contracts: index-map arity
+    matches grid rank (+scalar prefetch), block shapes match index-map
+    rank, `out_shape` present, `interpret` threaded never hardcoded.
+  * ``duck-parity``    — `LayerKV` / `PagedLayerKV` agree on the shared
+    metadata names the policies dispatch on.
+  * ``dead-module``    — modules reachable from no entry point are
+    reported; `# kvlint: dormant(<reason>)` downgrades to an
+    informational "dormant" note.
+  * ``unused-import`` / ``mutable-default`` — generic hygiene.
+
+Stdlib-only (`ast` + `tokenize`): importable and runnable with no JAX
+present, so the lint CI job and tier-1 fixture tests stay cheap.
+
+Run:  ``python -m repro.analysis [--check] [--json] PATHS...``
+Suppress: ``# kvlint: ok(<rule>: <reason>)`` — the reason is required;
+a bare ``ok(rule)`` is itself a finding.
+"""
+from __future__ import annotations
+
+from repro.analysis.config import Config, default_config
+from repro.analysis.driver import Analyzer, analyze_paths, analyze_source
+from repro.analysis.model import Finding, SourceFile
+
+__all__ = [
+    "Analyzer",
+    "Config",
+    "Finding",
+    "SourceFile",
+    "analyze_paths",
+    "analyze_source",
+    "default_config",
+]

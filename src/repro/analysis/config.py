@@ -1,0 +1,119 @@
+"""kvlint rule configuration.
+
+Everything repo-specific lives here — the seam allowlist, the hot-loop
+scopes, the duck-typed class pairs, the dynamic-import escape hatches —
+so the rules themselves stay mechanical and the fixture tests can run
+them against synthetic configs.
+
+Path entries match by *suffix component*: ``serving/scheduler.py``
+matches any analyzed path ending with those components, so the config
+is independent of where the repo is checked out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Set, Tuple
+
+
+@dataclass(frozen=True)
+class DuckClass:
+    """One side of a duck-typed pair: NamedTuple fields minus the
+    store-specific ones must equal the partner's."""
+    path: str            # suffix, e.g. "core/cache.py"
+    class_name: str
+    store_fields: Tuple[str, ...]
+
+
+@dataclass
+class Config:
+    # --- release-seam -----------------------------------------------------
+    # BlockAllocator ownership methods: callable only from the seam.
+    seam_methods: Set[str] = field(
+        default_factory=lambda: {"free", "incref", "decref"})
+    # receiver expression must mention this substring to count as an
+    # allocator call (`self.allocator`, `eng.block_allocator`, ...)
+    seam_receiver_hint: str = "allocator"
+    # (path suffix, qualname) pairs; qualname "*" allows the whole file,
+    # a trailing "/" in the path allows a whole directory. Deleting the
+    # Scheduler.release entry makes `self.allocator.free(ids)` in the
+    # release seam itself a violation (the fixture test proves it).
+    seam_allowlist: List[Tuple[str, str]] = field(default_factory=lambda: [
+        ("serving/scheduler.py", "Scheduler.release"),
+        # adopt_blocks takes the prefix index's reference on behalf of a
+        # slot — the one legal incref outside prefix.py
+        ("serving/scheduler.py", "Scheduler.adopt_blocks"),
+        ("core/paging.py", "*"),      # the allocator's own module
+        ("serving/prefix.py", "*"),   # index ingest/evict/disown refs
+        # unit tests construct throwaway allocators and poke the
+        # refcount API directly on purpose
+        ("tests/", "*"),
+    ])
+
+    # --- host-sync --------------------------------------------------------
+    # file suffix -> function qualnames whose loop bodies are the
+    # per-step decode/verify hot path (nested defs inherit the scope)
+    hot_functions: Dict[str, Set[str]] = field(default_factory=lambda: {
+        "serving/engine.py": {"Engine.generate",
+                              "Engine.generate_continuous"},
+        "serving/speculative.py": {"generate_continuous_spec"},
+    })
+    # numpy module aliases whose asarray/array force a device fetch when
+    # fed a device value (jnp.asarray is host->device and never flagged)
+    host_numpy_roots: Set[str] = field(default_factory=lambda: {"np",
+                                                                "numpy"})
+
+    # --- jit hygiene ------------------------------------------------------
+    # parameter names that mark a jitted function as cache-pytree
+    # consuming: these want donate_argnums (or a reasoned no-donate)
+    # `c` is the engine's lambda-jit idiom for the live ModelCache
+    cache_param_names: Set[str] = field(default_factory=lambda: {
+        "cache", "dc", "pc", "c", "dcache", "draft_cache"})
+
+    # --- pallas contracts -------------------------------------------------
+    # only files with a pallas_call are ever checked; nothing to scope
+
+    # --- duck-type parity -------------------------------------------------
+    duck_pairs: List[Tuple[DuckClass, DuckClass]] = field(
+        default_factory=lambda: [(
+            DuckClass("core/cache.py", "LayerKV",
+                      ("k", "v", "k_scale", "k_zero", "v_scale", "v_zero")),
+            DuckClass("core/paging.py", "PagedLayerKV",
+                      ("pk", "pv", "pk_scale", "pk_zero", "pv_scale",
+                       "pv_zero", "block_tbl")),
+        )])
+
+    # --- dead/dormant inventory -------------------------------------------
+    # module prefixes that count as entry points (reachability roots)
+    entry_point_dirs: Tuple[str, ...] = ("tests", "benchmarks", "examples")
+    # repro.analysis is the linter's own `python -m` entry point
+    entry_point_packages: Tuple[str, ...] = ("repro.launch",
+                                             "repro.analysis")
+    # modules loaded dynamically (repro.configs.base:get_config uses
+    # importlib with an arch-keyed module table) — assumed reachable
+    dynamic_module_prefixes: Tuple[str, ...] = ("repro.configs.",)
+
+    # --- unused-import ----------------------------------------------------
+    # __init__.py imports are the package's export surface
+    unused_import_skip_init: bool = True
+
+    def clone(self, **overrides) -> "Config":
+        return replace(self, **overrides)
+
+
+def default_config() -> Config:
+    return Config()
+
+
+def path_matches(path: str, suffix: str) -> bool:
+    """Component-wise suffix match; `suffix` ending in "/" matches any
+    file under that directory."""
+    norm = path.replace("\\", "/")
+    if suffix.endswith("/"):
+        return ("/" + suffix) in ("/" + norm) or norm.startswith(suffix)
+    return norm == suffix or norm.endswith("/" + suffix)
+
+
+def qualname_matches(qualname: str, pattern: str) -> bool:
+    if pattern == "*":
+        return True
+    return qualname == pattern or qualname.startswith(pattern + ".")

@@ -1,0 +1,286 @@
+"""jit hygiene: traced branches, mutable captures, cache donation.
+
+Three failure modes this repo has paid for on the serving path:
+
+  * ``jit-branch`` — a Python `if`/`while` on a traced value raises at
+    trace time on TPU but may limp along under `jax.disable_jit` in a
+    debug session and then land on main. Flagged statically: a test
+    expression referencing a non-static parameter of a jitted function
+    (shape/dtype/ndim/size reads and `is None` checks are static and
+    exempt).
+  * ``jit-capture`` — a jitted closure reading a mutable local (list/
+    dict/set) from its enclosing scope bakes the *trace-time* contents
+    into the compiled artifact; later mutations are silently ignored.
+  * ``jit-donate`` — the engine's cache pytrees are the dominant HBM
+    tenant; a cache-consuming jit without `donate_argnums` doubles the
+    cache's footprint on TPU. CPU can't donate, so intentional
+    no-donate sites carry ``# kvlint: ok(jit-donate: <why>)``.
+
+Wrap sites recognized: ``@jax.jit``, ``@(functools.)partial(jax.jit,
+...)`` decorators, and ``jax.jit(fn, ...)`` calls whose `fn` is a def
+in an enclosing scope of the same module. Cross-module callees
+(`jax.jit(M.prefill)`) are skipped — their params aren't visible here.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.config import Config
+from repro.analysis.model import Finding, SourceFile, dotted_name
+
+RULE_BRANCH = "jit-branch"
+RULE_CAPTURE = "jit-capture"
+RULE_DONATE = "jit-donate"
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_MUTABLE_CALLS = {"list", "dict", "set", "defaultdict", "deque"}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def _partial_of_jit(call: ast.Call) -> bool:
+    return (dotted_name(call.func) in ("functools.partial", "partial")
+            and call.args and _is_jax_jit(call.args[0]))
+
+
+def _const_str_tuple(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _const_int_tuple(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def _jit_kwargs(call: ast.Call) -> Tuple[List[str], List[int], bool]:
+    """(static_argnames, static_argnums, has_donate) from a jit/partial
+    call's keywords."""
+    names: List[str] = []
+    nums: List[int] = []
+    donate = False
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = _const_str_tuple(kw.value)
+        elif kw.arg == "static_argnums":
+            nums = _const_int_tuple(kw.value)
+        elif kw.arg in ("donate_argnums", "donate_argnames"):
+            donate = True
+    return names, nums, donate
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def _walk_scope(node: ast.AST):
+    """ast.walk limited to one function/module scope: nested def/class
+    bodies are not entered (their wrap sites resolve in their own
+    scope)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+class _JitSite:
+    def __init__(self, fn, line: int,
+                 static_names: Sequence[str], static_nums: Sequence[int],
+                 has_donate: bool, enclosing: Optional[ast.FunctionDef]):
+        self.fn = fn                  # FunctionDef or Lambda
+        self.name = getattr(fn, "name", "<lambda>")
+        self.line = line
+        self.has_donate = has_donate
+        self.enclosing = enclosing
+        params = _param_names(fn)
+        static = set(static_names)
+        static.update(params[i] for i in static_nums if i < len(params))
+        self.static = static
+        self.traced = [p for p in params
+                       if p not in static and p != "self"]
+
+
+def _collect_sites(tree: ast.Module) -> List[_JitSite]:
+    sites: List[_JitSite] = []
+
+    def walk(node: ast.AST, scopes: List[Dict[str, ast.FunctionDef]],
+             enclosing: Optional[ast.FunctionDef]) -> None:
+        # defs anywhere in this scope's own statements (inside if/try
+        # blocks too — the engine builds jits under `if self.paged:`)
+        local_defs: Dict[str, ast.FunctionDef] = {}
+        body_fn = enclosing
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            body_fn = node
+        scope_defs = [child for child in _walk_scope(node)
+                      if isinstance(child, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef))]
+        for child in scope_defs:
+            local_defs[child.name] = child
+
+        def resolve(name: str) -> Optional[ast.FunctionDef]:
+            for scope in [local_defs] + list(reversed(scopes)):
+                if name in scope:
+                    return scope[name]
+            return None
+
+        # decorated defs
+        for child in scope_defs:
+            for dec in child.decorator_list:
+                if _is_jax_jit(dec):
+                    sites.append(_JitSite(child, child.lineno, [], [],
+                                          False, body_fn))
+                elif isinstance(dec, ast.Call) and (
+                        _is_jax_jit(dec.func) or _partial_of_jit(dec)):
+                    names, nums, donate = _jit_kwargs(dec)
+                    sites.append(_JitSite(child, child.lineno, names,
+                                          nums, donate, body_fn))
+
+        # jax.jit(fn, ...) call sites in this scope's own statements
+        # (nested function scopes are handled by the recursion below)
+        for sub in _walk_scope(node):
+            if not isinstance(sub, ast.Call) or not _is_jax_jit(sub.func):
+                continue
+            if not sub.args:
+                continue
+            target = sub.args[0]
+            fn = None
+            if isinstance(target, ast.Name):
+                fn = resolve(target.id)
+            elif isinstance(target, ast.Lambda):
+                fn = target
+            elif isinstance(target, ast.Call) and dotted_name(
+                    target.func) in ("functools.partial", "partial") \
+                    and target.args \
+                    and isinstance(target.args[0], ast.Name):
+                fn = resolve(target.args[0].id)
+            if fn is None:
+                continue
+            names, nums, donate = _jit_kwargs(sub)
+            sites.append(_JitSite(fn, sub.lineno, names, nums, donate,
+                                  body_fn))
+
+        for child in _walk_scope(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                walk(child, scopes + [local_defs], body_fn)
+
+    walk(tree, [], None)
+    # dedupe by (fn lineno, wrap line): ast.walk above can revisit
+    seen = set()
+    out = []
+    for s in sites:
+        key = (s.fn.lineno, s.line)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(s)
+    return out
+
+
+def _test_references_traced(test: ast.AST, traced: Set[str]) -> bool:
+    """True when a branch test reads a traced name in a way that needs
+    its *value* (shape/dtype/ndim/size and `is (not) None` are static)."""
+    if isinstance(test, ast.Attribute) and test.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return False
+    if isinstance(test, ast.Name):
+        return test.id in traced
+    return any(_test_references_traced(c, traced)
+               for c in ast.iter_child_nodes(test))
+
+
+def _mutable_locals(fn: ast.FunctionDef) -> Set[str]:
+    """Names the function binds to mutable list/dict/set values."""
+    out: Set[str] = set()
+    for node in _walk_scope(fn):
+        if isinstance(node, ast.Assign):
+            value = node.value
+            mutable = isinstance(value, (ast.List, ast.Dict, ast.Set,
+                                         ast.ListComp, ast.DictComp,
+                                         ast.SetComp))
+            if isinstance(value, ast.Call):
+                mutable = dotted_name(value.func) in _MUTABLE_CALLS
+            if mutable:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+def _local_bindings(fn: ast.FunctionDef) -> Set[str]:
+    names = set(_param_names(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)) \
+                and isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+def check_jit(sf: SourceFile, cfg: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for site in _collect_sites(sf.tree):
+        traced = set(site.traced)
+        # jit-branch: host control flow on traced values
+        for node in ast.walk(site.fn):
+            if isinstance(node, (ast.If, ast.While)) \
+                    and _test_references_traced(node.test, traced):
+                findings.append(Finding(
+                    rule=RULE_BRANCH, path=sf.path, line=node.lineno,
+                    message="Python branch on traced parameter(s) %s of "
+                            "jitted %r — use lax.cond/select or mark the "
+                            "argument static"
+                            % (sorted(n for n in traced
+                                      if _test_references_traced(
+                                          node.test, {n})),
+                               site.name)))
+        # jit-capture: reads of enclosing-scope mutable locals
+        if site.enclosing is not None:
+            mutables = _mutable_locals(site.enclosing)
+            own = _local_bindings(site.fn)
+            hits: Dict[str, int] = {}
+            for node in ast.walk(site.fn):
+                if isinstance(node, ast.Name) \
+                        and isinstance(node.ctx, ast.Load) \
+                        and node.id in mutables and node.id not in own:
+                    hits.setdefault(node.id, node.lineno)
+            for name, line in sorted(hits.items(), key=lambda kv: kv[1]):
+                findings.append(Finding(
+                    rule=RULE_CAPTURE, path=sf.path, line=line,
+                    message="jitted %r closes over mutable local %r from "
+                            "its enclosing scope; the traced value is "
+                            "frozen at compile time — pass it as an "
+                            "argument" % (site.name, name)))
+        # jit-donate: cache-pytree params without donation
+        cache_params = [p for p in site.traced
+                        if p in cfg.cache_param_names]
+        if cache_params and not site.has_donate:
+            findings.append(Finding(
+                rule=RULE_DONATE, path=sf.path, line=site.line,
+                message="jit of %r consumes cache pytree(s) %s without "
+                        "donate_argnums — on TPU this doubles the "
+                        "cache's HBM footprint; donate or annotate the "
+                        "no-donate reason"
+                        % (site.name, ", ".join(cache_params))))
+    return findings

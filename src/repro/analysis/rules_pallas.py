@@ -1,0 +1,213 @@
+"""Pallas kernel contracts: grid/BlockSpec/out_shape/interpret.
+
+A `pallas_call` whose BlockSpec index maps disagree with the grid rank
+fails deep inside Mosaic with an error that names neither the operand
+nor the spec; on the interpret path it can even *run* and silently read
+block 0. These are the contracts every kernel in `kernels/` already
+follows, checked per call site:
+
+  * ``pallas-grid``     — every index map (lambda or named def) takes
+    exactly grid-rank arguments, plus one leading ref per scalar-
+    prefetch operand under `PrefetchScalarGridSpec`.
+  * ``pallas-blockspec``— a BlockSpec's block-shape tuple length equals
+    its index map's returned-tuple length (the block and the index it
+    selects must have the same rank).
+  * ``pallas-outshape`` — `out_shape=` is present (directly or via a
+    local name assigned in the same function) so result dtypes/shapes
+    are explicit, never inferred.
+  * ``pallas-interpret``— `interpret=` is threaded from a parameter;
+    a hardcoded True/False either pins the kernel to the emulator or
+    breaks the CPU CI parity path.
+
+Scoping is structural, not configured: any analyzed file containing a
+`pl.pallas_call` gets checked. BlockSpecs are associated with the
+pallas_call in the same enclosing function (the repo builds `in_specs`
+lists incrementally, so association-by-argument is not resolvable —
+one kernel launcher per function keeps this exact)."""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from repro.analysis.config import Config
+from repro.analysis.model import Finding, SourceFile, dotted_name
+
+RULE_GRID = "pallas-grid"
+RULE_BLOCKSPEC = "pallas-blockspec"
+RULE_OUTSHAPE = "pallas-outshape"
+RULE_INTERPRET = "pallas-interpret"
+
+
+def _keyword(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _tuple_len(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _grid_info(call: ast.Call, fn: ast.AST
+               ) -> Tuple[Optional[int], int, Optional[int]]:
+    """(grid_rank, n_prefetch, decl_line) for a pallas_call, following
+    either `grid=` or `grid_spec=PrefetchScalarGridSpec(...)`; grid
+    tuples bound to a local name in the same function are resolved."""
+    grid = _keyword(call, "grid")
+    if grid is not None:
+        return _resolved_tuple_len(grid, fn), 0, call.lineno
+    spec = _keyword(call, "grid_spec")
+    if isinstance(spec, ast.Call):
+        rank = _resolved_tuple_len(_keyword(spec, "grid"), fn)
+        npf = 0
+        pf = _keyword(spec, "num_scalar_prefetch")
+        if isinstance(pf, ast.Constant) and isinstance(pf.value, int):
+            npf = pf.value
+        return rank, npf, spec.lineno
+    return None, 0, None
+
+
+def _resolved_tuple_len(node: Optional[ast.AST], fn: ast.AST
+                        ) -> Optional[int]:
+    n = _tuple_len(node)
+    if n is not None:
+        return n
+    if isinstance(node, ast.Name):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == node.id
+                    for t in sub.targets):
+                n = _tuple_len(sub.value)
+                if n is not None:
+                    return n
+    return None
+
+
+def _index_map_arity(node: ast.AST, fn: ast.AST
+                     ) -> Tuple[Optional[int], Optional[int]]:
+    """(n_args, n_returned) of a BlockSpec index map — a Lambda, or a
+    Name resolving to a def in the same function."""
+    target: Optional[ast.AST] = None
+    if isinstance(node, ast.Lambda):
+        target = node
+    elif isinstance(node, ast.Name):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.FunctionDef) and sub.name == node.id:
+                target = sub
+                break
+    if target is None:
+        return None, None
+    args = target.args
+    n_args = len(args.posonlyargs) + len(args.args)
+    ret: Optional[ast.AST] = None
+    if isinstance(target, ast.Lambda):
+        ret = target.body
+    else:
+        for stmt in ast.walk(target):
+            if isinstance(stmt, ast.Return):
+                ret = stmt.value
+                break
+    n_ret = _tuple_len(ret)
+    return n_args, n_ret
+
+
+def check_pallas(sf: SourceFile, cfg: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                 and dotted_name(n.func) in ("pl.pallas_call",
+                                             "pallas_call")]
+        if not calls:
+            continue
+        fn_params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        for call in calls:
+            rank, npf, _ = _grid_info(call, fn)
+            if rank is None:
+                findings.append(Finding(
+                    rule=RULE_GRID, path=sf.path, line=call.lineno,
+                    message="pallas_call without a statically resolvable "
+                            "grid (grid= tuple or grid_spec= with a "
+                            "grid tuple)"))
+            # out_shape
+            oshape = _keyword(call, "out_shape")
+            if oshape is None:
+                findings.append(Finding(
+                    rule=RULE_OUTSHAPE, path=sf.path, line=call.lineno,
+                    message="pallas_call without out_shape= — result "
+                            "shapes/dtypes must be explicit"))
+            elif isinstance(oshape, ast.Name) \
+                    and _resolved_tuple_len(oshape, fn) is None \
+                    and not _name_assigned(oshape.id, fn):
+                findings.append(Finding(
+                    rule=RULE_OUTSHAPE, path=sf.path, line=call.lineno,
+                    message="out_shape=%r does not resolve to an "
+                            "assignment in this function" % oshape.id))
+            # interpret threading
+            interp = _keyword(call, "interpret")
+            if interp is None:
+                findings.append(Finding(
+                    rule=RULE_INTERPRET, path=sf.path, line=call.lineno,
+                    message="pallas_call without interpret= — thread the "
+                            "caller's interpret parameter so the CPU "
+                            "parity CI can run this kernel"))
+            elif isinstance(interp, ast.Constant):
+                findings.append(Finding(
+                    rule=RULE_INTERPRET, path=sf.path, line=call.lineno,
+                    message="interpret=%r hardcoded — must be threaded "
+                            "as a parameter (found in a pallas_call)"
+                            % interp.value))
+            elif isinstance(interp, ast.Name) \
+                    and interp.id not in fn_params \
+                    and not _name_assigned(interp.id, fn):
+                findings.append(Finding(
+                    rule=RULE_INTERPRET, path=sf.path, line=call.lineno,
+                    message="interpret=%r is neither a parameter nor a "
+                            "local of %r" % (interp.id, fn.name)))
+
+        # BlockSpecs anywhere in the function check against the (single)
+        # pallas_call's grid; skip when calls disagree on rank
+        ranks = {(_grid_info(c, fn)) for c in calls}
+        ranks = {(r, p) for r, p, _ in ranks if r is not None}
+        if len(ranks) != 1:
+            continue
+        rank, npf = next(iter(ranks))
+        expect = rank + npf
+        for spec in ast.walk(fn):
+            if not (isinstance(spec, ast.Call)
+                    and dotted_name(spec.func) in ("pl.BlockSpec",
+                                                   "BlockSpec")):
+                continue
+            if len(spec.args) < 2:
+                continue
+            shape_len = _tuple_len(spec.args[0])
+            n_args, n_ret = _index_map_arity(spec.args[1], fn)
+            if n_args is not None and n_args != expect:
+                findings.append(Finding(
+                    rule=RULE_GRID, path=sf.path, line=spec.lineno,
+                    message="BlockSpec index map takes %d arg(s) but the "
+                            "grid is rank %d%s — arity must match"
+                            % (n_args, rank,
+                               " (+%d scalar-prefetch ref)" % npf
+                               if npf else "")))
+            if shape_len is not None and n_ret is not None \
+                    and shape_len != n_ret:
+                findings.append(Finding(
+                    rule=RULE_BLOCKSPEC, path=sf.path, line=spec.lineno,
+                    message="BlockSpec block shape has %d dim(s) but its "
+                            "index map returns %d — block rank and "
+                            "index rank must agree" % (shape_len, n_ret)))
+    return findings
+
+
+def _name_assigned(name: str, fn: ast.AST) -> bool:
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == name
+                for t in sub.targets):
+            return True
+    return False

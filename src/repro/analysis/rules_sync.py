@@ -1,0 +1,222 @@
+"""host-sync: device→host fetches in the per-step decode/verify loops.
+
+The continuous engine is double-buffered (PR 2/4): step N+1 is
+dispatched before step N's token fetch, so exactly one pipelined sync
+per iteration reaches the host. The speculative loop is synchronous by
+design but still meters its fetches. A *new* sync added anywhere in
+these loops silently serializes dispatch against compute — correct
+output, throughput cliff, no test failure on CPU.
+
+Inside the configured hot functions (`Config.hot_functions`), lexically
+inside any `for`/`while`, the rule flags:
+
+  * ``jax.device_get(...)`` and ``jax.block_until_ready(...)``
+  * any ``.block_until_ready()`` / ``.item()`` / ``.tolist()`` method
+  * ``np.asarray(...)`` / ``np.array(...)`` (numpy conversion of a
+    device value blocks; `jnp.asarray` is host→device and exempt)
+  * ``int(...)`` / ``float(...)`` / ``bool(...)`` over a value traced
+    to a device-producing assignment (jit-handle calls `self._step(...)`,
+    `jnp.*`, `jax.random.*`) in the same function
+
+Every intentional fetch carries ``# kvlint: ok(host-sync: <where it
+sits in the pipeline>)`` — the annotations double as the sync-design
+documentation.
+
+Heuristic dataflow: a name is device-tagged if it is ever assigned from
+a device-producing call and never from a host producer (`np.*`,
+`device_get`, literals, `time.*`, `len`, `range`, comprehensions).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.config import Config, path_matches
+from repro.analysis.model import Finding, SourceFile, dotted_name, dotted_root
+
+RULE = "host-sync"
+
+_SYNC_METHODS = {"block_until_ready", "item", "tolist"}
+_CASTS = {"int", "float", "bool"}
+_HOST_ROOTS = {"time", "len", "range", "sorted", "list", "dict", "set",
+               "tuple", "min", "max", "sum", "enumerate", "zip", "str"}
+
+
+def _hot_quals(sf: SourceFile, cfg: Config) -> Set[str]:
+    for suffix, quals in cfg.hot_functions.items():
+        if path_matches(sf.path, suffix):
+            return quals
+    return set()
+
+
+def _is_device_call(node: ast.Call) -> bool:
+    """Calls that produce device values: jit handles bound as private
+    attributes (`self._decode`, `eng._verify`), `jnp.*`, `jax.random.*`."""
+    func = node.func
+    name = dotted_name(func)
+    if name is None:
+        return False
+    if name.startswith("jnp.") or name.startswith("jax.random."):
+        return True
+    parts = name.split(".")
+    # obj._handle(...) — the engine binds every compiled step function
+    # as a leading-underscore attribute
+    return len(parts) >= 2 and parts[-1].startswith("_")
+
+
+def _is_host_value(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Constant, ast.List, ast.Dict, ast.Set,
+                         ast.Tuple, ast.ListComp, ast.DictComp,
+                         ast.SetComp, ast.GeneratorExp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func) or ""
+        root = dotted_root(node.func)
+        if name.startswith("np.") or name.startswith("numpy."):
+            return True
+        if name in ("jax.device_get",):
+            return True
+        if root in _HOST_ROOTS:
+            return True
+    return False
+
+
+class _FnTags(ast.NodeVisitor):
+    """One pass over a hot function collecting device/host name tags."""
+
+    def __init__(self) -> None:
+        self.device: Set[str] = set()
+        self.host: Set[str] = set()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        names: List[str] = []
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                names.append(t.id)
+            elif isinstance(t, ast.Tuple):
+                names.extend(e.id for e in t.elts
+                             if isinstance(e, ast.Name))
+        if names:
+            if isinstance(node.value, ast.Call) \
+                    and _is_device_call(node.value):
+                self.device.update(names)
+            elif _is_host_value(node.value):
+                self.host.update(names)
+        self.generic_visit(node)
+
+
+class _SyncVisitor(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, cfg: Config, hot: Set[str]) -> None:
+        self.sf = sf
+        self.cfg = cfg
+        self.hot = hot
+        self.stack: List[str] = []
+        self.hot_depth = 0        # >0: inside a hot function
+        self.loop_depth = 0       # loops within the hot scope
+        self.tags: List[_FnTags] = []
+        self.findings: List[Finding] = []
+
+    # -- scope tracking ----------------------------------------------------
+    def _visit_fn(self, node) -> None:
+        self.stack.append(node.name)
+        qn = ".".join(self.stack)
+        entering = self.hot_depth == 0 and qn in self.hot
+        if entering or self.hot_depth:
+            self.hot_depth += 1
+            if entering:
+                tags = _FnTags()
+                tags.visit(node)
+                self.tags.append(tags)
+        saved_loops = self.loop_depth
+        if entering:
+            self.loop_depth = 0
+        try:
+            self.generic_visit(node)
+        finally:
+            self.loop_depth = saved_loops
+            if entering or self.hot_depth:
+                self.hot_depth -= 1
+                if entering:
+                    self.tags.pop()
+            self.stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        try:
+            self.generic_visit(node)
+        finally:
+            self.stack.pop()
+
+    def _visit_loop(self, node) -> None:
+        if self.hot_depth:
+            self.loop_depth += 1
+            try:
+                self.generic_visit(node)
+            finally:
+                self.loop_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+    visit_AsyncFor = _visit_loop
+
+    # -- detection ---------------------------------------------------------
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(Finding(
+            rule=RULE, path=self.sf.path, line=node.lineno,
+            message="%s inside a per-step hot loop serializes the "
+                    "double-buffered pipeline; annotate its pipeline "
+                    "position or move it off-step" % what))
+
+    def _device_tagged(self, node: ast.AST) -> bool:
+        root = dotted_root(node)
+        if root is None or not self.tags:
+            return False
+        t = self.tags[-1]
+        return root in t.device and root not in t.host
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.hot_depth and self.loop_depth:
+            name = dotted_name(node.func)
+            if name in ("jax.device_get", "jax.block_until_ready"):
+                self._flag(node, name)
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_METHODS:
+                self._flag(node, ".%s()" % node.func.attr)
+            elif name is not None and name.split(".")[0] \
+                    in self.cfg.host_numpy_roots \
+                    and name.split(".")[-1] in ("asarray", "array"):
+                self._flag(node, name + "()")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in _CASTS and node.args:
+                arg = node.args[0]
+                # device_get / np.asarray inside the argument are
+                # flagged on their own; only flag a *direct* cast of a
+                # device-tagged name
+                if self._device_tagged(arg) and not any(
+                        isinstance(n, ast.Call) for n in ast.walk(arg)):
+                    self._flag(node, "%s() on device value"
+                               % node.func.id)
+        self.generic_visit(node)
+
+
+def check_host_sync(sf: SourceFile, cfg: Config) -> List[Finding]:
+    hot = _hot_quals(sf, cfg)
+    if not hot:
+        return []
+    v = _SyncVisitor(sf, cfg, hot)
+    v.visit(sf.tree)
+    # one finding per (line, message-kind) — a cast wrapping a flagged
+    # fetch would otherwise double-report
+    seen: Set[int] = set()
+    out: List[Finding] = []
+    for f in v.findings:
+        if f.line in seen:
+            continue
+        seen.add(f.line)
+        out.append(f)
+    return out

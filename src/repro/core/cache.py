@@ -19,9 +19,8 @@ SqueezeAttention / ZigZagKV) mask within the uniform physical budget.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ selection natively; this module adds the merge-based variants).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ PRESETS to regenerate the tables.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 from repro.core.cache import CacheSpec
 

@@ -14,7 +14,7 @@ patches per-layer modules at load time.
 """
 from __future__ import annotations
 
-from typing import Sequence
+# kvlint: dormant(KVSharer runs only on the unrolled shared_runner path — exercised by tests/benchmarks but not wired into the continuous engine; see ROADMAP "Prefix sharing follow-ups")
 
 import numpy as np
 import jax

@@ -17,13 +17,11 @@ import traceback
 from functools import partial
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import batch_specs, decode_cache_spec, src_len_for
+from repro.launch.specs import batch_specs
 from repro.nn import model as M
 from repro.nn import sharding as shd
 from repro.train.loop import make_train_step

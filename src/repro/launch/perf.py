@@ -21,7 +21,6 @@ PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 def run(arch: str, shape: str, opts: frozenset, multi_pod: bool = False):
-    import jax
     from repro.launch.mesh import make_production_mesh
     mesh = make_production_mesh(multi_pod=multi_pod)
     with shd.activation_sharding(mesh, opts):

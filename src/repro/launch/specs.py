@@ -13,13 +13,12 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.core.cache import CacheSpec
 from repro.nn import model as M
 from repro.nn import sharding as shd
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 # long-context serving policy for archs without native sub-quadratic
 # attention: StreamingLLM-style bounded budget (the paper's technique).

@@ -12,7 +12,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.checkpoint import save_pytree
 from repro.configs.base import get_config, reduced

@@ -8,7 +8,6 @@ heavy-hitter statistic the selective-compression policies consume
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -14,7 +14,6 @@ from repro.nn import attention as attn
 from repro.nn import layers as L
 from repro.nn import moe as moe_lib
 from repro.nn import ssm as ssm_lib
-from repro.nn.rope import apply_rope
 
 Array = jax.Array
 
@@ -104,7 +103,6 @@ def block_train(p: dict, x: Array, cfg, kind: str, *,
                 memory_kv=None) -> tuple[Array, BlockAux]:
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind == "attn":
-        from repro.nn import sharding as shd
         q, k, v = attn.qkv(p["attn"], h, cfg, positions)
         # no kernel dispatch here: block_train runs under value_and_grad
         # and pallas_call is not differentiable (see _use_flash_prefill)

@@ -6,7 +6,6 @@ logical-axis tuples is produced by ``repro.nn.sharding`` for pjit.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,14 +15,13 @@ layers, and static cross-attention memory for enc-dec.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import cache as kvcache
-from repro.core.cache import CacheSpec, LayerKV, SSMState
+from repro.core.cache import CacheSpec, LayerKV
 from repro.nn import blocks as B
 from repro.nn import layers as L
 from repro.nn import ssm as ssm_lib

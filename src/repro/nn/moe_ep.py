@@ -16,14 +16,12 @@ drop-free (tests/test_moe_ep.py validates on 8 host devices).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.nn import moe as moe_lib
 
 Array = jax.Array
 

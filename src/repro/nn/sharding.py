@@ -13,10 +13,9 @@ cases (qwen's 40 heads on 16-way tp) are legal: GSPMD pads (DESIGN.md §3).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -26,11 +26,11 @@ fail.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.policy import CompressionPolicy, presets
+from repro.core.policy import presets
 from repro.serving.engine import Engine, GenerationResult
 
 

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 
 from repro.nn import attention as attn
 from repro.nn import layers as L
-from repro.nn import model as M
 
 Array = jax.Array
 

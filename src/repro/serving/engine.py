@@ -44,7 +44,7 @@ import dataclasses
 import functools
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, List, Optional, Sequence, Union
 
 import jax
@@ -431,6 +431,7 @@ class Engine:
             # are (a fetch rewrites the pool in place). Payloads round-
             # trip host RAM bit-identically — pools hold integer codes /
             # raw floats, nothing is re-encoded on either copy.
+            # kvlint: ok(jit-donate: spill gather is read-only — the live cache must survive until the host copy lands)
             self._gather_blocks = jax.jit(
                 lambda c, ids: paging_lib.gather_pool_blocks(
                     c.attn, ids, batch_axis=2))
@@ -440,6 +441,7 @@ class Engine:
                                                    batch_axis=2),
                     c.ssm, c.cross_k, c.cross_v, c.cross_bias),
                 donate_argnums=(0,) if dn else ())
+            # kvlint: ok(jit-donate: spill gather is read-only — the live cache must survive until the host copy lands)
             self._gather_meta = jax.jit(
                 lambda c, slot: paging_lib.gather_slot_meta(
                     c.attn, slot, batch_axis=2))
@@ -746,10 +748,12 @@ class Engine:
             t0 = time.perf_counter()
             logits, cache = self._prefill(self.params, batch,
                                           jnp.asarray(self.layer_budgets), k1)
+            # kvlint: ok(host-sync: prefill timing fence — once per wave, before the decode loop starts)
             logits.block_until_ready()
             prefill_s += time.perf_counter() - t0
 
             tok = self.sampler(logits, k1)[:, None]
+            # kvlint: ok(host-sync: first-token fetch off the prefill — once per wave, not per step)
             outs[w0:w1, 0] = np.asarray(tok)[: w1 - w0, 0]
             t0 = time.perf_counter()
             # Double-buffered decode (same discipline as the continuous
@@ -765,10 +769,13 @@ class Engine:
                 tok_dev, cache = self._decode(self.params, cache, tok, k2)
                 tok = tok_dev[:, None]
                 if pend_tok is not None:
+                    # kvlint: ok(host-sync: the pipelined fetch — step t-1's tokens land behind step t's dispatch)
                     outs[w0:w1, pend_t] = np.asarray(pend_tok)[: w1 - w0]
                 pend_tok, pend_t = tok_dev, t
             if pend_tok is not None:
+                # kvlint: ok(host-sync: loop epilogue — drains the final pending token once per wave)
                 outs[w0:w1, pend_t] = np.asarray(pend_tok)[: w1 - w0]
+            # kvlint: ok(host-sync: decode timing fence — once per wave, after the loop exits)
             jax.block_until_ready(cache)
             decode_s += time.perf_counter() - t0
             # accumulate across waves, normalized to the wave's *real*
@@ -1368,6 +1375,7 @@ class Engine:
                 if n <= 0:
                     continue
                 cache = self._degrade_op(cache, jnp.int32(s), jnp.int32(n))
+                # kvlint: ok(host-sync: pressure-driven degrade is a rare event — the table read is off the steady-state step)
                 tbl = np.asarray(jax.device_get(cache.attn.block_tbl))
                 row = tbl.reshape(-1, tbl.shape[-2], tbl.shape[-1])[0, s]
                 dropped = sched.replace_blocks(
@@ -1663,6 +1671,7 @@ class Engine:
                 clean_slots.discard(slot_idx)
                 if lazy_mirror is not None:
                     lazy_mirror.admit(slot_idx, len(req.tokens))
+                # kvlint: ok(host-sync: admission prefill's first token — once per admitted request, not per decode step)
                 tok_i = int(jax.device_get(tok)[0])
                 prefill_s += time.perf_counter() - t0
                 if req.emitted_prefix:
@@ -1833,10 +1842,12 @@ class Engine:
                         ptok, pvalid = pending
                         decode_tokens += 1
                         reason = sched.record_token(
+                            # kvlint: ok(host-sync: lazy-starve retire is a rare pressure event — drain the pending token before the slot dies)
                             s, int(np.asarray(ptok)[s]))
                         pvalid.remove(s)
                     elif first_pending is not None and first_pending[0] == s:
                         reason = sched.record_token(
+                            # kvlint: ok(host-sync: lazy-starve retire is a rare pressure event — drain the pending token before the slot dies)
                             s, int(jax.device_get(first_pending[1])[0]))
                         first_pending = None
                     sched.retire(s, reason or "oom")
@@ -1910,10 +1921,12 @@ class Engine:
                         ptok, pvalid = pending
                         decode_tokens += 1
                         reason = sched.record_token(
+                            # kvlint: ok(host-sync: un-share OOM retire is a rare pressure event — drain the pending token before the slot dies)
                             s, int(np.asarray(ptok)[s]))
                         pvalid.remove(s)
                     elif first_pending is not None and first_pending[0] == s:
                         reason = sched.record_token(
+                            # kvlint: ok(host-sync: un-share OOM retire is a rare pressure event — drain the pending token before the slot dies)
                             s, int(jax.device_get(first_pending[1])[0]))
                         first_pending = None
                     sched.retire(s, reason or "oom")
@@ -1957,6 +1970,7 @@ class Engine:
                 # fetch last iteration's first token (its compute has
                 # drained behind this iteration's dispatch by now)
                 slot0, ftok = first_pending
+                # kvlint: ok(host-sync: pipelined — last iteration's first token; its compute drained behind this dispatch)
                 tok_i = int(jax.device_get(ftok)[0])
                 next_tok[slot0] = tok_i
                 reason = sched.record_token(slot0, tok_i)
@@ -1995,6 +2009,7 @@ class Engine:
                 break
             if pending is not None:
                 ptok, pvalid = pending
+                # kvlint: ok(host-sync: the one pipelined fetch — step N-1's tokens, dispatched behind step N)
                 toks = np.asarray(ptok)         # blocks on step N-1 only
                 admitted = []
                 retired_any = False

@@ -457,6 +457,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                 st.replay = [int(t) for t in req.emitted_prefix[:-1]]
                 st.resumed = True
                 return True
+            # kvlint: ok(host-sync: admission prefill's first token — once per admitted request, not per round)
             if not record(slot, int(jax.device_get(tok)[0]), count=False):
                 return True
             # 1-token request: retired immediately, refill the slot
@@ -528,6 +529,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                     st0.replay = [int(t) for t in req0.emitted_prefix[:-1]]
                     st0.resumed = True
                 else:
+                    # kvlint: ok(host-sync: chunk-admitted first token — once per admission, not per round)
                     record(slot0, int(jax.device_get(ftok)[0]), count=False)
                 active = sched.active_slots()
         if preempt_due:
@@ -611,6 +613,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
             tok_dev, dcache = eng._draft_decode(
                 eng.params, dcache, jnp.asarray(feed)[:, None],
                 jnp.asarray(mask), kd)
+            # kvlint: ok(host-sync: draft tokens feed the host-built verify batch — draft rounds are synchronous by design)
             toks = np.asarray(tok_dev)
             for s in participating:
                 if not mask[s]:
@@ -691,6 +694,7 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                                          jnp.asarray(feed)[:, None], kp)
             sched.note_decode_step()
             stats.rounds += 1
+            # kvlint: ok(host-sync: plain-decode fallback round — the token builds the next feed host-side)
             toks = np.asarray(tok_dev)
             for s in active:
                 st = slot_state[s]
@@ -720,7 +724,9 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
             eng.params, cache, jnp.asarray(tokens), jnp.asarray(valid), kv)
         sched.note_decode_step()
         stats.rounds += 1
+        # kvlint: ok(host-sync: verify results drive host-side acceptance mirroring — the round is synchronous by design)
         y = np.asarray(y_dev)
+        # kvlint: ok(host-sync: verify results drive host-side acceptance mirroring — the round is synchronous by design)
         acc = np.asarray(acc_dev)
 
         # device-side acceptance/rollback already happened inside

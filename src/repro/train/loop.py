@@ -5,8 +5,7 @@ it in jit with FSDP×TP shardings for the production mesh.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

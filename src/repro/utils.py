@@ -1,8 +1,7 @@
 """Small shared utilities: PRNG splitting by path, tree helpers, dtypes."""
 from __future__ import annotations
 
-import math
-from typing import Any, Callable, Iterable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 prompts correctly; the adaptive engine routes and generates."""
 import jax
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.nn import model as M

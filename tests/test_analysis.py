@@ -1,0 +1,535 @@
+"""kvlint fixture tests: every rule fires on a minimal positive case,
+stays quiet on the idiomatic negative, and respects a reasoned
+suppression. Plus the two repo-level contracts: the whole tree is clean
+under --check, and the seam allowlist entry for `Scheduler.release` is
+load-bearing (deleting it makes the real scheduler fail the seam rule).
+
+Pure stdlib on purpose — the lint CI job and these tests never import
+JAX.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import analyze_paths, analyze_source, default_config
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def dedent(src):
+    return textwrap.dedent(src).lstrip("\n")
+
+
+def by_rule(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+def violations(findings, rule=None):
+    out = [f for f in findings if f.is_violation]
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# release-seam
+# ---------------------------------------------------------------------------
+
+SEAM_SRC = dedent("""
+    class Runner:
+        def retire(self, ids):
+            self.allocator.free(ids)
+""")
+
+
+def test_seam_fires_outside_allowlist():
+    fs = analyze_source(SEAM_SRC, path="src/repro/serving/other.py")
+    hits = violations(fs, "release-seam")
+    assert len(hits) == 1
+    assert "Runner.retire" in hits[0].message
+
+
+def test_seam_quiet_in_allowlisted_module():
+    fs = analyze_source(SEAM_SRC, path="src/repro/core/paging.py")
+    assert not by_rule(fs, "release-seam")
+
+
+def test_seam_quiet_on_non_allocator_receiver():
+    src = dedent("""
+        class Runner:
+            def retire(self, ids):
+                self.arena.free(ids)
+    """)
+    fs = analyze_source(src, path="src/repro/serving/other.py")
+    assert not by_rule(fs, "release-seam")
+
+
+def test_seam_suppression_needs_reason():
+    src = dedent("""
+        class Runner:
+            def retire(self, ids):
+                self.allocator.free(ids)  # kvlint: ok(release-seam: throwaway pool in a doc example)
+    """)
+    fs = analyze_source(src, path="src/repro/serving/other.py")
+    hits = by_rule(fs, "release-seam")
+    assert len(hits) == 1 and hits[0].suppressed
+    assert hits[0].suppress_reason == "throwaway pool in a doc example"
+    assert not violations(fs, "release-seam")
+
+    bare = src.replace(": throwaway pool in a doc example", "")
+    fs = analyze_source(bare, path="src/repro/serving/other.py")
+    # a reasonless ok() must not suppress, and is itself a finding
+    assert violations(fs, "release-seam")
+    assert violations(fs, "kvlint-syntax")
+
+
+def test_seam_allowlist_entry_is_load_bearing():
+    """Dropping (serving/scheduler.py, Scheduler.release) from the
+    allowlist makes the *real* release seam a violation — proof the
+    allowlist entry, not rule blindness, is what keeps HEAD clean."""
+    sched = os.path.join(REPO, "src", "repro", "serving", "scheduler.py")
+    clean = analyze_paths([sched])
+    assert not by_rule(clean, "release-seam")
+
+    cfg = default_config()
+    pruned = [e for e in cfg.seam_allowlist
+              if e != ("serving/scheduler.py", "Scheduler.release")]
+    assert len(pruned) == len(cfg.seam_allowlist) - 1
+    fs = analyze_paths([sched], config=cfg.clone(seam_allowlist=pruned))
+    hits = violations(fs, "release-seam")
+    assert hits, "Scheduler.release no longer guarded by the allowlist?"
+    assert any("Scheduler.release" in f.message for f in hits)
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+HOT_CFG = default_config().clone(
+    hot_functions={"fixture.py": {"hot"}})
+
+
+def test_host_sync_fires_in_hot_loop():
+    src = dedent("""
+        def hot(eng, steps):
+            for t in range(steps):
+                tok = eng._decode(t)
+                out = np.asarray(tok)
+            return out
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    assert len(violations(fs, "host-sync")) == 1
+
+
+def test_host_sync_quiet_outside_loop_and_outside_hot_fn():
+    src = dedent("""
+        def hot(eng):
+            tok = eng._decode(0)
+            return np.asarray(tok)
+
+        def cold(eng, steps):
+            for t in range(steps):
+                out = np.asarray(eng._decode(t))
+            return out
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    assert not by_rule(fs, "host-sync")
+
+
+def test_host_sync_jnp_asarray_exempt():
+    src = dedent("""
+        def hot(eng, feed, steps):
+            for t in range(steps):
+                tok = eng._decode(jnp.asarray(feed))
+            return tok
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    assert not by_rule(fs, "host-sync")
+
+
+def test_host_sync_cast_only_on_device_tagged_names():
+    src = dedent("""
+        def hot(eng, steps):
+            for t in range(steps):
+                tok = eng._decode(t)
+                n = int(tok)
+                hosts = np.zeros(4)
+                m = int(hosts)
+            return n + m
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    hits = violations(fs, "host-sync")
+    assert len(hits) == 1
+    assert "int() on device value" in hits[0].message
+
+
+def test_host_sync_suppression_standalone_comment():
+    src = dedent("""
+        def hot(eng, steps):
+            for t in range(steps):
+                tok = eng._decode(t)
+                # kvlint: ok(host-sync: the one pipelined fetch per step)
+                out = np.asarray(tok)
+            return out
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    hits = by_rule(fs, "host-sync")
+    assert len(hits) == 1 and hits[0].suppressed
+    assert not violations(fs, "host-sync")
+
+
+# ---------------------------------------------------------------------------
+# jit hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_jit_branch_fires_on_traced_test():
+    src = dedent("""
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    fs = analyze_source(src)
+    assert len(violations(fs, "jit-branch")) == 1
+
+
+def test_jit_branch_static_and_shape_exempt():
+    src = dedent("""
+        @partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            if n > 2:
+                return x
+            if x.shape[0] > 2:
+                return x + 1
+            if x is None:
+                return None
+            return -x
+    """)
+    fs = analyze_source(src)
+    assert not by_rule(fs, "jit-branch")
+
+
+def test_jit_capture_fires_on_mutable_closure():
+    src = dedent("""
+        def build(eng):
+            table = [1, 2, 3]
+
+            @jax.jit
+            def step(x):
+                return x + table[0]
+            return step
+    """)
+    fs = analyze_source(src)
+    hits = violations(fs, "jit-capture")
+    assert len(hits) == 1
+    assert "table" in hits[0].message
+
+
+def test_jit_capture_quiet_when_passed_as_arg():
+    src = dedent("""
+        def build(eng):
+            table = [1, 2, 3]
+
+            @jax.jit
+            def step(x, table):
+                return x + table[0]
+            return step
+    """)
+    fs = analyze_source(src)
+    assert not by_rule(fs, "jit-capture")
+
+
+def test_jit_donate_fires_on_cache_lambda():
+    src = dedent("""
+        class Engine:
+            def __init__(self):
+                self._gather = jax.jit(lambda c, ids: c.attn[ids])
+    """)
+    fs = analyze_source(src)
+    assert len(violations(fs, "jit-donate")) == 1
+
+
+def test_jit_donate_quiet_when_donated_or_suppressed():
+    src = dedent("""
+        class Engine:
+            def __init__(self, dn):
+                self._step = jax.jit(lambda c, ids: c,
+                                     donate_argnums=(0,) if dn else ())
+                # kvlint: ok(jit-donate: read-only gather — live cache survives)
+                self._gather = jax.jit(lambda c, ids: c.attn[ids])
+    """)
+    fs = analyze_source(src)
+    hits = by_rule(fs, "jit-donate")
+    assert len(hits) == 1 and hits[0].suppressed
+    assert not violations(fs, "jit-donate")
+
+
+# ---------------------------------------------------------------------------
+# pallas contracts
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_grid_arity_mismatch():
+    src = dedent("""
+        def launch(x, *, interpret):
+            return pl.pallas_call(
+                kern,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_shape=jax.ShapeDtypeStruct((8, 8), x.dtype),
+                interpret=interpret,
+            )(x)
+    """)
+    fs = analyze_source(src)
+    hits = violations(fs, "pallas-grid")
+    assert len(hits) == 1
+    assert "1 arg(s)" in hits[0].message and "rank 2" in hits[0].message
+
+
+def test_pallas_prefetch_adds_leading_index_arg():
+    src = dedent("""
+        def launch(x, tbl, *, interpret):
+            return pl.pallas_call(
+                kern,
+                grid_spec=pltpu.PrefetchScalarGridSpec(
+                    num_scalar_prefetch=1,
+                    grid=(2, 2),
+                    in_specs=[pl.BlockSpec((8, 8),
+                                           lambda t, i, j: (i, j))],
+                ),
+                out_shape=jax.ShapeDtypeStruct((8, 8), x.dtype),
+                interpret=interpret,
+            )(tbl, x)
+    """)
+    fs = analyze_source(src)
+    assert not by_rule(fs, "pallas-grid")
+    two_arg = src.replace("lambda t, i, j: (i, j)", "lambda i, j: (i, j)")
+    fs = analyze_source(two_arg)
+    hits = violations(fs, "pallas-grid")
+    assert len(hits) == 1 and "scalar-prefetch" in hits[0].message
+
+
+def test_pallas_blockspec_shape_vs_index_rank():
+    src = dedent("""
+        def launch(x, *, interpret):
+            return pl.pallas_call(
+                kern,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i,))],
+                out_shape=jax.ShapeDtypeStruct((8, 8), x.dtype),
+                interpret=interpret,
+            )(x)
+    """)
+    fs = analyze_source(src)
+    hits = violations(fs, "pallas-blockspec")
+    assert len(hits) == 1
+    assert "2 dim(s)" in hits[0].message
+
+
+def test_pallas_outshape_and_interpret():
+    src = dedent("""
+        def launch(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                interpret=True,
+            )(x)
+    """)
+    fs = analyze_source(src)
+    assert len(violations(fs, "pallas-outshape")) == 1
+    hits = violations(fs, "pallas-interpret")
+    assert len(hits) == 1 and "hardcoded" in hits[0].message
+
+
+def test_pallas_compliant_launcher_is_clean():
+    src = dedent("""
+        def launch(x, *, interpret=False):
+            grid = (4, 2)
+            out_shape = jax.ShapeDtypeStruct((8, 8), x.dtype)
+            return pl.pallas_call(
+                kern,
+                grid=grid,
+                in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+                out_shape=out_shape,
+                interpret=interpret,
+            )(x)
+    """)
+    fs = analyze_source(src)
+    assert not [f for f in fs if f.rule.startswith("pallas-")]
+
+
+# ---------------------------------------------------------------------------
+# duck-parity
+# ---------------------------------------------------------------------------
+
+DENSE = dedent("""
+    class DenseKV(NamedTuple):
+        k: int
+        scores: int
+        length: int
+""")
+
+
+def duck_cfg():
+    from repro.analysis.config import DuckClass
+    return default_config().clone(duck_pairs=[(
+        DuckClass("fix_dense.py", "DenseKV", ("k",)),
+        DuckClass("fix_paged.py", "PagedKV", ("pk", "tbl")),
+    )])
+
+
+def test_duck_parity_agrees():
+    paged = dedent("""
+        class PagedKV(NamedTuple):
+            pk: int
+            tbl: int
+            scores: int
+            length: int
+    """)
+    fs = analyze_source(DENSE, path="src/repro/fix_dense.py",
+                        config=duck_cfg(),
+                        extra={"src/repro/fix_paged.py": paged})
+    assert not by_rule(fs, "duck-parity")
+
+
+def test_duck_parity_catches_drift():
+    paged = dedent("""
+        class PagedKV(NamedTuple):
+            pk: int
+            tbl: int
+            scores: int
+            rlen: int
+    """)
+    fs = analyze_source(DENSE, path="src/repro/fix_dense.py",
+                        config=duck_cfg(),
+                        extra={"src/repro/fix_paged.py": paged})
+    hits = violations(fs, "duck-parity")
+    assert len(hits) == 1
+    assert "length" in hits[0].message and "rlen" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# dead/dormant modules
+# ---------------------------------------------------------------------------
+
+
+def test_dead_module_found_and_dormant_downgrades():
+    root = "import repro.alive\n"
+    alive = "X = 1\n"
+    dead = "Y = 2\n"
+    fs = analyze_source(root, path="tests/fix_root.py", extra={
+        "src/repro/alive.py": alive,
+        "src/repro/dead.py": dead,
+    })
+    hits = violations(fs, "dead-module")
+    assert [f.path for f in hits] == ["src/repro/dead.py"]
+
+    dormant = "# kvlint: dormant(parked until the frobnicator lands)\nY = 2\n"
+    fs = analyze_source(root, path="tests/fix_root.py", extra={
+        "src/repro/alive.py": alive,
+        "src/repro/dead.py": dormant,
+    })
+    assert not violations(fs, "dead-module")
+    notes = by_rule(fs, "dead-module")
+    assert len(notes) == 1 and notes[0].severity == "info"
+    assert "dormant" in notes[0].message
+
+
+# ---------------------------------------------------------------------------
+# hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_unused_import_and_init_exemption():
+    src = "import os\nimport sys\n\nprint(sys.argv)\n"
+    fs = analyze_source(src)
+    hits = violations(fs, "unused-import")
+    assert len(hits) == 1 and "'os'" in hits[0].message
+    fs = analyze_source(src, path="src/repro/pkg/__init__.py")
+    assert not by_rule(fs, "unused-import")
+
+
+def test_unused_import_all_counts_as_use():
+    src = 'from repro.x import thing\n\n__all__ = ["thing"]\n'
+    fs = analyze_source(src)
+    assert not by_rule(fs, "unused-import")
+
+
+def test_mutable_default():
+    src = dedent("""
+        def f(a, b=[], c=None):
+            return a
+    """)
+    fs = analyze_source(src)
+    assert len(violations(fs, "mutable-default")) == 1
+    fs = analyze_source("def g(a, c=None):\n    return a\n")
+    assert not by_rule(fs, "mutable-default")
+
+
+def test_malformed_directive_is_a_finding():
+    src = "x = 1  # kvlint: pls-ignore\n"
+    fs = analyze_source(src)
+    hits = violations(fs, "kvlint-syntax")
+    assert len(hits) == 1 and "unparseable" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# whole-repo + CLI contracts
+# ---------------------------------------------------------------------------
+
+
+def repo_paths():
+    return [os.path.join(REPO, d)
+            for d in ("src", "tests", "benchmarks", "examples")]
+
+
+def test_whole_repo_has_no_unsuppressed_findings():
+    findings = analyze_paths(repo_paths())
+    bad = [f.render() for f in findings if f.is_violation]
+    assert not bad, "\n".join(bad)
+    # the suppression inventory is non-trivial by design: the serving
+    # loops' intentional syncs all carry reasons
+    assert any(f.suppressed and f.rule == "host-sync" for f in findings)
+    # and core/sharing.py's dormant marker surfaces as an info note
+    assert any(f.rule == "dead-module" and f.severity == "info"
+               and f.path.endswith("core/sharing.py") for f in findings)
+
+
+def run_cli(args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis"] + args,
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_check_exit_codes(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("import sys\n\nprint(sys.argv)\n")
+    r = run_cli(["--check", str(clean)])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("import os\n\nx = 1\n")
+    r = run_cli(["--check", str(bad)])
+    assert r.returncode == 1
+    assert "unused-import" in r.stdout
+
+
+def test_cli_json_carries_suppression_reasons(tmp_path):
+    src = tmp_path / "mod.py"
+    src.write_text(
+        "import os  # kvlint: ok(unused-import: doc example keeps it)\n")
+    r = run_cli(["--check", "--json", str(src)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    payload = json.loads(r.stdout)
+    assert payload["files"] == 1
+    (f,) = payload["findings"]
+    assert f["rule"] == "unused-import" and f["suppressed"]
+    assert f["suppress_reason"] == "doc example keeps it"

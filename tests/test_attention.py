@@ -3,7 +3,6 @@ grouping, attention-mass accounting, decode bias handling."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.nn.attention import gqa_attention
 

@@ -121,7 +121,6 @@ def test_quantized_ring_flush():
 def test_packed_physical_bytes():
     """Quantized cache stores include bit-packed codes: physical k/v bytes
     = logical compressed bytes (bits/8 per element)."""
-    from repro.utils import tree_bytes
     B, S, H, D = 1, 64, 2, 32
     for bits, frac in ((8, 1.0), (4, 0.5), (2, 0.25)):
         spec = CacheSpec(budget=S, window=8, sinks=0, bits=bits, group=8,

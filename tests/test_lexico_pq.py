@@ -3,7 +3,6 @@ sanity + MIPS lookup correctness + LOOK-M modality ordering."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import lexico as LX
 from repro.core.eviction import lookm_scores, vq_token_mask

@@ -1,6 +1,5 @@
 """Policy layer: presets well-formed, budget allocators conserve the
 global budget, KVSharer map properties, eviction merge helpers."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

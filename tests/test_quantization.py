@@ -4,7 +4,6 @@ hypothesis is optional: absent, the roundtrip property runs on a fixed
 example grid instead (`pip install -e .[test]` for the full search)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 try:

@@ -1,6 +1,5 @@
 """Serving engine integration + compression-quality invariants."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

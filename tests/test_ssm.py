@@ -65,7 +65,6 @@ def test_ssd_init_state_continuation():
 
 def test_mamba2_decode_continues_prefill():
     from repro.configs.base import get_config, reduced
-    from repro.nn import blocks as B
     cfg = reduced(get_config("mamba2-130m"))
     key = jax.random.key(2)
     p = S.ssm_init(key, cfg)
