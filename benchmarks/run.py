@@ -7,8 +7,9 @@ import time
 
 def main() -> None:
     from benchmarks import (fig1_rates, fig2_throughput, kernels_micro,
-                            kvsharer_bench, roofline, table1_selective,
-                            table2_quant, table3_attention)
+                            kvsharer_bench, roofline, serving_continuous,
+                            table1_selective, table2_quant,
+                            table3_attention)
     sections = [
         ("Table1: selective compression (survey §2)", table1_selective.run),
         ("Table1b: KVSharer layer sharing (survey §2 [10])",
@@ -19,6 +20,8 @@ def main() -> None:
         ("Fig1: inference-rate improvement", fig1_rates.run),
         ("Fig2: end-to-end engine throughput (survey §5/§6)",
          fig2_throughput.run),
+        ("Serving: continuous-batching metrics snapshot "
+         "(BENCH_serving.json)", serving_continuous.run),
         ("Kernels: micro-benchmarks (interpret mode)", kernels_micro.run),
         ("Roofline: dry-run derived terms (single-pod)", roofline.run),
     ]

@@ -62,19 +62,29 @@ blocks read-only, so the report shows the warm/cold prefill-time ratio
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 from dataclasses import dataclass
 
 import numpy as np
 
-from common import bench_model
+try:                              # package import (python -m benchmarks.run)
+    from benchmarks.common import bench_model
+except ImportError:               # direct script run from benchmarks/
+    from common import bench_model
 from repro.core.policy import presets
+from repro.obs import Metrics, write_metrics_json
 from repro.serving import Engine, Request
 from repro.utils import human_bytes
 
 BUCKETS = (64, 128)
 SLOTS = 4
 MAX_NEW_CAP = 24
+
+# gitignored artifact dir: the snapshot lands next to the other
+# benchmark JSON dumps regardless of the caller's cwd
+DEFAULT_METRICS_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "BENCH_serving.json")
 
 
 @dataclass
@@ -122,7 +132,8 @@ def run_wave(cfg, params, pol, requests, slots, warmup: bool,
 
 
 def run_continuous(cfg, params, pol, requests, slots, buckets, warmup: bool,
-                   use_kernels=None, paged=False, block_len=16):
+                   use_kernels=None, paged=False, block_len=16,
+                   metrics=None):
     eng = Engine(cfg, params, pol, max_new=MAX_NEW_CAP, slots=slots,
                  buckets=buckets, use_kernels=use_kernels, paged=paged,
                  block_len=block_len)
@@ -130,6 +141,8 @@ def run_continuous(cfg, params, pol, requests, slots, buckets, warmup: bool,
         eng.generate_continuous([
             Request(tokens=r.tokens, max_new=2)
             for r in requests[:len(buckets)]])
+    if metrics is not None:   # measured run only — warmup stays out
+        eng.metrics = metrics
     return eng.generate_continuous(
         [Request(tokens=r.tokens, max_new=r.max_new) for r in requests])
 
@@ -536,6 +549,33 @@ def tiered_report(window=32, *, block_len=16, slots=4, requests=8,
             "off": out[False], "on": out[True]}
 
 
+def run() -> str:
+    """Driver entry (`python -m benchmarks.run`): a small continuous-
+    batching run per policy with a live `Metrics` registry; the snapshot
+    lands in benchmarks/BENCH_serving.json so successive PRs accumulate
+    a comparable perf trajectory (same schema serve.py --metrics-json
+    writes)."""
+    cfg, params = bench_model(n_layers=2, d_model=128, train_steps=0)
+    requests = make_requests(cfg.vocab_size, 8, BUCKETS, MAX_NEW_CAP)
+    metrics = Metrics()
+    policies = ("full", "kivi2")
+    lines = []
+    for pname in policies:
+        pol = presets(budget=64, window=16)[pname]
+        res = run_continuous(cfg, params, pol, requests, SLOTS, BUCKETS,
+                             warmup=True, paged=True, metrics=metrics)
+        lines.append(f"{pname}: {res.decode_tokens_per_s:.1f} decode "
+                     f"tok/s, occupancy {res.occupancy:.2f}, "
+                     f"ttft {res.ttft_mean_s * 1e3:.1f} ms")
+    payload = write_metrics_json(metrics, DEFAULT_METRICS_JSON, extra={
+        "workload": {"requests": len(requests), "buckets": list(BUCKETS),
+                     "slots": SLOTS, "paged": True,
+                     "policies": list(policies)}})
+    lines.append(f"{len(payload['metrics'])} instruments -> "
+                 f"{DEFAULT_METRICS_JSON}")
+    return "\n".join(lines)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--policies", default="full,h2o,kivi2")
@@ -589,6 +629,11 @@ def main() -> int:
     ap.add_argument("--json", default="",
                     help="write every computed report to PATH as JSON "
                          "(machine-readable mirror of the stdout tables)")
+    ap.add_argument("--metrics-json", default=DEFAULT_METRICS_JSON,
+                    metavar="PATH",
+                    help="write the head-to-head runs' live Metrics "
+                         "registry snapshot here (same schema as serve.py "
+                         "--metrics-json; '' disables)")
     args = ap.parse_args()
     use_kernels = {"auto": None, "on": True, "off": False}[args.use_kernels]
 
@@ -600,6 +645,7 @@ def main() -> int:
           f"max_new 6..{MAX_NEW_CAP} ({n_tok} useful tokens), "
           f"slots={args.slots}")
 
+    metrics = Metrics()
     rows = []
     for pname in [p for p in args.policies.split(",") if p]:
         pol = presets(budget=args.budget, window=args.window)[pname]
@@ -609,7 +655,7 @@ def main() -> int:
         cont = run_continuous(cfg, params, pol, requests, args.slots,
                               BUCKETS, warmup=not args.no_warmup,
                               use_kernels=use_kernels, paged=args.paged,
-                              block_len=args.block_len)
+                              block_len=args.block_len, metrics=metrics)
         rows.append(HeadToHead(
             policy=pname,
             wave_tok_s=wave_tok_s,
@@ -754,6 +800,16 @@ def main() -> int:
                   f"retries, {r['degrades']} degrades, audit "
                   f"{'clean' if r['audit_clean'] else 'DIRTY'}")
 
+    if args.metrics_json:
+        # written before --check so a failed gate still leaves the data
+        payload = write_metrics_json(metrics, args.metrics_json, extra={
+            "workload": {"requests": len(requests),
+                         "buckets": list(BUCKETS), "slots": args.slots,
+                         "paged": args.paged,
+                         "policies": [r.policy for r in rows]}})
+        print(f"wrote metrics snapshot ({len(payload['metrics'])} "
+              f"instruments) to {args.metrics_json}")
+
     if args.json:
         # written before --check so a failed gate still leaves the data
         import dataclasses
@@ -784,6 +840,8 @@ def main() -> int:
             "prefix_sharing": pfx,
             "overload": over,
             "tiering": tiered,
+            # same registry the --metrics-json snapshot serializes
+            "metrics": metrics.snapshot(),
         })
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

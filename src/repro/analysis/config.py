@@ -61,6 +61,14 @@ class Config:
     # fed a device value (jnp.asarray is host->device and never flagged)
     host_numpy_roots: Set[str] = field(default_factory=lambda: {"np",
                                                                 "numpy"})
+    # obs emit calls (repro.obs Tracer/Span sites) whose arguments must
+    # be host values: a device array smuggled into an emit argument
+    # forces a fetch at serialization time — the zero-sync telemetry
+    # contract. The receiver expression must mention the hint substring
+    # to count as an emit (`self.trace`, `trace`, `eng.trace`, ...).
+    obs_emit_methods: Set[str] = field(default_factory=lambda: {
+        "instant", "complete", "counter", "span"})
+    obs_emit_receiver_hint: str = "trace"
 
     # --- jit hygiene ------------------------------------------------------
     # parameter names that mark a jitted function as cache-pytree

@@ -17,6 +17,11 @@ inside any `for`/`while`, the rule flags:
   * ``int(...)`` / ``float(...)`` / ``bool(...)`` over a value traced
     to a device-producing assignment (jit-handle calls `self._step(...)`,
     `jnp.*`, `jax.random.*`) in the same function
+  * a device-tagged name inside a tracer emit's arguments —
+    ``*.instant/complete/counter/span(...)`` on a ``trace``-named
+    receiver (`Config.obs_emit_methods`): the zero-sync telemetry
+    contract says emits carry host mirrors only, so a device array in
+    an emit arg is a fetch that happens only when tracing is on
 
 Every intentional fetch carries ``# kvlint: ok(host-sync: <where it
 sits in the pipeline>)`` — the annotations double as the sync-design
@@ -201,7 +206,37 @@ class _SyncVisitor(ast.NodeVisitor):
                         isinstance(n, ast.Call) for n in ast.walk(arg)):
                     self._flag(node, "%s() on device value"
                                % node.func.id)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in self.cfg.obs_emit_methods:
+                recv = dotted_name(node.func.value)
+                if recv is not None \
+                        and self.cfg.obs_emit_receiver_hint in recv:
+                    self._check_emit_args(node, recv)
         self.generic_visit(node)
+
+    def _check_emit_args(self, node: ast.Call, recv: str) -> None:
+        """Zero-sync telemetry contract: tracer emits in the hot loop
+        may only carry host mirrors. A device-tagged name reaching an
+        emit argument means the array is fetched — immediately (int/str
+        coercion in the arg) or at export time when the ring serializes
+        — behind the telemetry flag, i.e. a heisenberg sync the decode
+        pipeline only pays when someone is looking. Names that are the
+        receiver of an attribute read (``adm.slot``, ``req.uid``) are
+        exempt: those read host-side mirror fields, not the array."""
+        exprs = list(node.args) + [kw.value for kw in node.keywords]
+        attr_owners = set()
+        for e in exprs:
+            for sub in ast.walk(e):
+                if isinstance(sub, ast.Attribute) \
+                        and isinstance(sub.value, ast.Name):
+                    attr_owners.add(id(sub.value))
+        for e in exprs:
+            for sub in ast.walk(e):
+                if isinstance(sub, ast.Name) and id(sub) not in attr_owners \
+                        and self._device_tagged(sub):
+                    self._flag(node, "device value %r in %s.%s() emit args"
+                               % (sub.id, recv, node.func.attr))
+                    return
 
 
 def check_host_sync(sf: SourceFile, cfg: Config) -> List[Finding]:

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core import cache as kvcache
 from repro.core.cache import CacheSpec
+from repro.obs import NULL_TRACER
 
 Array = jax.Array
 
@@ -593,10 +594,15 @@ class BlockAllocator:
     allocator behaves exactly as before."""
 
     def __init__(self, n_blocks: int, *,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 tracer=None):
         if n_blocks < 1:
             raise ValueError(f"need >= 1 block, got {n_blocks}")
         self.n_blocks = n_blocks
+        # tracing covers only the rare refusal path: per-call events on
+        # alloc/free would dominate the ring; steady-state pool usage is
+        # sampled per engine iteration from `available` instead
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._refs: dict[int, int] = {}
         self.peak_used = 0
@@ -641,8 +647,15 @@ class BlockAllocator:
         self.alloc_calls += 1
         if self._inject_failure(call_idx, n):
             self.faults_injected += 1
+            if self.trace:
+                self.trace.instant("alloc_refused",
+                                   args=dict(n=n, free=len(self._free),
+                                             injected=True))
             return None
         if n > len(self._free):
+            if self.trace:
+                self.trace.instant("alloc_refused",
+                                   args=dict(n=n, free=len(self._free)))
             return None
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
@@ -707,11 +720,13 @@ class HostTier:
     fields for seeded fetch refusals / delays."""
 
     def __init__(self, capacity_blocks: int, *,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 tracer=None):
         if capacity_blocks < 1:
             raise ValueError(f"need >= 1 host block, got {capacity_blocks}")
         self.capacity_blocks = capacity_blocks
         self.fault_plan = fault_plan
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self._entries: Dict[int, _HostEntry] = {}
         self._pending: List[int] = []
         self._next = itertools.count()
@@ -754,6 +769,10 @@ class HostTier:
         device sync: sizes come from leaf metadata."""
         if n_blocks > self.free_blocks:
             self.stats["refused_spills"] += 1
+            if self.trace:
+                self.trace.instant("spill_refused",
+                                   args=dict(blocks=n_blocks,
+                                             host_free=self.free_blocks))
             return None
         nbytes = sum(l.nbytes for l in jax.tree.leaves(payload))
         h = next(self._next)
@@ -761,6 +780,10 @@ class HostTier:
         self._pending.append(h)
         self.stats["spills"] += 1
         self.stats["bytes_spilled"] += nbytes
+        if self.trace:
+            self.trace.instant("spill",
+                               args=dict(handle=h, blocks=n_blocks,
+                                         bytes=nbytes))
         return h
 
     def drain(self) -> int:
@@ -781,6 +804,8 @@ class HostTier:
                                           checksum=crc)
             landed += 1
         self._pending = []
+        if landed and self.trace:
+            self.trace.instant("spill_drain", args=dict(landed=landed))
         return landed
 
     def prefetch(self, handle: int) -> None:
@@ -820,6 +845,9 @@ class HostTier:
         if refused:
             del self._entries[handle]
             self.stats["refused_fetches"] += 1
+            if self.trace:
+                self.trace.instant("fetch_refused",
+                                   args=dict(handle=handle))
             return None
         stall = 0.0
         if not e.resident:
@@ -841,12 +869,19 @@ class HostTier:
         self.stats["fetches"] += 1
         self.stats["bytes_fetched"] += e.nbytes
         self.stats["fetch_stall_s"] += stall
+        if self.trace:
+            self.trace.instant("fetch",
+                               args=dict(handle=handle, blocks=e.n_blocks,
+                                         bytes=e.nbytes,
+                                         stall_ms=round(stall * 1e3, 3)))
         return e.payload, e.nbytes, stall
 
     def drop(self, handle: int) -> None:
         """Discard entry `handle` without fetching (holder retired)."""
         if self._entries.pop(handle, None) is not None:
             self.stats["drops"] += 1
+            if self.trace:
+                self.trace.instant("tier_drop", args=dict(handle=handle))
 
     def verify(self) -> List[int]:
         """Re-checksum every resident entry; returns mismatched handles

@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs.base import get_config, reduced
 from repro.core.policy import presets
 from repro.nn import model as M
+from repro.obs import Metrics, Tracer, write_metrics_json
 from repro.serving import Engine, Request
 
 
@@ -134,6 +135,21 @@ def main() -> None:
     ap.add_argument("--host-blocks", type=int, default=0,
                     help="host tier capacity in blocks for --tiering "
                          "(0 = same as the device pool)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record the run's event timeline (request spans, "
+                         "preempt/spill/degrade/CoW/prefix instants, "
+                         "per-iteration step spans) and export Chrome "
+                         "trace_event JSON to PATH — load it in Perfetto "
+                         "or chrome://tracing")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring capacity in events; overflow drops "
+                         "the oldest (the exported tail is what a "
+                         "post-mortem wants)")
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="dump the run's metrics registry snapshot "
+                         "(tok/s, TTFT/inter-token histograms, pool/tier/"
+                         "preemption counters) as JSON to PATH — same "
+                         "schema as the benchmarks' BENCH_serving.json")
     ap.add_argument("--audit-every", type=int, default=0,
                     help="run the pool invariant audit (allocator "
                          "refcounts vs slot block tables vs prefix "
@@ -183,6 +199,19 @@ def main() -> None:
     params = M.init_params(jax.random.key(0), cfg)
     pol = presets(budget=args.budget, window=args.window)[args.policy]
     rng = np.random.default_rng(0)
+    tracer = Tracer(args.trace_capacity) if args.trace else None
+    metrics = Metrics() if args.metrics_json else None
+
+    def export_telemetry() -> None:
+        if tracer is not None:
+            tracer.export(args.trace)
+            print(f"trace: {len(tracer)} events -> {args.trace}"
+                  + (f" ({tracer.dropped} dropped)" if tracer.dropped
+                     else ""))
+        if metrics is not None:
+            write_metrics_json(metrics, args.metrics_json)
+            print(f"metrics: {len(metrics)} instruments -> "
+                  f"{args.metrics_json}")
 
     if args.continuous:
         buckets = sorted({int(b) for b in args.buckets.split(",") if b}
@@ -203,7 +232,8 @@ def main() -> None:
                      preemption=args.preemption, degrade=args.degrade,
                      tiering=args.tiering,
                      host_blocks=args.host_blocks or None,
-                     audit_every=args.audit_every)
+                     audit_every=args.audit_every,
+                     tracer=tracer, metrics=metrics)
         eos = args.eos_id if args.eos_id >= 0 else None
         shared = rng.integers(0, cfg.vocab_size,
                               size=max(args.shared_prefix, 0))
@@ -282,6 +312,7 @@ def main() -> None:
                   f"{p['index_blocks']} resident, "
                   f"{p['evicted_blocks']} evicted, "
                   f"{p['cow_copies']} copy-on-write copies")
+        export_telemetry()
         return
 
     prompts = rng.integers(0, cfg.vocab_size,
@@ -294,7 +325,7 @@ def main() -> None:
         ).astype(np.float32)
     eng = Engine(cfg, params, pol, prompt_len=args.prompt_len,
                  max_new=args.max_new, slots=args.slots,
-                 use_kernels=use_kernels)
+                 use_kernels=use_kernels, tracer=tracer, metrics=metrics)
     res = eng.generate(prompts, src_embeds=src)
     print(f"policy={res.policy_name}")
     print(f"prefill_s={res.prefill_seconds:.2f} "
@@ -302,6 +333,7 @@ def main() -> None:
     print(f"compression_ratio={res.compression_ratio:.1f}x "
           f"(logical {res.cache_logical_bytes / 2**20:.1f} MiB vs "
           f"full {res.full_cache_bytes / 2**20:.1f} MiB)")
+    export_telemetry()
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.policy import presets
+from repro.obs import NULL_TRACER
 from repro.serving.engine import Engine, GenerationResult
 
 
@@ -52,7 +53,7 @@ class PressureController:
     group always survive)."""
 
     def __init__(self, *, high_water: float = 0.85, low_water: float = 0.60,
-                 keep_groups: int = 2):
+                 keep_groups: int = 2, tracer=None):
         if not 0.0 < low_water <= high_water <= 1.0:
             raise ValueError(
                 f"need 0 < low_water <= high_water <= 1, got "
@@ -64,6 +65,7 @@ class PressureController:
         self.low_water = float(low_water)
         self.keep_groups = int(keep_groups)
         self._pressed = False
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self.stats = dict(degrades=0, blocks_dropped=0, ticks_pressed=0,
                           peak_used_frac=0.0, spills=0, blocks_spilled=0)
 
@@ -92,11 +94,15 @@ class PressureController:
     def note_degrade(self, n_blocks: int) -> None:
         self.stats["degrades"] += 1
         self.stats["blocks_dropped"] += n_blocks
+        if self.trace:
+            self.trace.instant("degrade", args=dict(blocks=n_blocks))
 
     def note_spill(self, n_blocks: int) -> None:
         """The spill rung freed `n_blocks` by demotion (not loss)."""
         self.stats["spills"] += 1
         self.stats["blocks_spilled"] += n_blocks
+        if self.trace:
+            self.trace.instant("spill_rung", args=dict(blocks=n_blocks))
 
 
 def prompt_entropy(tokens: np.ndarray, vocab: int) -> float:

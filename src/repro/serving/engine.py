@@ -58,6 +58,7 @@ from repro.core.cache import CacheSpec, cache_logical_bytes_per_layer
 from repro.core.policy import CompressionPolicy
 from repro.nn import model as M
 from repro.nn.attention import MASS_GROUP
+from repro.obs import NULL_METRICS, NULL_TRACER
 from repro.serving import cacheblend as cacheblend_lib
 from repro.serving import prefix as prefix_lib
 from repro.serving import sampler as sampler_lib
@@ -175,7 +176,8 @@ class Engine:
                  tiering: bool = False, host_blocks: Optional[int] = None,
                  fault_plan: Optional[paging_lib.FaultPlan] = None,
                  audit_every: int = 0,
-                 preempt_at: Sequence[Sequence[int]] = ()):
+                 preempt_at: Sequence[Sequence[int]] = (),
+                 tracer=None, metrics=None):
         if prompt_len is None and not buckets:
             raise ValueError("need prompt_len and/or buckets")
         if use_kernels is not None:
@@ -193,6 +195,12 @@ class Engine:
         self.prompt_len, self.max_new, self.slots = prompt_len, max_new, slots
         self.sampler = sampler
         self.key = jax.random.key(seed)
+        # observability (repro/obs): both default to falsy no-ops, so
+        # every emit site below is one truthiness check when telemetry
+        # is off. Zero-sync contract: only host-side values ever reach
+        # the tracer/metrics — kvlint's host-sync rule enforces it.
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
 
         spec = policy.spec
         if not spec.compressed:
@@ -577,7 +585,7 @@ class Engine:
             from repro.serving.adaptive import PressureController
             self.pressure = PressureController(
                 high_water=degrade_high, low_water=degrade_low,
-                keep_groups=degrade_keep_groups)
+                keep_groups=degrade_keep_groups, tracer=self.trace)
             self._degrade_op = jax.jit(
                 lambda c, slot, n: M.ModelCache(
                     paging_lib.degrade_slot_groups(c.attn, self.spec, slot,
@@ -745,17 +753,20 @@ class Engine:
                 batch["src_embeds"] = jnp.asarray(se)
 
             self.key, k1 = jax.random.split(self.key)
-            t0 = time.perf_counter()
-            logits, cache = self._prefill(self.params, batch,
-                                          jnp.asarray(self.layer_budgets), k1)
-            # kvlint: ok(host-sync: prefill timing fence — once per wave, before the decode loop starts)
-            logits.block_until_ready()
-            prefill_s += time.perf_counter() - t0
+            with self.trace.span("wave_prefill",
+                                 args=dict(wave=w0 // self.slots)) as sp:
+                logits, cache = self._prefill(
+                    self.params, batch, jnp.asarray(self.layer_budgets), k1)
+                # kvlint: ok(host-sync: prefill timing fence — once per wave, before the decode loop starts)
+                logits.block_until_ready()
+            prefill_s += sp.elapsed
 
             tok = self.sampler(logits, k1)[:, None]
             # kvlint: ok(host-sync: first-token fetch off the prefill — once per wave, not per step)
             outs[w0:w1, 0] = np.asarray(tok)[: w1 - w0, 0]
-            t0 = time.perf_counter()
+            sp = self.trace.span("wave_decode",
+                                 args=dict(wave=w0 // self.slots))
+            sp.__enter__()
             # Double-buffered decode (same discipline as the continuous
             # path): step t+1 is dispatched from step t's device-side
             # tokens before the host fetches step t, so the per-step
@@ -777,7 +788,8 @@ class Engine:
                 outs[w0:w1, pend_t] = np.asarray(pend_tok)[: w1 - w0]
             # kvlint: ok(host-sync: decode timing fence — once per wave, after the loop exits)
             jax.block_until_ready(cache)
-            decode_s += time.perf_counter() - t0
+            sp.__exit__()
+            decode_s += sp.elapsed
             # accumulate across waves, normalized to the wave's *real*
             # request count (a padded final wave must not bill phantom
             # sequences at `slots` each)
@@ -848,7 +860,7 @@ class Engine:
                     cache.attn, self.spec))
             if self.tier_pressure is not None:
                 tier_stats["pressure"] = dict(self.tier_pressure.stats)
-        return ContinuousGenerationResult(
+        res = ContinuousGenerationResult(
             results=results,
             prefill_seconds=prefill_s,
             decode_seconds=decode_s,
@@ -867,6 +879,61 @@ class Engine:
             tier=tier_stats,
             **pool_stats,
         )
+        self._publish_metrics(sched, res)
+        return res
+
+    def _publish_metrics(self, sched, res) -> None:
+        """End-of-run aggregates into the metrics registry (no-op under
+        the default `NULL_METRICS`). Gauges carry run-level rates,
+        counters event totals, histograms per-request latency
+        distributions — the one snapshot `serve.py --metrics-json` and
+        the benchmarks' ``BENCH_serving.json`` both serialize."""
+        mx = self.metrics
+        if not mx:
+            return
+        mx.gauge("run.prefill_s").set(res.prefill_seconds)
+        mx.gauge("run.decode_s").set(res.decode_seconds)
+        mx.gauge("run.decode_tok_s").set(res.decode_tokens_per_s)
+        mx.gauge("run.occupancy").set(res.occupancy)
+        mx.gauge("run.ttft_mean_s").set(res.ttft_mean_s)
+        mx.gauge("run.compression_ratio").set(res.compression_ratio)
+        mx.gauge("cache.physical_bytes").set(res.cache_physical_bytes)
+        mx.gauge("cache.logical_bytes").set(res.cache_logical_bytes)
+        mx.counter("engine.decode_steps").inc(res.decode_steps)
+        mx.counter("engine.decode_tokens").inc(res.decode_tokens)
+        mx.counter("sched.preemptions").inc(sched.n_preemptions)
+        mx.counter("sched.retries").inc(sched.n_retries)
+        h_ttft = mx.histogram("request.ttft_s")
+        h_gap = mx.histogram("request.inter_token_s")
+        n_done = n_failed = 0
+        for r in res.results:
+            if r.finish_reason == "failed":
+                n_failed += 1
+                continue
+            n_done += 1
+            h_ttft.observe(r.ttft_s)
+            for gap in np.diff(r.token_times):
+                h_gap.observe(float(gap))
+        mx.counter("requests.completed").inc(n_done)
+        mx.counter("requests.failed").inc(n_failed)
+        if res.tier is not None:
+            mx.counter("tier.spills").inc(res.tier["n_spills"])
+            mx.counter("tier.fetches").inc(res.tier["n_fetches"])
+            mx.counter("tier.bytes_moved").inc(res.tier["bytes_moved"])
+            mx.gauge("tier.fetch_stall_s").set(res.tier["fetch_stall_s"])
+        if self.pressure is not None:
+            mx.counter("pressure.degrades").inc(
+                self.pressure.stats["degrades"])
+            mx.counter("pressure.blocks_dropped").inc(
+                self.pressure.stats["blocks_dropped"])
+        if res.prefix is not None:
+            mx.counter("prefix.warm_hits").inc(res.prefix["warm_hits"])
+            mx.counter("prefix.cold").inc(res.prefix["cold"])
+            mx.counter("prefix.near_hits").inc(res.prefix["near_hits"])
+            mx.counter("prefix.cow_copies").inc(res.prefix["cow_copies"])
+        if res.spec is not None:
+            mx.gauge("spec.accept_rate").set(res.spec.acceptance_rate)
+            mx.counter("spec.rounds").inc(res.spec.rounds)
 
     # ------------------------------------------------------------------
     # Chunked admission (shared by the plain continuous loop and the
@@ -874,6 +941,19 @@ class Engine:
     # bounded step — a prompt segment, the compress, or the insert —
     # per decode step, so a long prompt never stalls resident decode.
     # ------------------------------------------------------------------
+    def _start_admission_timed(self, sched):
+        """Start a chunked admission under the prefill timing seam.
+        Both continuous loops route through this: the start step can do
+        real prefill work (a scratch restore, or a full CacheBlend
+        forward for a near-hit), so its seconds belong to ``prefill_s``
+        — before this seam the plain loop silently billed blend
+        admissions to decode while the speculative loop (which never
+        blends) did not, so the two loops' reported decode seconds were
+        not comparable. Returns (admission-or-None, seconds)."""
+        t0 = time.perf_counter()
+        adm = self._start_chunked_admission(sched)
+        return adm, time.perf_counter() - t0
+
     def _start_chunked_admission(self, sched) -> Optional[_ChunkedAdmission]:
         """Begin a chunked admission into the first free slot; heads
         that can never fit the pool fail immediately. Under prefix
@@ -954,20 +1034,24 @@ class Engine:
         exact prefix is too short to anchor the blend."""
         if m_exact < self.block_len:
             return None
-        t0 = time.perf_counter()
-        logits, (ks, vs), _ = cacheblend_lib.blend_prefill(
-            self.params, self.cfg, jnp.asarray(req.tokens[None]),
-            [0, m_exact], recompute_frac=self.near_hit)
-        pc = M.prefill_from_kv(
-            self.cfg, self.spec, ks, vs,
-            layer_budgets=jnp.asarray(self.layer_budgets), key=k1)
-        sched.begin_prefill(slot)
-        adm = _ChunkedAdmission(
-            slot=slot, st=None, segs=[], starts=[], key=k1,
-            total_blocks=total, next_i=1, last_logits=logits, pc=pc,
-            blend=True)
-        adm.secs = time.perf_counter() - t0
+        with self.trace.span("blend_prefill", tid=slot + 1,
+                             args=dict(uid=req.uid, m=m_exact)) as sp:
+            logits, (ks, vs), _ = cacheblend_lib.blend_prefill(
+                self.params, self.cfg, jnp.asarray(req.tokens[None]),
+                [0, m_exact], recompute_frac=self.near_hit)
+            pc = M.prefill_from_kv(
+                self.cfg, self.spec, ks, vs,
+                layer_budgets=jnp.asarray(self.layer_budgets), key=k1)
+            sched.begin_prefill(slot)
+            adm = _ChunkedAdmission(
+                slot=slot, st=None, segs=[], starts=[], key=k1,
+                total_blocks=total, next_i=1, last_logits=logits, pc=pc,
+                blend=True)
+        adm.secs = sp.elapsed
         self._share_state["stats"]["near_hits"] += 1
+        if self.trace:
+            self.trace.instant("prefix_near_hit", tid=slot + 1,
+                               args=dict(uid=req.uid))
         return adm
 
     def _restore_scratch(self, L: int, m: int, pieces) -> M.PrefillState:
@@ -1027,8 +1111,15 @@ class Engine:
             share["upto"][slot] = n_watch
         if adm.n_adopt > 0:
             share["stats"]["warm_hits"] += 1
+            if self.trace:
+                self.trace.instant("prefix_warm_hit", tid=slot + 1,
+                                   args=dict(uid=req.uid,
+                                             blocks=adm.n_adopt))
         elif not adm.blend:
             share["stats"]["cold"] += 1
+            if self.trace:
+                self.trace.instant("prefix_cold", tid=slot + 1,
+                                   args=dict(uid=req.uid))
 
     def _note_adm_stall(self, adm: _ChunkedAdmission, sched
                         ) -> Optional[_ChunkedAdmission]:
@@ -1063,7 +1154,10 @@ class Engine:
         goes ACTIVE. `run_all` drains everything back-to-back — used
         when no resident slot is decoding, so there is nothing to
         stall."""
-        t0 = time.perf_counter()
+        if adm is None:
+            return cache, None, None, 0.0
+        sp = self.trace.span("prefill_chunk", tid=adm.slot + 1)
+        sp.__enter__()
         first = None
         cur = adm
         # a block grant below can trigger the scheduler's reclaim, whose
@@ -1145,14 +1239,14 @@ class Engine:
             if not run_all:
                 break
         self._adm_live = None
-        dt = time.perf_counter() - t0
-        if cur is not None:
-            cur.secs += dt
-            if first is not None and self._share_state is not None:
-                stats = self._share_state["stats"]
-                warm = cur.restore_m > 0 or cur.blend
-                stats["warm_prefill_s" if warm else
-                      "cold_prefill_s"].append(cur.secs)
+        sp.__exit__()
+        dt = sp.elapsed
+        cur.secs += dt
+        if first is not None and self._share_state is not None:
+            stats = self._share_state["stats"]
+            warm = cur.restore_m > 0 or cur.blend
+            stats["warm_prefill_s" if warm else
+                  "cold_prefill_s"].append(cur.secs)
         return cache, adm, first, dt
 
     # ------------------------------------------------------------------
@@ -1201,14 +1295,17 @@ class Engine:
             # fresh free list per run (the cache is rebuilt below too);
             # kept on self for post-run inspection (peak usage)
             self.block_allocator = paging_lib.BlockAllocator(
-                self.pool_blocks, fault_plan=self.fault_plan)
+                self.pool_blocks, fault_plan=self.fault_plan,
+                tracer=self.trace)
             sched = Scheduler(buckets or self.buckets, self.slots,
                               allocator=self.block_allocator,
                               block_need=self._request_blocks,
-                              admission_order=self.admission_order)
+                              admission_order=self.admission_order,
+                              tracer=self.trace)
         else:
             sched = Scheduler(buckets or self.buckets, self.slots,
-                              admission_order=self.admission_order)
+                              admission_order=self.admission_order,
+                              tracer=self.trace)
         for r in requests:
             if not isinstance(r, Request):
                 r = Request(tokens=r, max_new=self.max_new)
@@ -1227,9 +1324,11 @@ class Engine:
         self._tier_stripped = 0
         if self.tiering:
             tier = paging_lib.HostTier(self.host_blocks,
-                                       fault_plan=self.fault_plan)
+                                       fault_plan=self.fault_plan,
+                                       tracer=self.trace)
             from repro.serving.adaptive import PressureController
-            tier_ctrl = PressureController(high_water=0.85, low_water=0.60)
+            tier_ctrl = PressureController(high_water=0.85, low_water=0.60,
+                                           tracer=self.trace)
         self.host_tier = tier
         self.tier_pressure = tier_ctrl
 
@@ -1242,7 +1341,8 @@ class Engine:
         if self.paged and self.prefix_sharing:
             index = prefix_lib.PrefixIndex(
                 self.block_len,
-                align=math.lcm(self.block_len, MASS_GROUP))
+                align=math.lcm(self.block_len, MASS_GROUP),
+                tracer=self.trace)
             self._share_state = dict(
                 index=index,
                 mirror=spec_lib.CacheMirror(
@@ -1541,9 +1641,10 @@ class Engine:
                     if head is not None and head.tier_ticket is not None:
                         self._drop_ticket(head)
                 return
-            t0 = time.perf_counter()
-            ok = try_restore(i, req)
-            prefill_s += time.perf_counter() - t0
+            with self.trace.span("restore", tid=i + 1,
+                                 args=dict(uid=req.uid)) as sp:
+                ok = try_restore(i, req)
+            prefill_s += sp.elapsed
             if ok:
                 tok_in = tok_in.at[i].set(int(next_tok[i]))
             else:
@@ -1649,31 +1750,34 @@ class Engine:
                     # ticketed continuation: land the snapshot into the
                     # grant instead of re-prefilling; a refused fetch
                     # falls through to recompute-on-resume below
-                    t0 = time.perf_counter()
-                    ok = try_restore(slot_idx, req)
-                    prefill_s += time.perf_counter() - t0
+                    with self.trace.span("restore", tid=slot_idx + 1,
+                                         args=dict(uid=req.uid)) as sp:
+                        ok = try_restore(slot_idx, req)
+                    prefill_s += sp.elapsed
                     if ok:
                         return True
                 self.key, k1 = jax.random.split(self.key)
-                t0 = time.perf_counter()
-                logits, pc = self._prefill(
-                    self.params, {"tokens": jnp.asarray(req.tokens[None])},
-                    lb, k1)
-                tok = self.sampler(logits, k1)
-                if self.paged:
-                    ids = np.full(self.n_max_blocks, -1, np.int32)
-                    got = sched.slot_blocks(slot_idx)
-                    ids[:len(got)] = got
-                    cache = self._insert(cache, pc, jnp.int32(slot_idx),
-                                         jnp.asarray(ids), jnp.int32(0))
-                else:
-                    cache = self._insert(cache, pc, jnp.int32(slot_idx))
-                clean_slots.discard(slot_idx)
-                if lazy_mirror is not None:
-                    lazy_mirror.admit(slot_idx, len(req.tokens))
-                # kvlint: ok(host-sync: admission prefill's first token — once per admitted request, not per decode step)
-                tok_i = int(jax.device_get(tok)[0])
-                prefill_s += time.perf_counter() - t0
+                with self.trace.span("prefill", tid=slot_idx + 1,
+                                     args=dict(uid=req.uid)) as sp:
+                    logits, pc = self._prefill(
+                        self.params,
+                        {"tokens": jnp.asarray(req.tokens[None])},
+                        lb, k1)
+                    tok = self.sampler(logits, k1)
+                    if self.paged:
+                        ids = np.full(self.n_max_blocks, -1, np.int32)
+                        got = sched.slot_blocks(slot_idx)
+                        ids[:len(got)] = got
+                        cache = self._insert(cache, pc, jnp.int32(slot_idx),
+                                             jnp.asarray(ids), jnp.int32(0))
+                    else:
+                        cache = self._insert(cache, pc, jnp.int32(slot_idx))
+                    clean_slots.discard(slot_idx)
+                    if lazy_mirror is not None:
+                        lazy_mirror.admit(slot_idx, len(req.tokens))
+                    # kvlint: ok(host-sync: admission prefill's first token — once per admitted request, not per decode step)
+                    tok_i = int(jax.device_get(tok)[0])
+                prefill_s += sp.elapsed
                 if req.emitted_prefix:
                     # recompute-on-resume: the prefill covered the
                     # prompt; the committed tokens now *replay* through
@@ -1734,9 +1838,18 @@ class Engine:
         # because dispatching ahead consumes self.key splits in a
         # different sequence around mid-run admissions.
         tok_in = jnp.asarray(next_tok)          # [slots] device-side
+        # per-iteration telemetry: pre-bound instruments, one truthiness
+        # check per loop iteration, host-side mirrors only (allocator
+        # free list, scheduler active set — never a device value)
+        trace = self.trace
+        mx = self.metrics
+        g_free = mx.gauge("pool.free_frac")
+        g_active = mx.gauge("slots.active")
+        c_iters = mx.counter("engine.loop_iters")
         loop_t0 = time.perf_counter()
         prefill_at_loop = prefill_s
         while True:
+            it_t0 = time.perf_counter()
             if tier is not None:
                 # pull last iteration's dispatched spill copies to host
                 # (decode has run behind them — no hot-path sync)
@@ -1749,7 +1862,8 @@ class Engine:
                         admit_ticket_head()
                     else:
                         promote_for_head()
-                adm = self._start_chunked_admission(sched)
+                adm, dt = self._start_admission_timed(sched)
+                prefill_s += dt
             if preempt_due:
                 # forced preemption injection — the deterministic
                 # preempt-at-step-k hook the bit-identity tests drive
@@ -1781,6 +1895,8 @@ class Engine:
             if (self.audit_every and step_idx
                     and step_idx % self.audit_every == 0):
                 self._run_audit(sched, cache)
+                if trace:
+                    trace.instant("audit", args=dict(step=step_idx))
             if lazy_mirror is not None and active:
                 # lazy growth: every slot joining this dispatch must have
                 # table coverage for the row the dispatch appends. A slot
@@ -1912,6 +2028,10 @@ class Engine:
                                 cache, jnp.int32(s), jnp.int32(0),
                                 jnp.asarray(new, jnp.int32))
                             share["stats"]["cow_copies"] += 1
+                            if trace:
+                                trace.instant(
+                                    "cow", tid=s + 1,
+                                    args=dict(blocks=len(new)))
                         share["upto"].pop(s)
                         continue
                     # pool can't cover the un-share: retire "oom" (same
@@ -2004,6 +2124,19 @@ class Engine:
                 else:
                     tok_in = tok_in.at[slot0].set(ftok[0])
                     first_pending = (slot0, ftok)
+            n_active = len(active)
+            if mx:
+                g_active.set(n_active)
+                c_iters.inc()
+                if self.paged:
+                    g_free.set(self.block_allocator.available
+                               / max(self.pool_blocks, 1))
+            if trace:
+                trace.complete("step", it_t0, args=dict(active=n_active))
+                if self.paged:
+                    trace.counter("pool", dict(
+                        free=self.block_allocator.available,
+                        active=n_active))
             if (pending is None and new_pending is None and adm is None
                     and first_pending is None and not sched.pending):
                 break

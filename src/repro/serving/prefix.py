@@ -40,6 +40,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 
 class _Node:
     """One full block of an indexed prefix: trie edge key = the block's
@@ -69,10 +71,11 @@ class PrefixIndex:
     resume at mass-group-aligned offsets)."""
 
     def __init__(self, block_len: int, *, align: int = 1,
-                 max_recent: int = 16):
+                 max_recent: int = 16, tracer=None):
         if block_len < 1:
             raise ValueError(f"need block_len >= 1, got {block_len}")
         self.bl = block_len
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self.align = max(int(align), 1)
         self._children: Dict[tuple, _Node] = {}      # root's children
         self._nodes: Dict[int, _Node] = {}           # block id -> node
@@ -183,6 +186,8 @@ class PrefixIndex:
             del self._nodes[victim.block_id]
             out.append(victim.block_id)
         self.evicted += len(out)
+        if out and self.trace:
+            self.trace.instant("prefix_evict", args=dict(blocks=len(out)))
         return out
 
     # ---- host tier (demote instead of evict) -----------------------------
@@ -211,6 +216,8 @@ class PrefixIndex:
         node.host = handle
         self._host[handle] = node
         self.demoted += 1
+        if self.trace:
+            self.trace.instant("prefix_demote", args=dict(handle=handle))
 
     def promote(self, node: _Node, block_id: int) -> None:
         """Host -> device: the node's bytes were fetched into freshly
@@ -222,6 +229,8 @@ class PrefixIndex:
         node.block_id = int(block_id)
         self._nodes[node.block_id] = node
         self.promoted += 1
+        if self.trace:
+            self.trace.instant("prefix_promote", args=dict(block=node.block_id))
 
     def host_handles(self) -> List[int]:
         """Every host-tier handle the index holds (audit input)."""

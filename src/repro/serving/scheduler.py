@@ -22,6 +22,8 @@ from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 _uid_counter = itertools.count()
 
 
@@ -163,7 +165,8 @@ class Scheduler:
                  clock: Callable[[], float] = time.perf_counter,
                  allocator=None,
                  block_need: Optional[Callable[[Request], int]] = None,
-                 admission_order: str = "fifo"):
+                 admission_order: str = "fifo",
+                 tracer=None):
         buckets = tuple(sorted({int(b) for b in buckets}))
         if not buckets or buckets[0] <= 0:
             raise ValueError(f"need positive prompt buckets, got {buckets}")
@@ -179,6 +182,11 @@ class Scheduler:
         self._block_need = block_need
         self._clock = clock
         self.admission_order = admission_order
+        # lifecycle tracing (repro.obs): the scheduler owns every
+        # request timestamp, so it emits the request spans — submit /
+        # admit instants, the queued + request complete events at
+        # retire, preempt / fail instants. Host values only.
+        self.trace = tracer if tracer is not None else NULL_TRACER
         # optional pressure valve: called with the block shortfall when an
         # allocation fails, expected to drop lingering references (prefix-
         # index LRU eviction) so a retry can succeed
@@ -231,6 +239,8 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.bucket_for(len(req.tokens))    # validate up front
         self._queue.append((req, self._clock()))
+        if self.trace:
+            self.trace.instant("submit", args=dict(uid=req.uid))
 
     @property
     def pending(self) -> int:
@@ -282,6 +292,10 @@ class Scheduler:
         self._slots[slot_idx] = _SlotState(
             req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
             blocks=blocks, seq=next(self._admit_seq))
+        if self.trace:
+            self.trace.instant("admit", tid=slot_idx + 1,
+                               args=dict(uid=req.uid, slot=slot_idx,
+                                         blocks=len(blocks)))
         return req
 
     def slot_blocks(self, slot_idx: int) -> List[int]:
@@ -315,6 +329,10 @@ class Scheduler:
         self._slots[slot_idx] = _SlotState(
             req, self.bucket_for(len(req.tokens)), t_submit, self._clock(),
             prefilling=True, seq=next(self._admit_seq))
+        if self.trace:
+            self.trace.instant("admit", tid=slot_idx + 1,
+                               args=dict(uid=req.uid, slot=slot_idx,
+                                         chunked=True))
         return req
 
     def grant_blocks(self, slot_idx: int, n: int) -> bool:
@@ -436,6 +454,9 @@ class Scheduler:
         now = self._clock()
         if not st.emitted:
             st.t_first = now
+            if self.trace and not st.req.emitted_prefix:
+                self.trace.instant("first_token", tid=slot_idx + 1,
+                                   args=dict(uid=st.req.uid))
         st.emitted.append(token)
         st.token_times.append(now)
         if st.req.eos_id is not None and token == st.req.eos_id:
@@ -479,6 +500,19 @@ class Scheduler:
             fetch_stall_s=req.fetch_stall_s + st.fetch_stall_s,
         )
         self.results.append(res)
+        if self.trace:
+            # the request's slot residency as one complete span, plus
+            # its queue wait — timestamps are this scheduler's clock
+            # (perf_counter by default, the tracer's axis)
+            if st.t_admit > st.t_submit:
+                self.trace.complete("queued", st.t_submit, st.t_admit,
+                                    tid=slot_idx + 1,
+                                    args=dict(uid=req.uid))
+            self.trace.complete(
+                "request", st.t_admit, now, tid=slot_idx + 1,
+                args=dict(uid=req.uid, reason=reason,
+                          tokens=len(tokens),
+                          preemptions=req.n_preemptions))
         return res
 
     # ---- preemption (overload ladder: spill -> degrade -> preempt -> fail)
@@ -513,6 +547,10 @@ class Scheduler:
         req.fetch_stall_s += st.fetch_stall_s
         self.n_preemptions += 1
         self._queue.appendleft((req, st.t_submit))
+        if self.trace:
+            self.trace.instant("preempt", tid=slot_idx + 1,
+                               args=dict(uid=req.uid, slot=slot_idx,
+                                         emitted=len(req.emitted_prefix)))
         return req
 
     def preempt_victim(self, exclude: Sequence[int] = ()) -> Optional[int]:
@@ -622,6 +660,9 @@ class Scheduler:
             fetch_stall_s=req.fetch_stall_s,
         )
         self.results.append(res)
+        if self.trace:
+            self.trace.instant("request_failed",
+                               args=dict(uid=req.uid, reason=reason))
         return res
 
     # ---- fleet accounting ------------------------------------------------

@@ -305,14 +305,16 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
 
     if eng.paged:
         eng.block_allocator = paging_lib.BlockAllocator(
-            eng.pool_blocks, fault_plan=eng.fault_plan)
+            eng.pool_blocks, fault_plan=eng.fault_plan, tracer=eng.trace)
         sched = Scheduler(buckets or eng.buckets, eng.slots,
                           allocator=eng.block_allocator,
                           block_need=eng._request_blocks,
-                          admission_order=eng.admission_order)
+                          admission_order=eng.admission_order,
+                          tracer=eng.trace)
     else:
         sched = Scheduler(buckets or eng.buckets, eng.slots,
-                          admission_order=eng.admission_order)
+                          admission_order=eng.admission_order,
+                          tracer=eng.trace)
     for r in requests:
         if not isinstance(r, Request):
             r = Request(tokens=r, max_new=eng.max_new)
@@ -370,12 +372,13 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         """Prefill + insert the drafter's cache for a just-admitted
         request (the drafter sees the same prompt under its own spec)."""
         nonlocal dcache, prefill_s
-        t0 = time.perf_counter()
-        _, dpc = eng._draft_prefill(eng.params,
-                                    {"tokens": jnp.asarray(req.tokens[None])},
-                                    dlb, key)
-        dcache = eng._insert_draft(dcache, dpc, jnp.int32(slot))
-        prefill_s += time.perf_counter() - t0
+        with eng.trace.span("draft_prefill", tid=slot + 1,
+                            args=dict(uid=req.uid)) as sp:
+            _, dpc = eng._draft_prefill(
+                eng.params, {"tokens": jnp.asarray(req.tokens[None])},
+                dlb, key)
+            dcache = eng._insert_draft(dcache, dpc, jnp.int32(slot))
+        prefill_s += sp.elapsed
         dmirror.admit(slot, len(req.tokens))
         slot_state[slot] = _SlotSpecState(stream=list(map(int, req.tokens)),
                                           fed=len(req.tokens))
@@ -428,21 +431,23 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                     reset_slot(slot)
                 return False
             eng.key, k1 = jax.random.split(eng.key)
-            t0 = time.perf_counter()
-            logits, pc = eng._prefill(
-                eng.params, {"tokens": jnp.asarray(req.tokens[None])}, lb, k1)
-            tok = eng.sampler(logits, k1)
-            if eng.paged:
-                ids = np.full(eng.n_max_blocks, -1, np.int32)
-                got = sched.slot_blocks(slot)
-                ids[:len(got)] = got
-                cache = eng._insert(cache, pc, jnp.int32(slot),
-                                    jnp.asarray(ids), jnp.int32(0))
-            else:
-                cache = eng._insert(cache, pc, jnp.int32(slot))
-            clean.discard(slot)
-            tmirror.admit(slot, len(req.tokens))
-            prefill_s += time.perf_counter() - t0
+            with eng.trace.span("prefill", tid=slot + 1,
+                                args=dict(uid=req.uid)) as sp:
+                logits, pc = eng._prefill(
+                    eng.params, {"tokens": jnp.asarray(req.tokens[None])},
+                    lb, k1)
+                tok = eng.sampler(logits, k1)
+                if eng.paged:
+                    ids = np.full(eng.n_max_blocks, -1, np.int32)
+                    got = sched.slot_blocks(slot)
+                    ids[:len(got)] = got
+                    cache = eng._insert(cache, pc, jnp.int32(slot),
+                                        jnp.asarray(ids), jnp.int32(0))
+                else:
+                    cache = eng._insert(cache, pc, jnp.int32(slot))
+                clean.discard(slot)
+                tmirror.admit(slot, len(req.tokens))
+            prefill_s += sp.elapsed
             admit_draft(slot, req, k1)
             if req.emitted_prefix:
                 # preempted continuation: the prompt's KV was just
@@ -503,11 +508,25 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         for i in range(eng.slots):
             admit_into(i)
 
+    # per-round telemetry: pre-bound instruments, host mirrors only
+    trace = eng.trace
+    mx = eng.metrics
+    g_free = mx.gauge("pool.free_frac")
+    g_active = mx.gauge("slots.active")
+    c_iters = mx.counter("engine.loop_iters")
     loop_t0 = time.perf_counter()
     prefill_at_loop = prefill_s
     while True:
+        it_t0 = time.perf_counter()
+        if mx:
+            g_active.set(len(sched.active_slots()))
+            c_iters.inc()
+            if eng.paged:
+                g_free.set(eng.block_allocator.available
+                           / max(eng.pool_blocks, 1))
         if eng.chunked_prefill and adm is None:
-            adm = eng._start_chunked_admission(sched)
+            adm, dt0 = eng._start_admission_timed(sched)
+            prefill_s += dt0
         active = sched.active_slots()
         if eng.chunked_prefill and adm is not None:
             cache, adm, first, dt = eng._advance_chunked_admission(
@@ -560,6 +579,8 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
         if (eng.audit_every and stats.rounds
                 and stats.rounds % eng.audit_every == 0):
             eng._run_audit(sched, cache)
+            if trace:
+                trace.instant("audit", args=dict(round=stats.rounds))
         if not active:
             if sched.pending or adm is not None:
                 if not eng.chunked_prefill:
@@ -694,6 +715,9 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
                                          jnp.asarray(feed)[:, None], kp)
             sched.note_decode_step()
             stats.rounds += 1
+            if trace:
+                trace.complete("round", it_t0,
+                               args=dict(kind="plain", active=len(active)))
             # kvlint: ok(host-sync: plain-decode fallback round — the token builds the next feed host-side)
             toks = np.asarray(tok_dev)
             for s in active:
@@ -724,6 +748,9 @@ def generate_continuous_spec(eng, requests: Sequence[Union[Request,
             eng.params, cache, jnp.asarray(tokens), jnp.asarray(valid), kv)
         sched.note_decode_step()
         stats.rounds += 1
+        if trace:
+            trace.complete("round", it_t0,
+                           args=dict(kind="verify", active=len(active)))
         # kvlint: ok(host-sync: verify results drive host-side acceptance mirroring — the round is synchronous by design)
         y = np.asarray(y_dev)
         # kvlint: ok(host-sync: verify results drive host-side acceptance mirroring — the round is synchronous by design)

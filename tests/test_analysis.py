@@ -165,6 +165,55 @@ def test_host_sync_cast_only_on_device_tagged_names():
     assert "int() on device value" in hits[0].message
 
 
+def test_host_sync_obs_emit_flags_device_arg():
+    # zero-sync telemetry contract: a device value smuggled into a
+    # tracer emit inside the decode loop is a fetch that only happens
+    # when tracing is on — flagged whether passed bare or coerced
+    src = dedent("""
+        def hot(eng, trace, steps):
+            for t in range(steps):
+                tok = eng._decode(t)
+                trace.instant("token", args=dict(tok=int(tok[0])))
+            return tok
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    hits = violations(fs, "host-sync")
+    assert len(hits) == 1
+    assert "emit args" in hits[0].message and "'tok'" in hits[0].message
+
+
+def test_host_sync_obs_emit_host_mirrors_pass():
+    # host mirrors are the sanctioned emit payload: literal-rooted
+    # counters, len() counts, and attribute reads off a device-tagged
+    # object (host-side bookkeeping fields, not the array itself)
+    src = dedent("""
+        def hot(eng, trace, steps):
+            adm = eng._admit(0)
+            for t in range(steps):
+                tok = eng._decode(t)
+                n = len(steps)
+                trace.complete("step", t, args=dict(
+                    slot=adm.slot, active=n))
+            return tok
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    assert not by_rule(fs, "host-sync")
+
+
+def test_host_sync_obs_emit_receiver_hint_scopes_rule():
+    # same method name on a non-tracer receiver is not an emit — the
+    # receiver must mention the configured hint ("trace")
+    src = dedent("""
+        def hot(eng, ui, steps):
+            for t in range(steps):
+                tok = eng._decode(t)
+                ui.instant("token", args=dict(tok=tok))
+            return tok
+    """)
+    fs = analyze_source(src, config=HOT_CFG)
+    assert not by_rule(fs, "host-sync")
+
+
 def test_host_sync_suppression_standalone_comment():
     src = dedent("""
         def hot(eng, steps):
